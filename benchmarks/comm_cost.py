@@ -1,0 +1,28 @@
+"""Fig 3a/3b reproduction: total and per-node communication of the DA
+protocol vs the non-layout (NL) baseline across network sizes."""
+from __future__ import annotations
+
+import math
+import time
+
+from repro.core.baseline_nl import run_nl
+from repro.core.protocol import run_da
+
+
+def run(full: bool = False) -> None:
+    sizes = (64, 128, 256, 512) if not full else (64, 128, 256, 512, 1024)
+    for n in sizes:
+        t0 = time.time()
+        da = run_da(n, tau=0.3, key_bits=32, seed=1)
+        dt = (time.time() - t0) * 1e6
+        nl = run_nl(n, crypto_cutoff=32)
+        ratio = nl.stats.bytes / da.stats.bytes
+        print(f"comm_cost_DA_n{n},{dt:.0f},"
+              f"total_MB={da.stats.bytes/1e6:.2f};per_node_KB="
+              f"{da.stats.bytes/n/1e3:.1f};exact={da.exact}")
+        print(f"comm_cost_NL_n{n},0,"
+              f"total_MB={nl.stats.bytes/1e6:.2f};per_node_KB="
+              f"{nl.stats.bytes/n/1e3:.1f};NL_over_DA={ratio:.1f}x")
+        # Lemma 1 constant: bytes / (n log^3 n)
+        c = da.stats.bytes / (n * math.log2(n) ** 3)
+        print(f"comm_cost_lemma1_n{n},0,bytes_per_nlog3n={c:.1f}")

@@ -1,0 +1,53 @@
+"""Pallas kernel microbenchmarks (interpret mode on CPU: correctness +
+relative cost only; real perf numbers require TPU hardware)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention import attention_ref, flash_attention_op
+from repro.kernels.secure_agg import mask_encrypt_op, vote_combine_op
+from repro.kernels.ssd import ssd_op, ssd_ref
+
+
+def _time(f, *a, reps=3):
+    f(*a)
+    jax.block_until_ready(f(*a))
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(f(*a))
+    return (time.time() - t0) / reps * 1e6
+
+
+def run(full: bool = False) -> None:
+    rng = np.random.default_rng(0)
+    B, S, H, K, hd = 1, 512, 4, 2, 64
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, S, K, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, S, K, hd)).astype(np.float32))
+    us = _time(lambda *a: flash_attention_op(*a, causal=True), q, k, v)
+    ref_us = _time(lambda *a: attention_ref(*a, causal=True), q, k, v)
+    print(f"kernel_flash_attn_S{S},{us:.0f},interp_vs_ref={us/ref_us:.1f}x")
+
+    BH, P, N = 4, 64, 64
+    x = jnp.asarray(rng.normal(size=(BH, S, P)).astype(np.float32))
+    dt = jnp.asarray(np.abs(rng.normal(size=(BH, S))).astype(np.float32) * .1)
+    a = jnp.asarray(-np.abs(rng.normal(size=(BH,))).astype(np.float32))
+    Bm = jnp.asarray(rng.normal(size=(BH, S, N)).astype(np.float32))
+    Cm = jnp.asarray(rng.normal(size=(BH, S, N)).astype(np.float32))
+    us = _time(lambda *args: ssd_op(*args, chunk=128)[0], x, dt, a, Bm, Cm)
+    print(f"kernel_ssd_S{S},{us:.0f},chunk=128")
+
+    T = 1 << 16
+    xx = jnp.asarray(rng.normal(size=(T,)).astype(np.float32))
+    us = _time(lambda z: mask_encrypt_op(z, 3, 42, 2.0 ** 20, 1.0), xx)
+    print(f"kernel_mask_encrypt_T{T},{us:.0f},fused_quant_mask")
+
+    copies = jnp.asarray(rng.integers(0, 2 ** 32, size=(3, T),
+                                      dtype=np.uint32))
+    acc = jnp.asarray(rng.integers(0, 2 ** 32, size=(T,), dtype=np.uint32))
+    us = _time(vote_combine_op, copies, acc)
+    print(f"kernel_vote_combine_r3_T{T},{us:.0f},median_network")

@@ -1,0 +1,18 @@
+"""Theorem 1 table: empirical vs predicted surround probability across the
+fan-out regimes (the phase transition at w+ = Θ(log n))."""
+from __future__ import annotations
+
+import time
+
+from repro.core.lower_bound import phase_table
+
+
+def run(full: bool = False) -> None:
+    ns = (128, 512, 2048) if not full else (128, 512, 2048, 8192)
+    t0 = time.time()
+    rows = phase_table(eps=0.25, trials=60 if not full else 200, ns=ns)
+    dt = (time.time() - t0) * 1e6 / len(rows)
+    for r in rows:
+        print(f"lower_bound_n{r['n']}_{r['regime'].replace(' ', '')},"
+              f"{dt:.0f},empirical={r['empirical']:.3f};"
+              f"predicted={r['predicted']:.3f};w={r['w_plus']}")

@@ -1,0 +1,40 @@
+"""Benchmark registry — one entry per paper table/figure + framework
+benches.  Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run             # quick set
+    PYTHONPATH=src python -m benchmarks.run --full      # everything
+    PYTHONPATH=src python -m benchmarks.run --only comm_cost
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only")
+    args = ap.parse_args()
+
+    from benchmarks import (comm_cost, crypto_breakdown, kernels,
+                            lower_bound, secure_allreduce)
+    table = {
+        "comm_cost": comm_cost.run,                # paper Fig 3a/3b
+        "crypto_breakdown": crypto_breakdown.run,  # paper Fig 3c/3d
+        "lower_bound": lower_bound.run,            # paper Thm 1
+        "secure_allreduce": secure_allreduce.run,  # tensor-scale schedules
+        "kernels": kernels.run,                    # pallas kernel microbench
+    }
+    names = [args.only] if args.only else list(table)
+    print("name,us_per_call,derived")
+    ok = True
+    for n in names:
+        try:
+            table[n](full=args.full)
+        except Exception as e:  # pragma: no cover
+            ok = False
+            print(f"{n},ERROR,{e!r}")
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

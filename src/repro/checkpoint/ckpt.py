@@ -1,0 +1,122 @@
+"""Sharded checkpointing with async write, integrity manifest, restart and
+cross-mesh (elastic) restore.
+
+Layout:  <dir>/step_<N>/
+    manifest.json        {step, tree structure, leaf shapes/dtypes, hashes}
+    leaf_<i>.npy         one file per pytree leaf (host-gathered)
+
+Fault-tolerance contract (tested in tests/test_checkpoint.py):
+  * write is atomic (tmp dir + rename) — a crash mid-write never corrupts
+    the latest complete checkpoint;
+  * ``latest_step``/``restore`` pick the newest complete checkpoint;
+  * restore works onto a *different* mesh/sharding (elastic re-mesh: the
+    host arrays are resharded by ``jax.device_put`` against new shardings);
+  * integrity: blake2 hash per leaf, verified on load.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_NATIVE_NUMPY = {"float64", "float32", "float16", "int64", "int32", "int16",
+                 "int8", "uint64", "uint32", "uint16", "uint8", "bool"}
+
+
+def _decode_leaf(arr: np.ndarray, dtype_str: str) -> np.ndarray:
+    if dtype_str in _NATIVE_NUMPY or str(arr.dtype) == dtype_str:
+        return arr
+    import ml_dtypes
+    return arr.view(np.dtype(getattr(ml_dtypes, dtype_str)))
+
+
+def _leaf_paths(tree: Any) -> list[str]:
+    paths = []
+    for kp, _ in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        paths.append(jax.tree_util.keystr(kp))
+    return paths
+
+
+def save(ckpt_dir: str, step: int, tree: Any, *, asynchronous: bool = False,
+         ) -> Optional[threading.Thread]:
+    """Host-gathers every leaf and writes atomically."""
+    leaves, treedef = jax.tree.flatten(tree)
+    host_leaves = [np.asarray(l) for l in leaves]
+    names = _leaf_paths(tree)
+
+    def _write():
+        final = os.path.join(ckpt_dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {"step": step, "leaves": []}
+        for i, (arr, name) in enumerate(zip(host_leaves, names)):
+            fn = f"leaf_{i}.npy"
+            dt = str(arr.dtype)
+            to_save = arr
+            if dt not in _NATIVE_NUMPY:  # e.g. bfloat16: store raw bits
+                to_save = arr.view(np.uint16 if arr.dtype.itemsize == 2
+                                   else np.uint8)
+            np.save(os.path.join(tmp, fn), to_save)
+            manifest["leaves"].append({
+                "file": fn, "name": name, "shape": list(arr.shape),
+                "dtype": dt,
+                "hash": hashlib.blake2b(arr.tobytes(), digest_size=16).hexdigest(),
+            })
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+
+    if asynchronous:
+        th = threading.Thread(target=_write, daemon=True)
+        th.start()
+        return th
+    _write()
+    return None
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and not d.endswith(".tmp"):
+            if os.path.exists(os.path.join(ckpt_dir, d, "manifest.json")):
+                steps.append(int(d.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like: Any,
+            shardings: Optional[Any] = None, *, verify: bool = True) -> Any:
+    """Restore into the structure of ``like``; optionally place each leaf
+    with the given shardings tree (elastic re-mesh restore)."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves, treedef = jax.tree.flatten(like)
+    assert len(leaves) == len(manifest["leaves"]), \
+        f"leaf count mismatch: {len(leaves)} vs {len(manifest['leaves'])}"
+    out = []
+    shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
+                    else [None] * len(leaves))
+    # tree.leaves on a shardings pytree of NamedSharding keeps structure
+    if shardings is not None and len(shard_leaves) != len(leaves):
+        shard_leaves = [None] * len(leaves)
+    for i, (meta, ref) in enumerate(zip(manifest["leaves"], leaves)):
+        arr = _decode_leaf(np.load(os.path.join(d, meta["file"])),
+                           meta["dtype"])
+        if verify:
+            h = hashlib.blake2b(arr.tobytes(), digest_size=16).hexdigest()
+            assert h == meta["hash"], f"checkpoint corruption in {meta['name']}"
+        if shard_leaves[i] is not None:
+            out.append(jax.device_put(arr, shard_leaves[i]))
+        else:
+            out.append(jax.numpy.asarray(arr))
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,3 @@
+from repro.configs.base import (SHAPES, ModelConfig, ShapeConfig, get_config,
+                                get_smoke_config, list_archs,
+                                supported_shapes)

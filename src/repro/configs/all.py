@@ -1,0 +1,10 @@
+"""Import every architecture config to populate the registry."""
+from repro.configs import (command_r_35b, hubert_xlarge, jamba_v01_52b,
+                           llama32_vision_90b, llama4_maverick, mamba2_370m,
+                           olmo_1b, qwen15_110b, qwen3_1p7b, qwen3_moe_235b)
+
+__all__ = [
+    "hubert_xlarge", "qwen3_moe_235b", "llama4_maverick", "command_r_35b",
+    "qwen3_1p7b", "qwen15_110b", "olmo_1b", "jamba_v01_52b",
+    "llama32_vision_90b", "mamba2_370m",
+]

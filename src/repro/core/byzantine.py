@@ -1,0 +1,70 @@
+"""Majority voting + byzantine fault injection.
+
+The paper's inter-cluster rule: a receiver accepts the value sent by a
+majority of the previous cluster's members.  Honest members hold
+bitwise-identical partial aggregates (uint32), so the element-wise MEDIAN
+of an odd number of copies equals the honest value whenever a strict
+majority of copies are honest — the median slot must fall inside the
+honest (identical) group.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def majority_vote(copies: jax.Array) -> jax.Array:
+    """copies: (r, ...) uint32, r odd -> element-wise majority value."""
+    r = copies.shape[0]
+    assert r % 2 == 1, "vote redundancy must be odd"
+    if r == 1:
+        return copies[0]
+    return jnp.sort(copies, axis=0)[r // 2]
+
+
+def digest(x: jax.Array, n_words: int = 16) -> jax.Array:
+    """Keyed mixing checksum of a uint32 tensor -> (n_words,) uint32.
+
+    Block-folded multiply-xor mix; collision-resistant against the injected
+    (non-adaptive) corruption model used in tests — see DESIGN §2.3 for the
+    trust-model caveat.
+    """
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % n_words
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.uint32)])
+    blocks = flat.reshape(-1, n_words)
+    idx = jnp.arange(blocks.shape[0], dtype=jnp.uint32)[:, None]
+    mixed = (blocks ^ (idx * jnp.uint32(0x9E3779B9))) * jnp.uint32(0x85EBCA6B)
+    mixed = mixed ^ (mixed >> 13)
+    return jnp.sum(mixed, axis=0, dtype=jnp.uint32)
+
+
+@dataclasses.dataclass(frozen=True)
+class ByzantineSpec:
+    """Static description of injected faults for tests/examples.
+
+    ``corrupt_ranks``: flat DP-node ids whose *outgoing* ring messages are
+    corrupted.  The honest-majority requirement is per receiving vote:
+    fewer than r/2 of the r copies a receiver sees may come from corrupt
+    members.
+    """
+    corrupt_ranks: tuple[int, ...] = ()
+    mode: str = "flip"  # flip | garbage | drop(-> zeros)
+
+    def corrupt(self, x: jax.Array, node_id) -> jax.Array:
+        if not self.corrupt_ranks:
+            return x
+        bad = jnp.zeros((), bool)
+        for rk in self.corrupt_ranks:
+            bad = bad | (node_id == rk)
+        if self.mode == "flip":
+            evil = x ^ jnp.uint32(0xFFFFFFFF)
+        elif self.mode == "garbage":
+            evil = x * jnp.uint32(2654435761) + jnp.uint32(0xDEADBEEF)
+        else:  # drop
+            evil = jnp.zeros_like(x)
+        return jnp.where(bad, evil, x)

@@ -1,0 +1,123 @@
+"""Fixed-point quantization + PRF masking over the ring Z_{2^32}.
+
+This is the TPU-native additively-homomorphic layer standing in for the
+paper's Paillier encryption at tensor scale (DESIGN §2.2/§5):
+
+  * values are quantized to signed fixed point and reinterpreted as uint32;
+  * addition mod 2^32 of masked values == masked addition (homomorphism);
+  * one-time pads are threefry PRF outputs keyed by (session key, node id);
+  * summation of <= n_nodes values stays within the headroom chosen by
+    ``scale_for`` so the wrapped signed sum is exact.
+
+Masking modes:
+  * "global"   — pad_i = PRF(key, i); partial aggregates stay masked along
+                 the whole ring (paper-faithful ciphertext flow); the final
+                 "threshold decryption" subtracts sum_i pad_i.
+  * "pairwise" — SecAgg-style pads that cancel within each cluster, so the
+                 cluster-local aggregate emerges unmasked (beyond-paper
+                 optimization: no unmask pass; cluster aggregates public).
+  * "none"     — quantization only (debug / ablation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MaskConfig:
+    n_nodes: int
+    clip: float = 1.0            # values are clipped to [-clip, clip]
+    guard_bits: int = 2          # extra headroom on top of ceil(log2(n))
+    mode: str = "global"         # global | pairwise | none
+    cluster_size: int = 4        # for pairwise cancellation groups
+    seed: int = 0x5EC0_A66
+
+    @property
+    def frac_bits(self) -> int:
+        head = max(1, math.ceil(math.log2(max(self.n_nodes, 2)))) + self.guard_bits
+        return 31 - head
+
+    @property
+    def scale(self) -> float:
+        return float(2 ** self.frac_bits) / self.clip
+
+
+def quantize(cfg: MaskConfig, x: jax.Array) -> jax.Array:
+    """float -> uint32 fixed point (deterministic round-to-nearest)."""
+    xf = jnp.clip(x.astype(jnp.float32), -cfg.clip, cfg.clip)
+    q = jnp.round(xf * cfg.scale).astype(jnp.int32)
+    return q.astype(jnp.uint32)
+
+
+def dequantize(cfg: MaskConfig, q: jax.Array) -> jax.Array:
+    return q.astype(jnp.int32).astype(jnp.float32) / cfg.scale
+
+
+def _pad(cfg: MaskConfig, node_id, shape) -> jax.Array:
+    key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), node_id)
+    return jax.random.bits(key, shape, dtype=jnp.uint32)
+
+
+def mask(cfg: MaskConfig, q: jax.Array, node_id) -> jax.Array:
+    """Apply this node's pad. ``node_id`` may be a traced scalar."""
+    if cfg.mode == "none":
+        return q
+    if cfg.mode == "global":
+        return q + _pad(cfg, node_id, q.shape)
+    if cfg.mode == "pairwise":
+        # pairwise-cancelling within the node's cluster:
+        #   mask_i = sum_{j in cluster, j>i} PRF(ij) - sum_{j<i} PRF(ij)
+        c = cfg.cluster_size
+        cluster = node_id // c
+        member = node_id % c
+        total = jnp.zeros(q.shape, jnp.uint32)
+        for other in range(c):
+            # seed for unordered pair {member, other} within this cluster
+            lo = jnp.minimum(member, other)
+            hi = jnp.maximum(member, other)
+            pair_id = cluster * c * c + lo * c + hi
+            p = _pad(cfg, pair_id + (1 << 20), q.shape)
+            sign = jnp.where(member < other, jnp.uint32(1), jnp.uint32(0))
+            contrib = jnp.where(sign == 1, p, jnp.uint32(0) - p)
+            contrib = jnp.where(member == other, jnp.uint32(0), contrib)
+            total = total + contrib
+        return q + total
+    raise ValueError(cfg.mode)
+
+
+def unmask_total(cfg: MaskConfig, agg: jax.Array) -> jax.Array:
+    """Remove the aggregate pad ("threshold decryption", DESIGN §2.2)."""
+    if cfg.mode in ("none", "pairwise"):
+        return agg  # pairwise pads cancel within clusters by construction
+    total_pad = jnp.zeros(agg.shape, jnp.uint32)
+    for i in range(cfg.n_nodes):
+        total_pad = total_pad + _pad(cfg, i, agg.shape)
+    return agg - total_pad
+
+
+# ---------------------------------------------------------------------------
+# Pure reference semantics (single device, node axis explicit) — the oracle
+# used by tests and by the distributed implementation's equivalence checks.
+# ---------------------------------------------------------------------------
+
+
+def reference_aggregate(cfg: MaskConfig, xs: jax.Array) -> jax.Array:
+    """xs: (n_nodes, ...) floats -> exact masked-sum-unmasked result."""
+    n = xs.shape[0]
+    assert n == cfg.n_nodes
+    qs = jax.vmap(lambda x, i: mask(cfg, quantize(cfg, x), i))(
+        xs, jnp.arange(n, dtype=jnp.int32))
+    agg = jnp.zeros(xs.shape[1:], jnp.uint32)
+    for i in range(n):
+        agg = agg + qs[i]
+    return dequantize(cfg, unmask_total(cfg, agg))
+
+
+def quantization_error_bound(cfg: MaskConfig) -> float:
+    """Worst-case |secure_sum - true_sum| per element."""
+    return 0.5 * cfg.n_nodes / cfg.scale

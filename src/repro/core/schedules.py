@@ -1,0 +1,101 @@
+"""Cluster-level aggregation schedules.
+
+A schedule is a list of *rounds*; each round says, for every cluster, which
+cluster it receives a partial aggregate from (or None).  Schedules operate
+at cluster granularity — the member-level fan-out (redundancy ``r`` copies
+for the majority vote) is applied by ``secure_allreduce`` when turning a
+round into ``lax.ppermute`` permutations.
+
+  * ring      — the paper's Step 3 executed as a concurrent rotation
+                (g-1 rounds; every cluster ends with the total).
+  * tree      — the paper's own suggested binary-tree variant: reduce up
+                (log2 g rounds) then broadcast down (log2 g rounds).
+  * butterfly — beyond-paper recursive doubling: log2 g rounds, all
+                clusters end with the total, same per-round volume as ring.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Round:
+    # recv_from[i] = cluster that cluster i receives from (None = idle)
+    recv_from: tuple[Optional[int], ...]
+    # how receivers combine the received value v with their accumulator a:
+    #   "add"        a + v       (tree reduce / butterfly: disjoint coverage)
+    #   "replace"    v           (tree broadcast-down)
+    #   "local_plus" local + v   (ring rotation: partial_i = L_i + partial_{i-1})
+    combine: str = "add"
+
+
+def ring_schedule(g: int) -> list[Round]:
+    return [Round(tuple((i - 1) % g for i in range(g)), combine="local_plus")
+            for _ in range(g - 1)]
+
+
+def tree_schedule(g: int) -> list[Round]:
+    assert g & (g - 1) == 0, "tree schedule requires power-of-two clusters"
+    k = int(math.log2(g))
+    rounds = []
+    # reduce: at level l, cluster i with i % 2^(l+1) == 2^l sends to i - 2^l
+    for l in range(k):
+        recv = [None] * g
+        for i in range(g):
+            src = i + (1 << l)
+            if i % (1 << (l + 1)) == 0 and src < g:
+                recv[i] = src
+        rounds.append(Round(tuple(recv), combine="add"))
+    # broadcast: reverse order, parent pushes the total back down
+    for l in reversed(range(k)):
+        recv = [None] * g
+        for i in range(g):
+            src = i - (1 << l)
+            if i % (1 << (l + 1)) == (1 << l) and src >= 0:
+                recv[i] = src
+        rounds.append(Round(tuple(recv), combine="replace"))
+    return rounds
+
+
+def butterfly_schedule(g: int) -> list[Round]:
+    assert g & (g - 1) == 0, "butterfly requires power-of-two clusters"
+    k = int(math.log2(g))
+    return [Round(tuple(i ^ (1 << l) for i in range(g)), combine="add")
+            for l in range(k)]
+
+
+SCHEDULES = {
+    "ring": ring_schedule,
+    "tree": tree_schedule,
+    "butterfly": butterfly_schedule,
+}
+
+
+def get_schedule(name: str, g: int) -> list[Round]:
+    if g == 1:
+        return []
+    return SCHEDULES[name](g)
+
+
+def schedule_cost(name: str, g: int, c: int, r: int, payload_bytes: int,
+                  digest: bool = False, digest_ratio: int = 1024) -> dict:
+    """Analytic per-step communication cost of the cluster phase (per node
+    and total), used by benchmarks and napkin math in EXPERIMENTS §Perf."""
+    rounds = get_schedule(name, g)
+    active_recv = sum(sum(1 for s in rnd.recv_from if s is not None)
+                      for rnd in rounds)  # cluster-level receives
+    if digest:
+        # each receiving member: 1 full payload + r digest copies to vote on
+        per_member = payload_bytes + r * (payload_bytes // digest_ratio)
+    else:
+        # each receiving member: r full redundant copies
+        per_member = r * payload_bytes
+    total = active_recv * c * per_member
+    return {
+        "rounds": len(rounds),
+        "cluster_receives": active_recv,
+        "bytes_total": total,
+        "bytes_per_node": total / (g * c),
+    }

@@ -1,0 +1,15 @@
+"""Jit'd public wrapper for the flash attention kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "interpret"))
+def flash_attention_op(q, k, v, causal: bool = True, window: int = 0,
+                       interpret: bool = True):
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           interpret=interpret)

@@ -1,0 +1,2 @@
+from repro.kernels.modmul.ops import modexp_ints, mont_exp_op, mont_mul_op
+from repro.kernels.modmul.ref import mont_mul_int, mont_mul_ref

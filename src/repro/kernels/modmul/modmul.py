@@ -1,0 +1,112 @@
+"""Batched Montgomery modular multiplication Pallas TPU kernel.
+
+The paper's own profile (Fig 3d) shows threshold decryption — modular
+exponentiation over n² — dominating compute.  A GPU/x86 bignum uses
+64-bit carries; the TPU adaptation (DESIGN §5) instead *vectorizes over
+the batch* (each vector lane processes one independent multiplication)
+with 16-bit limbs in uint32 lanes and **lazy carries**:
+
+  per outer step i (CIOS):
+    T += a_i * b        (split into lo/hi 16-bit halves; no carry chain)
+    m  = (T_0 & 0xffff) * n0inv & 0xffff
+    T += m * n          (lo/hi split again)
+    T  = shift right one limb, folding T_0's excess into the new T_0
+
+  slots stay < 2^25 (L=128: 4 adds of <2^17 per step, slots live <= L
+  steps), so a single final carry-propagation pass suffices.
+
+Grid: (batch_blocks,); block = (bb, L) uint32 in VMEM; the limb loop is a
+``fori_loop`` with vector ops over the batch lanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LIMB_BITS = 16
+MASK = np.uint32(0xFFFF)
+
+
+def _mont_mul_block(a, b, nl, n0inv, L: int):
+    """a, b: (bb, L) uint32 (16-bit limbs); nl: (1, L); n0inv scalar.
+    Returns Montgomery product (bb, L).  Pure jnp — usable both inside the
+    pallas kernel and as the vectorized reference implementation."""
+    bb = a.shape[0]
+    T = jnp.zeros((bb, L + 2), jnp.uint32)
+
+    def step(i, T):
+        ai = jax.lax.dynamic_slice(a, (0, i), (bb, 1))       # (bb,1)
+        p = ai * b                                            # (bb,L) lo*lo
+        plo, phi = p & MASK, p >> LIMB_BITS
+        T = T.at[:, :L].add(plo)
+        T = T.at[:, 1:L + 1].add(phi)
+        m = ((T[:, :1] & MASK) * n0inv) & MASK                # (bb,1)
+        q = m * nl                                            # (bb,L)
+        qlo, qhi = q & MASK, q >> LIMB_BITS
+        T = T.at[:, :L].add(qlo)
+        T = T.at[:, 1:L + 1].add(qhi)
+        # shift one limb right; fold T0's high bits into the next slot
+        carry0 = T[:, :1] >> LIMB_BITS                        # T0 lo16 == 0
+        T = jnp.concatenate([T[:, 1:], jnp.zeros((bb, 1), jnp.uint32)], axis=1)
+        T = T.at[:, :1].add(carry0)
+        return T
+
+    T = jax.lax.fori_loop(0, L, step, T)
+
+    # final carry propagation (serial over L+2 slots)
+    def prop(j, st):
+        T, carry = st
+        v = T[:, j] + carry
+        T = T.at[:, j].set(v & MASK)
+        return T, v >> LIMB_BITS
+
+    T, _ = jax.lax.fori_loop(0, L + 2, prop, (T, jnp.zeros((bb,), jnp.uint32)))
+    res = T[:, :L]
+    over = T[:, L]  # 0 or 1 after propagation (result < 2n)
+
+    # conditional subtract n when res >= n (or overflow limb set)
+    def sub_borrow(j, st):
+        d, borrow = st
+        v = res[:, j].astype(jnp.int32) - nl[0, j].astype(jnp.int32) - borrow
+        d = d.at[:, j].set(v.astype(jnp.uint32) & MASK)
+        return d, (v < 0).astype(jnp.int32)
+
+    d0 = jnp.zeros((bb, L), jnp.uint32)
+    d, borrow = jax.lax.fori_loop(0, L, sub_borrow,
+                                  (d0, jnp.zeros((bb,), jnp.int32)))
+    ge_n = (borrow == 0) | (over > 0)
+    return jnp.where(ge_n[:, None], d, res)
+
+
+def _kernel(a_ref, b_ref, n_ref, meta_ref, o_ref, *, L: int):
+    n0inv = meta_ref[0]
+    o_ref[...] = _mont_mul_block(a_ref[...], b_ref[...], n_ref[...],
+                                 n0inv, L)
+
+
+def mont_mul(a: jax.Array, b: jax.Array, n_limbs: jax.Array, n0inv,
+             *, block: int = 128, interpret: bool = True) -> jax.Array:
+    """a, b: (batch, L) uint32 Montgomery-domain operands."""
+    batch, L = a.shape
+    block = min(block, batch)
+    assert batch % block == 0
+    nl = n_limbs.reshape(1, L).astype(jnp.uint32)
+    meta = jnp.asarray([n0inv], jnp.uint32)
+    return pl.pallas_call(
+        functools.partial(_kernel, L=L),
+        grid=(batch // block,),
+        in_specs=[
+            pl.BlockSpec((block, L), lambda ib: (ib, 0)),
+            pl.BlockSpec((block, L), lambda ib: (ib, 0)),
+            pl.BlockSpec((1, L), lambda ib: (0, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((block, L), lambda ib: (ib, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, L), jnp.uint32),
+        interpret=interpret,
+    )(a.astype(jnp.uint32), b.astype(jnp.uint32), nl, meta)

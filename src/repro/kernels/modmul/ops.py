@@ -1,0 +1,59 @@
+"""Jit'd wrappers: Montgomery multiply + batched modular exponentiation
+(square-and-multiply over the kernel) — the threshold-decryption hot loop."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.crypto.limb import (LIMB_BITS, batch_to_limbs, from_limbs,
+                               montgomery_params, to_limbs, to_mont)
+from repro.kernels.modmul.modmul import mont_mul
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def mont_mul_op(a, b, n_limbs, n0inv, interpret: bool = True):
+    return mont_mul(a, b, n_limbs, jnp.asarray(n0inv, jnp.uint32),
+                    interpret=interpret)
+
+
+def mont_exp_op(a, e_bits, n_limbs, n0inv, one_mont, *,
+                interpret: bool = True):
+    """Batched left-to-right square-and-multiply.
+
+    a: (batch, L) Montgomery-domain bases; e_bits: (batch, nbits) uint32
+    exponent bits, MSB first (shared or per-lane); one_mont: (L,) = R mod n.
+    """
+    batch, L = a.shape
+    nbits = e_bits.shape[1]
+    acc = jnp.broadcast_to(one_mont.reshape(1, L), (batch, L)).astype(jnp.uint32)
+
+    def step(i, acc):
+        acc = mont_mul(acc, acc, n_limbs, n0inv, interpret=interpret)
+        mul = mont_mul(acc, a, n_limbs, n0inv, interpret=interpret)
+        bit = e_bits[:, i][:, None]
+        return jnp.where(bit > 0, mul, acc)
+
+    return jax.lax.fori_loop(0, nbits, step, acc)
+
+
+def modexp_ints(bases: list[int], exps: list[int], n: int, L: int,
+                interpret: bool = True) -> list[int]:
+    """Convenience: batched c^e mod n over Python ints via the kernel."""
+    mp = montgomery_params(n, L)
+    nbits = max(e.bit_length() for e in exps) or 1
+    a = jnp.asarray(batch_to_limbs([to_mont(b % n, mp) for b in bases], L))
+    bits = np.zeros((len(exps), nbits), np.uint32)
+    for r, e in enumerate(exps):
+        for i in range(nbits):
+            bits[r, i] = (e >> (nbits - 1 - i)) & 1
+    one = jnp.asarray(to_limbs(mp["R"] % n, L))
+    out = mont_exp_op(a, jnp.asarray(bits), jnp.asarray(mp["n_limbs"]),
+                      jnp.uint32(mp["n0inv"]), one, interpret=interpret)
+    # leave the Montgomery domain with one extra multiply by 1
+    one_plain = jnp.asarray(batch_to_limbs([1] * len(bases), L))
+    out = mont_mul_op(out, one_plain, jnp.asarray(mp["n_limbs"]),
+                      jnp.uint32(mp["n0inv"]), interpret=interpret)
+    return [from_limbs(np.asarray(row)) for row in out]

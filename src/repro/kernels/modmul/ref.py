@@ -1,0 +1,30 @@
+"""Oracles for the Montgomery modmul kernel.
+
+``mont_mul_ref`` — the same lazy-carry CIOS in plain jnp (no pallas).
+``mont_mul_int`` — ground truth with Python big ints.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.crypto.limb import LIMB_BITS, batch_from_limbs, batch_to_limbs
+from repro.kernels.modmul.modmul import _mont_mul_block
+
+
+def mont_mul_ref(a, b, n_limbs, n0inv):
+    L = a.shape[1]
+    return _mont_mul_block(jnp.asarray(a, jnp.uint32),
+                           jnp.asarray(b, jnp.uint32),
+                           jnp.asarray(n_limbs).reshape(1, L).astype(jnp.uint32),
+                           jnp.uint32(n0inv), L)
+
+
+def mont_mul_int(a_limbs: np.ndarray, b_limbs: np.ndarray, n: int,
+                 L: int) -> np.ndarray:
+    """Ground truth: a*b*R^-1 mod n via Python ints."""
+    R_inv = pow(1 << (LIMB_BITS * L), -1, n)
+    avals = batch_from_limbs(a_limbs)
+    bvals = batch_from_limbs(b_limbs)
+    out = [(x * y * R_inv) % n for x, y in zip(avals, bvals)]
+    return batch_to_limbs(out, L)

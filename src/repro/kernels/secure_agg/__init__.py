@@ -1,0 +1,2 @@
+from repro.kernels.secure_agg.ops import mask_encrypt_op, vote_combine_op
+from repro.kernels.secure_agg.ref import mask_encrypt_ref, vote_combine_ref

@@ -1,0 +1,21 @@
+"""Jit'd public wrappers for the secure aggregation kernels."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.secure_agg.secure_agg import mask_encrypt, vote_combine
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "clip", "mode", "interpret"))
+def mask_encrypt_op(x, node_id, seed, scale, clip, mode="mask",
+                    interpret: bool = True):
+    return mask_encrypt(x, node_id, seed, scale, clip, mode=mode,
+                        interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def vote_combine_op(copies, acc, interpret: bool = True):
+    return vote_combine(copies, acc, interpret=interpret)

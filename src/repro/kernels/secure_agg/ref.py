@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the secure_agg kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.secure_agg.secure_agg import MIX1, splitmix32
+
+
+def mask_encrypt_ref(x: jax.Array, node_id, seed, scale: float, clip: float,
+                     mode: str = "mask") -> jax.Array:
+    xq = jnp.clip(x.astype(jnp.float32), -clip, clip) * jnp.float32(scale)
+    q = jnp.round(xq).astype(jnp.int32).astype(jnp.uint32)
+    if mode == "mask":
+        ctr = jnp.arange(x.shape[0], dtype=jnp.uint32)
+        seed = jnp.asarray(seed, jnp.uint32)
+        node_id = jnp.asarray(node_id, jnp.uint32)
+        stream = splitmix32(splitmix32(seed ^ node_id * MIX1) ^ ctr)
+        q = q + stream
+    return q
+
+
+def vote_combine_ref(copies: jax.Array, acc: jax.Array) -> jax.Array:
+    r = copies.shape[0]
+    return acc + jnp.sort(copies, axis=0)[r // 2]

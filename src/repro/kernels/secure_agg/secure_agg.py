@@ -1,0 +1,113 @@
+"""Secure-aggregation Pallas TPU kernels (the paper's per-step hot path,
+DESIGN §2.2):
+
+  * ``mask_encrypt``  — fused clip + fixed-point quantize + PRF pad-add over
+    Z_{2^32}.  The pad is a counter-based splitmix32 stream keyed by
+    (seed, node_id, element index): one fused VMEM pass instead of
+    separate clip/round/cast/bits/add HLOs.
+  * ``vote_combine``  — element-wise majority (median network) over r
+    redundant uint32 copies fused with the ring accumulate add.
+
+Both are grid-tiled over flat element blocks (8*128-aligned).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# numpy literals (not traced arrays) so pallas kernels don't capture consts
+GOLDEN = np.uint32(0x9E3779B9)
+MIX1 = np.uint32(0x85EBCA6B)
+MIX2 = np.uint32(0xC2B2AE35)
+
+
+def splitmix32(x: jax.Array) -> jax.Array:
+    """Counter-based PRF core (uint32 -> uint32)."""
+    x = x + GOLDEN
+    x = (x ^ (x >> 16)) * MIX1
+    x = (x ^ (x >> 13)) * MIX2
+    return x ^ (x >> 16)
+
+
+def _mask_kernel(x_ref, meta_ref, o_ref, *, block: int, mode: str):
+    ib = pl.program_id(0)
+    seed = meta_ref[0]
+    node_id = meta_ref[1]
+    scale = jax.lax.bitcast_convert_type(meta_ref[2], jnp.float32)
+    clip = jax.lax.bitcast_convert_type(meta_ref[3], jnp.float32)
+
+    x = x_ref[...].astype(jnp.float32)
+    xq = jnp.clip(x, -clip, clip) * scale
+    # round-to-nearest-even then two's-complement reinterpret
+    q = jnp.round(xq).astype(jnp.int32).astype(jnp.uint32)
+    if mode == "mask":
+        ctr = (jnp.uint32(ib * block)
+               + jax.lax.broadcasted_iota(jnp.uint32, (block,), 0))
+        stream = splitmix32(splitmix32(seed ^ node_id * MIX1) ^ ctr)
+        q = q + stream
+    o_ref[...] = q
+
+
+def mask_encrypt(x: jax.Array, node_id, seed, scale: float, clip: float,
+                 *, mode: str = "mask", block: int = 1024,
+                 interpret: bool = True) -> jax.Array:
+    """x: flat (T,) float -> masked uint32 (T,). T must divide by block."""
+    (T,) = x.shape
+    block = min(block, T)
+    assert T % block == 0
+    meta = jnp.stack([
+        jnp.asarray(seed, jnp.uint32),
+        jnp.asarray(node_id, jnp.uint32),
+        jax.lax.bitcast_convert_type(jnp.float32(scale), jnp.uint32),
+        jax.lax.bitcast_convert_type(jnp.float32(clip), jnp.uint32),
+    ])
+    return pl.pallas_call(
+        functools.partial(_mask_kernel, block=block, mode=mode),
+        grid=(T // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda ib: (ib,)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda ib: (ib,)),
+        out_shape=jax.ShapeDtypeStruct((T,), jnp.uint32),
+        interpret=interpret,
+    )(x, meta)
+
+
+def _vote_kernel(copies_ref, acc_ref, o_ref, *, r: int):
+    c = copies_ref[...]  # (r, block)
+    acc = acc_ref[...]
+    # odd-even transposition sort network over the r axis (r is tiny)
+    rows = [c[i] for i in range(r)]
+    for phase in range(r):
+        start = phase % 2
+        for i in range(start, r - 1, 2):
+            lo = jnp.minimum(rows[i], rows[i + 1])
+            hi = jnp.maximum(rows[i], rows[i + 1])
+            rows[i], rows[i + 1] = lo, hi
+    o_ref[...] = acc + rows[r // 2]
+
+
+def vote_combine(copies: jax.Array, acc: jax.Array, *, block: int = 1024,
+                 interpret: bool = True) -> jax.Array:
+    """copies: (r, T) uint32, acc: (T,) uint32 -> acc + majority(copies)."""
+    r, T = copies.shape
+    assert r % 2 == 1
+    block = min(block, T)
+    assert T % block == 0
+    return pl.pallas_call(
+        functools.partial(_vote_kernel, r=r),
+        grid=(T // block,),
+        in_specs=[
+            pl.BlockSpec((r, block), lambda ib: (0, ib)),
+            pl.BlockSpec((block,), lambda ib: (ib,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda ib: (ib,)),
+        out_shape=jax.ShapeDtypeStruct((T,), jnp.uint32),
+        interpret=interpret,
+    )(copies, acc)

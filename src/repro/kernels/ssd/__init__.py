@@ -1,0 +1,2 @@
+from repro.kernels.ssd.ops import ssd_op
+from repro.kernels.ssd.ref import ssd_ref

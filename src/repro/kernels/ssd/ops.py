@@ -1,0 +1,13 @@
+"""Jit'd public wrapper for the SSD kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssd.ssd import ssd
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_op(x, dt, a, Bm, Cm, chunk: int = 128, interpret: bool = True):
+    return ssd(x, dt, a, Bm, Cm, chunk=chunk, interpret=interpret)

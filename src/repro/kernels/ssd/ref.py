@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the SSD kernel: naive sequential recurrence.
+
+  h_t = exp(dt_t * a) * h_{t-1} + dt_t * x_t B_t^T     (P x N)
+  y_t = h_t C_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, a: jax.Array, Bm: jax.Array,
+            Cm: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Same shapes as the kernel: x (BH,S,P), dt (BH,S), a (BH,),
+    Bm/Cm (BH,S,N) -> y (BH,S,P), final state (BH,P,N)."""
+    BH, S, P = x.shape
+    N = Bm.shape[-1]
+
+    def per_head(xh, dth, ah, Bh, Ch):
+        def step(h, inp):
+            xt, dtt, bt, ct = inp
+            h = jnp.exp(dtt * ah) * h + dtt * jnp.outer(xt, bt)
+            return h, h @ ct
+
+        h0 = jnp.zeros((P, N), jnp.float32)
+        hT, ys = jax.lax.scan(
+            step, h0, (xh.astype(jnp.float32), dth.astype(jnp.float32),
+                       Bh.astype(jnp.float32), Ch.astype(jnp.float32)))
+        return ys, hT
+
+    y, st = jax.vmap(per_head)(x, dt, a, Bm, Cm)
+    return y.astype(x.dtype), st

@@ -1,0 +1,102 @@
+"""Mamba2 SSD (state-space dual) chunked-scan Pallas TPU kernel.
+
+Grid: (B*H, n_chunks) with the chunk axis innermost/sequential; the
+running inter-chunk state (P x N) lives in VMEM scratch.  Each grid step
+computes the intra-chunk (quadratic, MXU-friendly) block and folds the
+carried state, exactly mirroring the ssd_chunked reference.
+
+Inputs are per-head (the ops wrapper broadcasts shared B/C across heads):
+  x  (BH, S, P)   dt (BH, S)    a (BH,)   [decay rate, negative]
+  Bm (BH, S, N)   Cm (BH, S, N)
+Output y (BH, S, P) and final state (BH, P, N).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, st_out_ref,
+            state_ref, *, Q: int, n_chunks: int):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    a = a_ref[0].astype(jnp.float32)            # scalar decay rate
+    x = x_ref[0].astype(jnp.float32)            # (Q, P)
+    dt = dt_ref[0].astype(jnp.float32)          # (Q,)
+    Bm = b_ref[0].astype(jnp.float32)           # (Q, N)
+    Cm = c_ref[0].astype(jnp.float32)           # (Q, N)
+
+    dA = dt * a                                 # (Q,)
+    dA_cum = jnp.cumsum(dA)                     # (Q,)
+    xdt = x * dt[:, None]                       # (Q, P)
+
+    # intra-chunk: L[i,j] = exp(sum_{j<k<=i} dA_k) for j <= i
+    seg = dA_cum[:, None] - dA_cum[None, :]     # (Q, Q)
+    qi = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    qj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(qi >= qj, jnp.exp(seg), 0.0)
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (Q,Q)
+    y = jax.lax.dot(L * scores, xdt, preferred_element_type=jnp.float32)
+
+    # contribution of the carried state
+    state = state_ref[...]                      # (P, N)
+    decay_in = jnp.exp(dA_cum)                  # (Q,)
+    y = y + decay_in[:, None] * jax.lax.dot_general(
+        Cm, state, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)     # (Q,N)x(P,N)->(Q,P)
+
+    # update carried state: decay + this chunk's contribution
+    decay_out = jnp.exp(dA_cum[-1] - dA_cum)    # (Q,)
+    chunk_state = jax.lax.dot_general(
+        xdt, Bm * decay_out[:, None], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)     # (P, N)
+    state_ref[...] = state * jnp.exp(dA_cum[-1]) + chunk_state
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(ic == n_chunks - 1)
+    def _emit_state():
+        st_out_ref[0] = state_ref[...].astype(st_out_ref.dtype)
+
+
+def ssd(x: jax.Array, dt: jax.Array, a: jax.Array, Bm: jax.Array,
+        Cm: jax.Array, *, chunk: int = 128,
+        interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """x: (BH, S, P); dt: (BH, S); a: (BH,); Bm/Cm: (BH, S, N)."""
+    BH, S, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0
+    n_chunks = S // Q
+
+    y, st = pl.pallas_call(
+        functools.partial(_kernel, Q=Q, n_chunks=n_chunks),
+        grid=(BH, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, ic: (b,)),
+            pl.BlockSpec((1, Q, P), lambda b, ic: (b, ic, 0)),
+            pl.BlockSpec((1, Q), lambda b, ic: (b, ic)),
+            pl.BlockSpec((1, Q, N), lambda b, ic: (b, ic, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, ic: (b, ic, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, P), lambda b, ic: (b, ic, 0)),
+            pl.BlockSpec((1, P, N), lambda b, ic: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, P), x.dtype),
+            jax.ShapeDtypeStruct((BH, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(a, x, dt, Bm, Cm)
+    return y, st

@@ -1,0 +1,209 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture x input-shape x mesh) cell, print memory/cost analysis, and
+emit the roofline terms (deliverable g) into reports/dryrun/*.json.
+
+Usage:
+    python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
+    python -m repro.launch.dryrun --arch olmo-1b --shape train_4k --multi-pod
+    python -m repro.launch.dryrun --all          # every runnable cell, both meshes
+    python -m repro.launch.dryrun --all --subprocess   # isolate cells
+
+The 512 forced host devices exist ONLY here (smoke tests/benches see 1).
+"""
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import subprocess  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import SHAPES, get_config, list_archs, supported_shapes  # noqa: E402
+from repro.core.secure_allreduce import AggConfig  # noqa: E402
+from repro.launch import steps as ST  # noqa: E402
+from repro.launch.mesh import dp_axes_of, make_production_mesh  # noqa: E402
+from repro.roofline import analysis as RA  # noqa: E402
+from repro.roofline import hw  # noqa: E402
+
+REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                          "reports", "dryrun")
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             secure: bool = False, agg_overrides: dict | None = None,
+             quiet: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = 1
+    for a in mesh.axis_names:
+        n_chips *= mesh.shape[a]
+    t0 = time.time()
+
+    if shape.kind == "train":
+        if secure:
+            dp_n = 1
+            for a in dp_axes_of(mesh):
+                dp_n *= mesh.shape[a]
+            agg_kw = dict(n_nodes=dp_n, cluster_size=4, redundancy=3)
+            agg_kw.update(agg_overrides or {})
+            cfg = dataclasses.replace(cfg, dp_mode="replicated")
+            agg = AggConfig(**agg_kw)
+            step, _, opt_cfg = ST.build_secure_train_step(cfg, mesh, agg,
+                                                          shape=shape)
+        else:
+            step, _, opt_cfg = ST.build_train_step(cfg, mesh, shape=shape)
+        args = (ST.abstract_params(cfg), ST.abstract_opt_state(cfg, opt_cfg),
+                ST.input_specs(cfg, shape))
+    elif shape.kind == "prefill":
+        step, _ = ST.build_prefill_step(cfg, mesh, shape)
+        args = (ST.abstract_params(cfg), ST.input_specs(cfg, shape))
+    else:  # decode
+        step, _ = ST.build_decode_step(cfg, mesh, shape)
+        args = (ST.abstract_params(cfg), ST.abstract_cache(cfg, shape),
+                ST.input_specs(cfg, shape)["tokens"],
+                jax.ShapeDtypeStruct((), jnp.int32))
+
+    lowered = step.lower(*args)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    print(compiled.memory_analysis())   # proves it fits (per instructions)
+    if not quiet:
+        print({k: v for k, v in ca.items()
+               if k in ("flops", "bytes accessed")})
+
+    hlo = compiled.as_text()
+    # persist compressed HLO so roofline re-analysis never needs recompiles
+    try:
+        import zstandard
+        hlo_dir = os.path.join(os.path.dirname(REPORT_DIR), "hlo")
+        os.makedirs(hlo_dir, exist_ok=True)
+        tag = (f"{arch}_{shape_name}_{'2x16x16' if multi_pod else '16x16'}"
+               + ("_secure" if secure else ""))
+        with open(os.path.join(hlo_dir, tag + ".hlo.zst"), "wb") as f:
+            f.write(zstandard.ZstdCompressor(level=6).compress(hlo.encode()))
+    except Exception:
+        pass
+    parsed = RA.analyze_hlo(hlo)
+    terms = RA.roofline_terms(parsed)
+    model_fl = RA.model_flops_per_step(cfg, shape)
+    model_fl_dev = model_fl / n_chips
+
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "secure": secure,
+        "agg": agg_overrides or ({} if not secure else {"cluster_size": 4,
+                                                        "redundancy": 3}),
+        "n_chips": n_chips,
+        "t_lower_s": round(t_lower, 1), "t_compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "fits_hbm_est": (ma.argument_size_in_bytes
+                             + ma.temp_size_in_bytes) < hw.HBM_BYTES,
+        },
+        "cost_analysis": {"flops": ca.get("flops"),
+                          "bytes_accessed": ca.get("bytes accessed")},
+        "hlo_parsed": parsed,
+        "model_flops_global": model_fl,
+        "model_flops_per_device": model_fl_dev,
+        "useful_flops_ratio": (model_fl_dev / parsed["flops_hlo"]
+                               if parsed["flops_hlo"] else None),
+        "terms": terms,
+        "hlo_bytes": len(hlo),
+    }
+    return rec
+
+
+def cell_list() -> list[tuple[str, str]]:
+    cells = []
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for s in supported_shapes(cfg):
+            cells.append((arch, s))
+    return cells
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--secure", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--subprocess", action="store_true",
+                    help="run each cell in a fresh process")
+    ap.add_argument("--out-dir", default=REPORT_DIR)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    if not args.all:
+        assert args.arch and args.shape
+        rec = run_cell(args.arch, args.shape, args.multi_pod, args.secure)
+        name = f"{args.arch}_{args.shape}_{rec['mesh']}" + \
+            ("_secure" if args.secure else "")
+        with open(os.path.join(args.out_dir, name + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+        t = rec["terms"]
+        print(f"[OK] {name}: dominant={t['dominant']} "
+              f"compute={t['compute_s']:.4f}s memory={t['memory_s']:.4f}s "
+              f"collective={t['collective_s']:.4f}s "
+              f"useful={rec['useful_flops_ratio']}")
+        return
+
+    failures = []
+    for arch, shape in cell_list():
+        for mp in (False, True):
+            mesh_name = "2x16x16" if mp else "16x16"
+            name = f"{arch}_{shape}_{mesh_name}"
+            out = os.path.join(args.out_dir, name + ".json")
+            if os.path.exists(out):
+                print(f"[skip] {name} (cached)")
+                continue
+            if args.subprocess:
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape,
+                       "--out-dir", args.out_dir]
+                if mp:
+                    cmd.append("--multi-pod")
+                r = subprocess.run(cmd, capture_output=True, text=True,
+                                   timeout=3600)
+                ok = r.returncode == 0 and os.path.exists(out)
+                print(f"[{'OK' if ok else 'FAIL'}] {name}")
+                if not ok:
+                    failures.append(name)
+                    print(r.stdout[-2000:])
+                    print(r.stderr[-3000:])
+            else:
+                try:
+                    rec = run_cell(arch, shape, mp, quiet=True)
+                    with open(out, "w") as f:
+                        json.dump(rec, f, indent=1)
+                    t = rec["terms"]
+                    print(f"[OK] {name}: dom={t['dominant']} "
+                          f"c={t['compute_s']:.4f} m={t['memory_s']:.4f} "
+                          f"x={t['collective_s']:.4f}")
+                except Exception:
+                    failures.append(name)
+                    print(f"[FAIL] {name}")
+                    traceback.print_exc()
+    print(f"\n{len(failures)} failures: {failures}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

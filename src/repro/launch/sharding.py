@@ -1,0 +1,157 @@
+"""Parameter / activation / cache PartitionSpec rules (DESIGN §6).
+
+TP over "model" (heads / ffn / vocab), FSDP over "data" on the opposite
+matrix dim for archs with ``dp_mode="fsdp"``, MoE experts EP over "data".
+The scan-stacked unit dim is never sharded.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+DP = ("pod", "data")  # logical dp axes; missing mesh axes are dropped
+
+
+def _trim(spec: P, mesh: jax.sharding.Mesh) -> P:
+    """Drop axis names the mesh doesn't have (single-pod vs multi-pod)."""
+    names = set(mesh.axis_names)
+
+    def keep(e):
+        if e is None:
+            return None
+        if isinstance(e, tuple):
+            t = tuple(a for a in e if a in names)
+            return t if t else None
+        return e if e in names else None
+
+    return P(*(keep(e) for e in spec))
+
+
+def _leaf_spec(cfg: ModelConfig, path: str, shape: tuple[int, ...],
+               fsdp: Optional[str]) -> P:
+    f = fsdp  # alias; None disables FSDP sharding
+    if "embed" in path:
+        return P("model", None)
+    if "head" in path:
+        return P(f, "model")
+    if "router" in path:
+        return P(f, None)
+    # MoE experts: (E, d, f_e) / (E, f_e, d) — EP over data
+    if "mlp" in path and len(shape) == 3:
+        if "w_down" in path:
+            return P("data", "model", None)
+        return P("data", None, "model")
+    if "shared" in path or "mlp" in path:
+        if "w_down" in path:
+            return P("model", f)
+        if len(shape) == 2:
+            return P(f, "model")
+        return P("model") if len(shape) == 1 else P(None)
+    if "mixer" in path:
+        if any(k in path for k in ("wq", "wk", "wv")):
+            return P(f, "model")
+        if "wo" in path:
+            return P("model", f)
+        if any(k in path for k in ("bq", "bk", "bv")):
+            return P("model")
+        if any(k in path for k in ("in_z", "in_x")):
+            return P(f, "model")
+        if any(k in path for k in ("in_B", "in_C", "in_dt")):
+            return P(f, None)
+        if "out_proj" in path:
+            return P("model", f)
+        if "conv_x" in path and len(shape) == 2:
+            return P(None, "model")
+        if "conv_xb" in path or "out_norm" in path:
+            return P("model")
+    return P(*([None] * len(shape)))
+
+
+def param_specs(cfg: ModelConfig, params: Any, mesh: jax.sharding.Mesh,
+                fsdp: Optional[str] = "data") -> Any:
+    """Same-structure tree of PartitionSpec."""
+    if cfg.dp_mode == "replicated":
+        fsdp = None
+
+    def one(kp, leaf):
+        path = jax.tree_util.keystr(kp)
+        shape = leaf.shape[1:] if "units" in path else leaf.shape
+        spec = _leaf_spec(cfg, path, shape, fsdp)
+        if "units" in path:  # stacked unit dim is unsharded
+            spec = P(None, *spec)
+        if len(spec) != leaf.ndim:
+            spec = P(*(list(spec) + [None] * (leaf.ndim - len(spec))))
+        return _trim(spec, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def opt_specs(cfg: ModelConfig, opt_state: Any, pspecs: Any,
+              mesh: jax.sharding.Mesh) -> Any:
+    """Optimizer m/v mirror the parameter shardings; step is replicated."""
+    return {
+        "m": pspecs, "v": pspecs,
+        "step": P(),
+    }
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig,
+                mesh: jax.sharding.Mesh) -> Any:
+    dp = _trim(P(DP), mesh)
+    dp_size = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            dp_size *= mesh.shape[a]
+    b_spec = dp if shape.global_batch % dp_size == 0 and \
+        shape.global_batch >= dp_size else P(None)
+    out = {}
+    if cfg.frontend == "audio_frames":
+        out["frames"] = P(*b_spec, None, None)
+    else:
+        out["tokens"] = P(*b_spec, None)
+    if shape.kind == "train":
+        out["labels"] = P(*b_spec, None)
+    if cfg.frontend == "vision_patches":
+        out["media"] = P(*b_spec, None, None)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, cache: Any, shape: ShapeConfig,
+                mesh: jax.sharding.Mesh) -> Any:
+    """KV/SSM cache shardings: batch over dp when divisible, sequence over
+    "model" (long-context: over ("data","model") when batch is 1)."""
+    dp_size = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            dp_size *= mesh.shape[a]
+    batch_ok = shape.global_batch % dp_size == 0 and shape.global_batch >= dp_size
+    b = P(DP) if batch_ok else P(None)
+    seq_ax = "model" if batch_ok else ("data", "model")
+
+    def one(kp, leaf):
+        path = jax.tree_util.keystr(kp)
+        # leaves have leading n_units dim
+        if leaf.ndim == 5 and ("'k'" in path or "'v'" in path):
+            spec = P(None, *b, seq_ax, None, None)
+        elif "ssd" in path:
+            spec = P(None, *b, "model", None, None)
+        elif "conv_x" in path:
+            spec = P(None, *b, None, "model")
+        else:  # conv_B / conv_C (small)
+            spec = P(*([None] * leaf.ndim))
+        if len(spec) < leaf.ndim:
+            spec = P(*(list(spec) + [None] * (leaf.ndim - len(spec))))
+        return _trim(spec, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def to_shardings(spec_tree: Any, mesh: jax.sharding.Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

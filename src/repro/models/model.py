@@ -1,0 +1,336 @@
+"""Unified model: init / train forward / prefill / decode over a scanned
+stack of pattern units (see configs.base.ModelConfig)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import (ATTN, ATTN_CHUNKED, CROSS_ATTN, DENSE, MAMBA2,
+                                MOE, NONE, ModelConfig)
+from repro.models import layers as L
+from repro.runtime.context import constrain
+
+Params = Any
+Cache = Any
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    return -(-cfg.vocab_size // 256) * 256
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_unit(cfg: ModelConfig, key) -> dict:
+    unit = {}
+    keys = jax.random.split(key, len(cfg.pattern))
+    for i, spec in enumerate(cfg.pattern):
+        k1, k2 = jax.random.split(keys[i])
+        lp = {"norm1": L.make_norm_params(cfg, k1)}
+        if spec.mixer == MAMBA2:
+            lp["mixer"] = L.make_mamba_params(cfg, k1)
+        else:
+            lp["mixer"] = L.make_attn_params(cfg, k1, cross=(spec.mixer == CROSS_ATTN))
+            if spec.mixer == CROSS_ATTN:
+                lp["media_norm"] = L.make_norm_params(cfg, k2)
+        if spec.mlp == DENSE:
+            lp["norm2"] = L.make_norm_params(cfg, k2)
+            lp["mlp"] = L.make_mlp_params(cfg, k2)
+        elif spec.mlp == MOE:
+            lp["norm2"] = L.make_norm_params(cfg, k2)
+            lp["mlp"] = L.make_moe_params(cfg, k2)
+        unit[f"layer{i}"] = lp
+    return unit
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    k_embed, k_head, k_units = jax.random.split(key, 3)
+    Vp = padded_vocab(cfg)
+    d = cfg.d_model
+    params: dict = {}
+    if cfg.frontend != "audio_frames":
+        params["embed"] = jax.random.normal(k_embed, (Vp, d), jnp.float32) * (d ** -0.5)
+    if not cfg.tie_embeddings or cfg.frontend == "audio_frames":
+        params["head"] = jax.random.normal(k_head, (d, Vp), jnp.float32) * (d ** -0.5)
+    params["final_norm"] = L.make_norm_params(cfg, k_head)
+    unit_keys = jax.random.split(k_units, cfg.n_units)
+    params["units"] = jax.vmap(functools.partial(_init_unit, cfg))(unit_keys)
+    return params
+
+
+def param_dtypes_cast(params: Params, dtype) -> Params:
+    return jax.tree.map(lambda x: x.astype(dtype), params)
+
+
+# ---------------------------------------------------------------------------
+# Unit forward (train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def _unit_forward(cfg: ModelConfig, unit: dict, x: jax.Array,
+                  media: Optional[jax.Array],
+                  positions: Optional[jax.Array]) -> jax.Array:
+    for i, spec in enumerate(cfg.pattern):
+        lp = unit[f"layer{i}"]
+        h = L.apply_norm(cfg, lp["norm1"], x)
+        if spec.mixer == MAMBA2:
+            y, _ = L.mamba_forward(cfg, lp["mixer"], h)
+        elif spec.mixer == CROSS_ATTN:
+            med = L.apply_norm(cfg, lp["media_norm"], media)
+            y = L.attn_forward(cfg, lp["mixer"], h, mixer=spec.mixer, media=med,
+                               positions=positions)
+        else:
+            y = L.attn_forward(cfg, lp["mixer"], h, mixer=spec.mixer,
+                               positions=positions)
+        x = x + y
+        if spec.mlp != NONE:
+            h = L.apply_norm(cfg, lp["norm2"], x)
+            if spec.mlp == MOE:
+                y = L.moe_forward(cfg, lp["mlp"], h)
+            else:
+                y = L.mlp_forward(cfg, lp["mlp"], h)
+            x = x + y
+        seq = "model" if cfg.seq_parallel else None
+        x = constrain(x, P(("pod", "data"), seq, None))
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(cfg: ModelConfig, params: Params, batch: dict) -> jax.Array:
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.frontend == "audio_frames":
+        x = batch["frames"].astype(dtype)
+    else:
+        x = params["embed"].astype(dtype)[batch["tokens"]]
+        if cfg.embedding_multiplier != 1.0:
+            x = x * cfg.embedding_multiplier
+    return constrain(x, P(("pod", "data"), None, None))
+
+
+def lm_head(cfg: ModelConfig, params: Params, x: jax.Array) -> jax.Array:
+    dtype = x.dtype
+    if cfg.tie_embeddings and "embed" in params:
+        logits = x @ params["embed"].astype(dtype).T
+    else:
+        logits = x @ params["head"].astype(dtype)
+    return constrain(logits, P(("pod", "data"), None, "model"))
+
+
+# ---------------------------------------------------------------------------
+# Train forward + loss
+# ---------------------------------------------------------------------------
+
+
+def forward(cfg: ModelConfig, params: Params, batch: dict) -> jax.Array:
+    """Returns logits (B, S, Vp)."""
+    x = embed_inputs(cfg, params, batch)
+    media = batch.get("media")
+    if media is not None:
+        media = media.astype(x.dtype)
+    positions = None
+
+    def body(h, unit):
+        fn = functools.partial(_unit_forward, cfg)
+        if cfg.remat:
+            fn = jax.checkpoint(fn)
+        h = fn(unit, h, media, positions)
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, params["units"])
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return lm_head(cfg, params, x)
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: dict,
+            total_tokens: Optional[int] = None) -> jax.Array:
+    """Cross-entropy normalized by the *global* token count so that the sum
+    of per-replica losses/grads over DP ranks is the global mean (this is
+    what makes the secure-aggregation path a plain modular SUM — DESIGN §2.2).
+    """
+    logits = forward(cfg, params, batch).astype(jnp.float32)
+    labels = batch["labels"]
+    Vp = logits.shape[-1]
+    V = cfg.vocab_size
+    if Vp != V:  # mask vocab padding columns
+        col = jax.lax.broadcasted_iota(jnp.int32, (1, 1, Vp), 2)
+        logits = jnp.where(col < V, logits, -1e30)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    lbl = jnp.clip(labels, 0, V - 1)
+    picked = jnp.take_along_axis(logits, lbl[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = (lse - picked) * mask
+    denom = total_tokens if total_tokens is not None else jnp.maximum(mask.sum(), 1.0)
+    return ce.sum() / denom
+
+
+# ---------------------------------------------------------------------------
+# KV / SSM caches
+# ---------------------------------------------------------------------------
+
+
+def _layer_cache_shape(cfg: ModelConfig, spec, B: int, max_seq: int,
+                       media_len: int) -> dict:
+    K, hd = cfg.n_kv_heads, cfg.hd
+    dtype = jnp.dtype(cfg.dtype)
+    if spec.mixer == MAMBA2:
+        s = cfg.ssm
+        d_in = s.expand * cfg.d_model
+        nh = d_in // s.head_dim
+        return {
+            "conv_x": jnp.zeros((B, s.d_conv - 1, d_in), dtype),
+            "conv_B": jnp.zeros((B, s.d_conv - 1, s.d_state), dtype),
+            "conv_C": jnp.zeros((B, s.d_conv - 1, s.d_state), dtype),
+            "ssd": jnp.zeros((B, nh, s.head_dim, s.d_state), jnp.float32),
+        }
+    if spec.mixer == CROSS_ATTN:
+        return {"k": jnp.zeros((B, media_len, K, hd), dtype),
+                "v": jnp.zeros((B, media_len, K, hd), dtype)}
+    S = min(max_seq, cfg.attn_window) if spec.mixer == ATTN_CHUNKED else max_seq
+    return {"k": jnp.zeros((B, S, K, hd), dtype),
+            "v": jnp.zeros((B, S, K, hd), dtype)}
+
+
+def init_cache(cfg: ModelConfig, B: int, max_seq: int,
+               media_len: int = 0) -> Cache:
+    def one_unit(_):
+        return {f"layer{i}": _layer_cache_shape(cfg, spec, B, max_seq, media_len)
+                for i, spec in enumerate(cfg.pattern)}
+    return jax.vmap(one_unit)(jnp.arange(cfg.n_units))
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+
+def _unit_prefill(cfg: ModelConfig, unit: dict, x: jax.Array,
+                  media: Optional[jax.Array], *,
+                  max_seq: int) -> tuple[jax.Array, dict]:
+    B, S, _ = x.shape
+    K, hd = cfg.n_kv_heads, cfg.hd
+    dtype = x.dtype
+    caches = {}
+    for i, spec in enumerate(cfg.pattern):
+        lp = unit[f"layer{i}"]
+        h = L.apply_norm(cfg, lp["norm1"], x)
+        if spec.mixer == MAMBA2:
+            y, st = L.mamba_forward(cfg, lp["mixer"], h)
+            caches[f"layer{i}"] = st
+        elif spec.mixer == CROSS_ATTN:
+            med = L.apply_norm(cfg, lp["media_norm"], media)
+            _, mk, mv = L._qkv(cfg, lp["mixer"], h, med, dtype)
+            y = L.attn_forward(cfg, lp["mixer"], h, mixer=spec.mixer, media=med)
+            caches[f"layer{i}"] = {"k": mk, "v": mv}
+        else:
+            positions = jnp.arange(S, dtype=jnp.int32)
+            q, k, v = L._qkv(cfg, lp["mixer"], h, h, dtype)
+            q = L.rope(q, positions, cfg.rope_theta)
+            k = L.rope(k, positions, cfg.rope_theta)
+            window = cfg.attn_window if spec.mixer == ATTN_CHUNKED else 0
+            o = L.flash_attention(q, k, v, causal=cfg.causal, window=window,
+                                  softcap=cfg.logit_softcap)
+            y = o.reshape(B, S, -1) @ lp["mixer"]["wo"].astype(dtype)
+            Sc = min(max_seq, window) if window else max_seq
+            kc = jnp.zeros((B, Sc, K, hd), dtype)
+            vc = jnp.zeros((B, Sc, K, hd), dtype)
+            if window:
+                # ring buffer slot = pos % window: only the current
+                # (possibly partial) chunk's tail belongs in the cache;
+                # S % window == 0 means decode starts a fresh chunk.
+                take = S % window
+            else:
+                take = min(S, Sc)
+            if take:
+                kc = jax.lax.dynamic_update_slice_in_dim(kc, k[:, -take:], 0, axis=1)
+                vc = jax.lax.dynamic_update_slice_in_dim(vc, v[:, -take:], 0, axis=1)
+            caches[f"layer{i}"] = {"k": kc, "v": vc}
+        x = x + y
+        if spec.mlp != NONE:
+            h = L.apply_norm(cfg, lp["norm2"], x)
+            y = L.moe_forward(cfg, lp["mlp"], h) if spec.mlp == MOE \
+                else L.mlp_forward(cfg, lp["mlp"], h)
+            x = x + y
+    return x, caches
+
+
+def prefill(cfg: ModelConfig, params: Params, batch: dict,
+            max_seq: int) -> tuple[jax.Array, Cache]:
+    """Run the prompt; returns (last-position logits, cache)."""
+    x = embed_inputs(cfg, params, batch)
+    media = batch.get("media")
+    if media is not None:
+        media = media.astype(x.dtype)
+
+    def body(h, unit):
+        fn = functools.partial(_unit_prefill, cfg, max_seq=max_seq)
+        if cfg.remat:
+            fn = jax.checkpoint(fn)
+        h, cache_u = fn(unit, h, media)
+        return h, cache_u
+
+    x, caches = jax.lax.scan(body, x, params["units"])
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = lm_head(cfg, params, x[:, -1:])
+    return logits, caches
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def _unit_decode(cfg: ModelConfig, unit: dict, cache_u: dict, x: jax.Array,
+                 t: jax.Array) -> tuple[jax.Array, dict]:
+    new_cache = {}
+    for i, spec in enumerate(cfg.pattern):
+        lp = unit[f"layer{i}"]
+        cu = cache_u[f"layer{i}"]
+        h = L.apply_norm(cfg, lp["norm1"], x)
+        if spec.mixer == MAMBA2:
+            y, st = L.mamba_forward(cfg, lp["mixer"], h, state=cu, decode=True)
+            new_cache[f"layer{i}"] = st
+        elif spec.mixer == CROSS_ATTN:
+            y, st = L.attn_decode(cfg, lp["mixer"], h, cu, t, mixer=spec.mixer)
+            new_cache[f"layer{i}"] = st
+        else:
+            if spec.mixer == ATTN_CHUNKED:
+                # ring-buffer within the current chunk: local slot index
+                t_loc = jnp.mod(t, cfg.attn_window)
+                y, st = L.attn_decode(cfg, lp["mixer"], h, cu, t, mixer=ATTN,
+                                      slot=t_loc)
+            else:
+                y, st = L.attn_decode(cfg, lp["mixer"], h, cu, t, mixer=spec.mixer)
+            new_cache[f"layer{i}"] = st
+        x = x + y
+        if spec.mlp != NONE:
+            h = L.apply_norm(cfg, lp["norm2"], x)
+            y = L.moe_forward(cfg, lp["mlp"], h) if spec.mlp == MOE \
+                else L.mlp_forward(cfg, lp["mlp"], h)
+            x = x + y
+    return x, new_cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Cache,
+                tokens: jax.Array, t: jax.Array) -> tuple[jax.Array, Cache]:
+    """One token for every sequence. tokens: (B, 1) int32; t: scalar pos."""
+    x = embed_inputs(cfg, params, {"tokens": tokens})
+
+    def body(h, xs):
+        unit, cache_u = xs
+        h, new_cache_u = _unit_decode(cfg, unit, cache_u, h, t)
+        return h, new_cache_u
+
+    x, new_cache = jax.lax.scan(body, x, (params["units"], cache))
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = lm_head(cfg, params, x)
+    return logits, new_cache

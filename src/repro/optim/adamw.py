@@ -1,0 +1,86 @@
+"""AdamW with cosine schedule, global-norm clipping and configurable state
+dtype (bf16 states for the largest archs — DESIGN §6)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    betas: tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    state_dtype: str = "float32"
+
+
+def lr_at(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def init_opt_state(cfg: OptConfig, params: Any) -> dict:
+    dt = jnp.dtype(cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def apply_updates(cfg: OptConfig, params: Any, grads: Any,
+                  state: dict,
+                  grad_norm: Optional[jax.Array] = None,
+                  ) -> tuple[Any, dict, dict]:
+    """Returns (new_params, new_state, metrics).  ``grad_norm`` overrides
+    the local norm (secure/EP path corrects it across ranks)."""
+    step = state["step"]
+    gnorm = global_norm(grads) if grad_norm is None else grad_norm
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    b1, b2 = cfg.betas
+    lr = lr_at(cfg, step)
+    t = (step + 1).astype(jnp.float32)
+    bias1 = 1 - b1 ** t
+    bias2 = 1 - b2 ** t
+    dt = jnp.dtype(cfg.state_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        mh = m32 / bias1
+        vh = v32 / bias2
+        step_ = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * step_
+        return newp.astype(p.dtype), m32.astype(dt), v32.astype(dt)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    new_state = {"m": new_m, "v": new_v, "step": step + 1}
+    return new_p, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,414 @@
+"""HLO-derived roofline analysis (EXPERIMENTS §Roofline).
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE, so scanned
+models are undercounted by ~n_layers.  This parser walks the optimized
+(post-SPMD, per-device) HLO text, recovers while-loop trip counts, and
+accumulates with the correct execution multipliers:
+
+  * collective bytes (operand sizes of all-reduce / all-gather /
+    reduce-scatter / all-to-all / collective-permute), per type;
+  * dot FLOPs (2 * output elements * contraction size), including dots
+    inside fusion bodies;
+  * an HBM-traffic estimate: sum of operand+output bytes of top-level
+    fusions / dots / copies / slices (XLA fusions read inputs from HBM and
+    write outputs — internal values stay in registers/VMEM).
+
+Terms (per device, seconds):
+  compute    = flops / PEAK_FLOPS
+  memory     = hbm_bytes / HBM_BW
+  collective = collective_bytes / (links * ICI_BW)
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Optional
+
+from repro.roofline import hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s+(%?[\w.\-]+)\s*=\s*(.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?(%?[\w.\-]+)\s*(?:\([^)]*\))?\s*->")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_SKIP_TRAFFIC = {"parameter", "constant", "get-tuple-element", "tuple",
+                 "bitcast", "while", "conditional", "call", "after-all",
+                 "iota", "partition-id", "replica-id",
+                 # copies of loop-carried buffers are CPU-backend artifacts;
+                 # the TPU target aliases while carries in place (see
+                 # EXPERIMENTS §Dry-run caveats)
+                 "copy", "copy-start", "copy-done"}
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    body: str  # full RHS text
+
+
+def _parse_computations(text: str) -> tuple[dict[str, list[Instr]], str]:
+    comps: dict[str, list[Instr]] = {}
+    entry = ""
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        if not line:
+            continue
+        if not line[0] in " \t":  # computation header or closing brace
+            if line.startswith("}"):
+                cur = None
+                continue
+            if line.rstrip().endswith("{"):
+                toks = line.split()
+                is_entry = toks[0] == "ENTRY"
+                name = toks[1] if is_entry else toks[0]
+                cur = name.lstrip("%")
+                comps[cur] = []
+                if is_entry:
+                    entry = cur
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        # rhs: "type opcode(operands), attrs"
+        tm = re.match(r"((?:\([^)]*\)|\S+))\s+([\w\-]+)\(", rhs)
+        if not tm:
+            continue
+        type_str, opcode = tm.groups()
+        comps[cur].append(Instr(name.lstrip("%"), type_str, opcode, rhs))
+    return comps, entry
+
+
+def _trip_count(while_body: str, cond_instrs: list[Instr]) -> int:
+    """Trip count: prefer XLA's backend_config known_trip_count; fall back
+    to scanning the condition computation for the compare bound."""
+    bm = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', while_body)
+    if bm:
+        return int(bm.group(1))
+    consts: dict[str, int] = {}
+    for ins in cond_instrs:
+        cm = re.match(r"s32\[\]\s+constant\((\d+)\)", ins.body)
+        if cm:
+            consts[ins.name] = int(cm.group(1))
+    best = 1
+    for ins in cond_instrs:
+        if ins.opcode == "compare" and "direction=LT" in ins.body:
+            ops = re.findall(r"%([\w.\-]+)", ins.body)
+            for o in ops:
+                if o in consts:
+                    best = max(best, consts[o])
+    return best
+
+
+def _dot_flops(ins: Instr, shapes: dict[str, str]) -> float:
+    out_elems = 1
+    m = _SHAPE_RE.search(ins.type_str)
+    if not m:
+        return 0.0
+    for d in m.group(2).split(","):
+        if d:
+            out_elems *= int(d)
+    # contraction size: from lhs operand shape and lhs_contracting_dims
+    ops = re.findall(r"%([\w.\-]+)", ins.body)
+    cd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.body)
+    contract = 1
+    if ops and cd and ops[0] in shapes:
+        sm = _SHAPE_RE.search(shapes[ops[0]])
+        if sm:
+            dims = [int(d) for d in sm.group(2).split(",") if d]
+            for ci in cd.group(1).split(","):
+                if ci and int(ci) < len(dims):
+                    contract *= dims[int(ci)]
+        bd = re.search(r"lhs_batch_dims=\{([\d,]*)\}", ins.body)
+        _ = bd
+    return 2.0 * out_elems * contract
+
+
+def analyze_hlo(text: str) -> dict:
+    comps, entry = _parse_computations(text)
+
+    # per-computation symbol tables (name -> type string)
+    shapes: dict[str, dict[str, str]] = {
+        c: {i.name: i.type_str for i in instrs} for c, instrs in comps.items()
+    }
+
+    if not entry:  # fall back: computation named like the jit fn
+        entry = next(iter(comps))
+
+    # multipliers via worklist from entry
+    mult: dict[str, float] = defaultdict(float)
+    fusion_bodies: set[str] = set()   # computations whose I/O is accounted
+    mult[entry] = 1.0                 # at their (fusion/reduce) call site
+    order = [entry]
+    seen = {entry}
+    i = 0
+    while i < len(order):
+        c = order[i]
+        i += 1
+        for ins in comps.get(c, []):
+            m = mult[c]
+            if ins.opcode == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", ins.body)
+                cm = re.search(r"condition=%?([\w.\-]+)", ins.body)
+                if bm:
+                    body = bm.group(1)
+                    tc = _trip_count(
+                        ins.body, comps.get(cm.group(1), []) if cm else [])
+                    mult[body] += m * tc
+                    if cm:
+                        mult[cm.group(1)] += m * (tc + 1)
+                    for x in (body, cm.group(1) if cm else None):
+                        if x and x not in seen:
+                            seen.add(x)
+                            order.append(x)
+            else:
+                for attr in ("calls", "to_apply", "branch_computations"):
+                    am = re.search(attr + r"=\{?%?([\w.\-]+(?:, ?%[\w.\-]+)*)\}?",
+                                   ins.body)
+                    if am:
+                        for callee in re.findall(r"[\w.\-]+", am.group(1)):
+                            if callee in comps:
+                                mult[callee] += m
+                                if attr == "calls" or ins.opcode in (
+                                        "fusion", "reduce", "sort", "map",
+                                        "scatter", "select-and-scatter",
+                                        "reduce-window") or \
+                                        ins.opcode.startswith("all-"):
+                                    fusion_bodies.add(callee)
+                                if callee not in seen:
+                                    seen.add(callee)
+                                    order.append(callee)
+
+    # --- effective fusion I/O: stacks that are only dynamic-sliced inside
+    # a fusion contribute the slice size, not the whole buffer (loop-
+    # carried remat stacks would otherwise be counted once per iteration).
+    def _operands(ins: Instr) -> list[str]:
+        depth = ins.body.find("(")
+        args = ins.body[depth + 1:]
+        # operand section ends at the matching paren of the op call
+        lvl, end = 1, len(args)
+        for i, ch in enumerate(args):
+            if ch == "(":
+                lvl += 1
+            elif ch == ")":
+                lvl -= 1
+                if lvl == 0:
+                    end = i
+                    break
+        return re.findall(r"%([\w.\-]+)", args[:end])
+
+    fusion_eff: dict[str, tuple[float, dict[int, float]]] = {}
+    for c, instrs in comps.items():
+        if not instrs:
+            continue
+        tbl = shapes[c]
+        params: dict[str, int] = {}
+        consumers: dict[str, list[Instr]] = defaultdict(list)
+        for ins in instrs:
+            pm = re.match(r".*parameter\((\d+)\)", ins.body)
+            if ins.opcode == "parameter" and pm:
+                params[ins.name] = int(pm.group(1))
+            for o in _operands(ins):
+                consumers[o].append(ins)
+        root = instrs[-1]
+        if root.opcode == "dynamic-update-slice":
+            ops = _operands(root)
+            eff_out = shape_bytes(tbl.get(ops[1], "")) if len(ops) > 1 \
+                else shape_bytes(root.type_str)
+        else:
+            eff_out = shape_bytes(root.type_str)
+        # transitively slice-only: a value read only through (chains of
+        # converts/bitcasts/reshapes ending in) dynamic-slice contributes
+        # the slice bytes, not the whole buffer
+        _PASS = {"convert", "bitcast", "reshape", "transpose", "copy"}
+
+        def slice_cost(vname, depth=0):
+            """Returns effective read bytes, or None if not slice-only."""
+            if depth > 6:
+                return None
+            cons = consumers.get(vname, [])
+            if not cons:
+                return None
+            total = 0.0
+            for ci in cons:
+                if ci.opcode == "dynamic-slice":
+                    total += shape_bytes(ci.type_str)
+                elif ci.opcode == "dynamic-update-slice" and \
+                        _operands(ci)[:1] == [vname]:
+                    o2 = _operands(ci)
+                    total += shape_bytes(tbl.get(o2[1], "")) \
+                        if len(o2) > 1 else 0.0
+                elif ci.opcode == "scatter" and \
+                        _operands(ci)[:1] == [vname]:
+                    o2 = _operands(ci)
+                    total += 2 * shape_bytes(tbl.get(o2[-1], "")) \
+                        if len(o2) > 2 else 0.0
+                elif ci.opcode == "gather" and \
+                        _operands(ci)[:1] == [vname]:
+                    total += 2 * shape_bytes(ci.type_str)
+                elif ci.opcode in _PASS:
+                    sub = slice_cost(ci.name, depth + 1)
+                    if sub is None:
+                        return None
+                    total += sub
+                else:
+                    return None
+            return total
+
+        eff_in: dict[int, float] = {}
+        for pname, pidx in params.items():
+            sc = slice_cost(pname)
+            eff_in[pidx] = sc if sc is not None \
+                else shape_bytes(tbl.get(pname, ""))
+        # pure dtype-normalization fusions (bf16<->f32 whole-buffer converts
+        # inserted by the CPU backend's float support pass; absent on the
+        # bf16-native TPU target) are excluded from traffic
+        def _elems(ts):
+            mm = _SHAPE_RE.search(ts)
+            if not mm:
+                return 0
+            n = 1
+            for d in mm.group(2).split(","):
+                if d:
+                    n *= int(d)
+            return n
+        dtype_copy = (len(params) == 1
+                      and all(i.opcode in ("convert", "copy", "bitcast",
+                                           "reshape", "parameter", "tuple")
+                              for i in instrs)
+                      and _elems(root.type_str)
+                      == _elems(tbl.get(next(iter(params)), "")))
+        fusion_eff[c] = (0.0 if dtype_copy else eff_out,
+                         {k: 0.0 for k in eff_in} if dtype_copy else eff_in)
+
+    flops = 0.0
+    coll_bytes: dict[str, float] = defaultdict(float)
+    hbm_traffic = 0.0
+    for c, instrs in comps.items():
+        m = mult.get(c, 0.0)
+        if m == 0.0:
+            continue
+        tbl = shapes[c]
+        in_fusion = c in fusion_bodies
+        for ins in instrs:
+            if ins.opcode in ("dot", "convolution"):
+                flops += m * _dot_flops(ins, tbl)
+            if in_fusion:
+                continue  # I/O accounted at the call site
+            is_coll = False
+            for coll in COLLECTIVES:
+                if ins.opcode.startswith(coll) and \
+                        not ins.opcode.endswith("-done"):
+                    ob = sum(shape_bytes(tbl.get(o, ""))
+                             for o in _operands(ins) if o in tbl)
+                    coll_bytes[coll] += m * ob
+                    is_coll = True
+            if is_coll or ins.opcode in _SKIP_TRAFFIC:
+                continue
+            if ins.opcode == "fusion":
+                fm = re.search(r"calls=%?([\w.\-]+)", ins.body)
+                callee = fm.group(1) if fm else None
+                if callee in fusion_eff:
+                    eff_out, eff_in = fusion_eff[callee]
+                    in_b = sum(eff_in.get(i, 0.0)
+                               for i in range(len(_operands(ins))))
+                    hbm_traffic += m * (eff_out + in_b)
+                    continue
+            if ins.opcode == "dynamic-update-slice":
+                ops = _operands(ins)
+                upd = shape_bytes(tbl.get(ops[1], "")) if len(ops) > 1 else 0
+                hbm_traffic += m * 2 * upd
+                continue
+            if ins.opcode == "dynamic-slice":
+                hbm_traffic += m * 2 * shape_bytes(ins.type_str)
+                continue
+            if ins.opcode == "scatter":
+                # read-modify-write of the touched region + indices
+                ops = _operands(ins)
+                upd = shape_bytes(tbl.get(ops[-1], "")) if ops else 0
+                idx = shape_bytes(tbl.get(ops[-2], "")) if len(ops) > 1 else 0
+                hbm_traffic += m * (2 * upd + idx)
+                continue
+            if ins.opcode == "gather":
+                ops = _operands(ins)
+                idx = shape_bytes(tbl.get(ops[-1], "")) if ops else 0
+                hbm_traffic += m * (2 * shape_bytes(ins.type_str) + idx)
+                continue
+            out_b = shape_bytes(ins.type_str)
+            in_b = sum(shape_bytes(tbl.get(o, ""))
+                       for o in _operands(ins) if o in tbl)
+            hbm_traffic += m * (out_b + in_b)
+
+    return {
+        "flops_hlo": flops,
+        "collective_bytes": dict(coll_bytes),
+        "collective_bytes_total": sum(coll_bytes.values()),
+        "hbm_traffic_bytes": hbm_traffic,
+        "n_computations": len(comps),
+    }
+
+
+def roofline_terms(parsed: dict, *, n_links: int = 4) -> dict:
+    """Per-device seconds for the three roofline terms."""
+    compute = parsed["flops_hlo"] / hw.PEAK_FLOPS_BF16
+    memory = parsed["hbm_traffic_bytes"] / hw.HBM_BW
+    collective = parsed["collective_bytes_total"] / (n_links * hw.ICI_BW)
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    terms["dominant"] = dom
+    bound = max(compute, memory, collective)
+    terms["roofline_fraction"] = compute / bound if bound > 0 else 0.0
+    return terms
+
+
+def model_flops_per_step(cfg, shape) -> float:
+    """6*N_active*D (+ attention term) — the 'useful' FLOPs yardstick."""
+    tokens = shape.global_batch * shape.seq_len
+    n_active = cfg.active_param_count()
+    base = 6.0 * n_active * tokens
+    # attention score/context flops: 12 * B * S^2 * H * hd per layer (fwd+bwd)
+    attn = 0.0
+    for spec in cfg.layer_specs():
+        if spec.mixer in ("attn", "cross_attn"):
+            s_eff = shape.seq_len
+        elif spec.mixer == "attn_chunked":
+            s_eff = min(cfg.attn_window or shape.seq_len, shape.seq_len)
+        else:
+            continue
+        attn += 12.0 * shape.global_batch * shape.seq_len * s_eff \
+            * cfg.n_heads * cfg.hd * (0.5 if cfg.causal else 1.0)
+    if shape.kind != "train":
+        base /= 3.0   # no backward
+        attn /= 3.0
+    if shape.kind == "decode":
+        base = 2.0 * n_active * shape.global_batch  # one token per seq
+        attn = 0.0  # decode attention is matvec over cache: memory bound
+    return base + attn

@@ -1,0 +1,6 @@
+"""Hardware constants for the roofline model (TPU v5e target)."""
+
+PEAK_FLOPS_BF16 = 197e12      # per chip, bf16
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link
+HBM_BYTES = 16 * 2 ** 30      # 16 GiB per chip

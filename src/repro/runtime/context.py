@@ -1,0 +1,84 @@
+"""Distribution context threaded through model code.
+
+The model layers consult this to decide (a) whether a mesh exists at all
+(smoke tests run on a single device with no mesh), (b) whether the
+data-parallel axes are currently *manual* (inside the secure-aggregation
+``shard_map``) or *auto* (plain GSPMD), and (c) which mesh axes play which
+role.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class DistCtx:
+    mesh: Optional[jax.sharding.Mesh] = None
+    dp_axes: tuple[str, ...] = ()       # data-parallel axes (grad sync)
+    tp_axis: Optional[str] = None       # tensor-parallel axis
+    ep_axis: Optional[str] = None       # expert-parallel axis
+    manual_dp: bool = False             # inside shard_map manual over dp_axes
+    manual_axes: tuple[str, ...] = ()   # mesh axes currently manual
+
+    @property
+    def dp_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        return int(
+            __import__("numpy").prod([self.mesh.shape[a] for a in self.dp_axes])
+        ) if self.dp_axes else 1
+
+    def axis_size(self, name: Optional[str]) -> int:
+        if self.mesh is None or name is None:
+            return 1
+        return self.mesh.shape[name]
+
+
+_CURRENT = DistCtx()
+
+
+def get_ctx() -> DistCtx:
+    return _CURRENT
+
+
+@contextlib.contextmanager
+def use_ctx(ctx: DistCtx):
+    global _CURRENT
+    prev = _CURRENT
+    _CURRENT = ctx
+    try:
+        yield ctx
+    finally:
+        _CURRENT = prev
+
+
+def constrain(x, spec: P):
+    """with_sharding_constraint with manual axes stripped from the spec
+    (inside partial-manual shard_map only the auto axes may be constrained)."""
+    ctx = get_ctx()
+    if ctx.mesh is None:
+        return x
+    manual = set(ctx.manual_axes)
+    names = set(ctx.mesh.axis_names) - manual
+
+    def keep(e):
+        if e is None:
+            return None
+        if isinstance(e, tuple):
+            t = tuple(a for a in e if a in names)
+            return t if t else None
+        return e if e in names else None
+
+    spec = P(*(keep(e) for e in spec))
+    if all(e is None for e in spec):
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(ctx.mesh, spec))
+    except ValueError:
+        return x

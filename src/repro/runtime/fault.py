@@ -1,0 +1,59 @@
+"""Failure injection + restart/straggler policy at the driver level.
+
+TPU slices fail as units; the production recovery path is
+checkpoint/restart with elastic re-mesh (DESIGN §8.6).  This module gives
+the driver:
+
+  * ``FailurePlan`` — deterministic injected failures for tests/examples
+    (step -> kind), including byzantine gradient corruption (handled
+    *inside* the step by the paper's vote) and process crash (handled by
+    restart-from-checkpoint);
+  * ``StepGuard`` — wall-clock deadline per step: a straggling step beyond
+    ``deadline_s`` raises StragglerTimeout so the driver can skip/retry
+    from the last checkpoint.  At tensor scale, per-*member* straggling is
+    absorbed by the vote redundancy (any r of c copies suffice) — that is
+    the paper-level mitigation; this guard covers whole-slice stalls.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+
+class InjectedCrash(RuntimeError):
+    pass
+
+
+class StragglerTimeout(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class FailurePlan:
+    crash_at_steps: tuple[int, ...] = ()
+    byzantine_from_step: Optional[int] = None
+    byzantine_ranks: tuple[int, ...] = ()
+
+    def maybe_crash(self, step: int) -> None:
+        if step in self.crash_at_steps:
+            raise InjectedCrash(f"injected crash at step {step}")
+
+    def byzantine_active(self, step: int) -> bool:
+        return (self.byzantine_from_step is not None
+                and step >= self.byzantine_from_step)
+
+
+@dataclasses.dataclass
+class StepGuard:
+    deadline_s: float = 300.0
+
+    def __enter__(self):
+        self.t0 = time.monotonic()
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        if exc_type is None and time.monotonic() - self.t0 > self.deadline_s:
+            raise StragglerTimeout(
+                f"step exceeded {self.deadline_s}s deadline")
+        return False

@@ -1,0 +1,6 @@
+"""Test config: tests see the default single host device (the 512-device
+forcing lives ONLY in repro.launch.dryrun)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

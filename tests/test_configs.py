@@ -1,0 +1,86 @@
+"""Architecture configs: registry completeness + parameter-count fidelity
+against the published sizes."""
+import pytest
+
+from repro.configs import get_config, get_smoke_config, list_archs, supported_shapes
+
+EXPECTED = {
+    "hubert-xlarge": (0.95e9, 0.15),
+    "qwen3-moe-235b-a22b": (235e9, 0.10),
+    "llama4-maverick-400b-a17b": (400e9, 0.10),
+    "command-r-35b": (35e9, 0.20),
+    "qwen3-1.7b": (1.7e9, 0.10),
+    "qwen1.5-110b": (110e9, 0.10),
+    "olmo-1b": (1.18e9, 0.10),
+    "jamba-v0.1-52b": (52e9, 0.10),
+    "llama-3.2-vision-90b": (90e9, 0.10),
+    "mamba2-370m": (0.37e9, 0.10),
+}
+
+ACTIVE = {
+    "qwen3-moe-235b-a22b": (22e9, 0.15),
+    "llama4-maverick-400b-a17b": (17e9, 0.25),
+    "jamba-v0.1-52b": (12e9, 0.15),
+}
+
+
+def test_all_ten_archs_registered():
+    assert len(list_archs()) == 10
+    assert set(EXPECTED) == set(list_archs())
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED))
+def test_param_count_matches_published(arch):
+    cfg = get_config(arch)
+    want, tol = EXPECTED[arch]
+    got = cfg.param_count()
+    assert abs(got - want) / want < tol, f"{arch}: {got/1e9:.2f}B vs {want/1e9:.2f}B"
+
+
+@pytest.mark.parametrize("arch", sorted(ACTIVE))
+def test_active_params(arch):
+    cfg = get_config(arch)
+    want, tol = ACTIVE[arch]
+    got = cfg.active_param_count()
+    assert abs(got - want) / want < tol
+
+
+def test_shape_skip_rules():
+    assert supported_shapes(get_config("hubert-xlarge")) == \
+        ["train_4k", "prefill_32k"]
+    assert "long_500k" in supported_shapes(get_config("mamba2-370m"))
+    assert "long_500k" in supported_shapes(get_config("jamba-v0.1-52b"))
+    assert "long_500k" in supported_shapes(get_config("llama4-maverick-400b-a17b"))
+    assert "long_500k" not in supported_shapes(get_config("command-r-35b"))
+    assert "long_500k" not in supported_shapes(get_config("qwen1.5-110b"))
+
+
+def test_cell_count_is_32():
+    # 40 nominal - 7 long_500k skips (full-attention archs) - 1 hubert
+    # decode skip (encoder-only; its long_500k skip is in the 7)
+    n = sum(len(supported_shapes(get_config(a))) for a in list_archs())
+    assert n == 32
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED))
+def test_smoke_configs_are_small(arch):
+    cfg = get_smoke_config(arch)
+    assert cfg.param_count() < 50e6
+    assert cfg.n_layers <= 8
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED))
+def test_tp16_divisibility(arch):
+    """Every TP-sharded dim must divide by model=16 on the production mesh."""
+    cfg = get_config(arch)
+    V = -(-cfg.vocab_size // 256) * 256
+    assert V % 16 == 0
+    assert (cfg.n_heads * cfg.hd) % 16 == 0
+    assert (cfg.n_kv_heads * cfg.hd) % 16 == 0
+    if cfg.d_ff:
+        assert cfg.d_ff % 16 == 0
+    if cfg.moe:
+        assert cfg.moe.n_experts % 16 == 0 or cfg.moe.n_experts == 16
+        assert cfg.moe.d_expert % 16 == 0
+    if cfg.ssm:
+        assert (cfg.ssm.expand * cfg.d_model) % 16 == 0

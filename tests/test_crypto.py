@@ -1,0 +1,101 @@
+"""Paillier + threshold decryption (protocol-scale crypto, DESIGN §2.1)."""
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.crypto.limb import (from_limbs, limbs_needed, montgomery_params,
+                               to_limbs, to_mont)
+from repro.crypto.paillier import (PublicKey, keygen, threshold_keygen)
+
+# fixed small safe primes -> fast deterministic tests
+P, Q = 1907, 1823
+
+
+@pytest.fixture(scope="module")
+def kp():
+    return keygen(p=P, q=Q)
+
+
+def test_roundtrip(kp):
+    pk, sk = kp
+    for m in (0, 1, 12345, pk.n - 1):
+        assert sk.decrypt(pk.encrypt(m)) == m
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, P * Q - 1), st.integers(0, P * Q - 1))
+def test_additive_homomorphism(m1, m2):
+    pk, sk = keygen(p=P, q=Q)
+    c = pk.add(pk.encrypt(m1), pk.encrypt(m2))
+    assert sk.decrypt(c) == (m1 + m2) % pk.n
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, P * Q - 1), st.integers(0, 1000))
+def test_affine_scaling(m, k):
+    pk, sk = keygen(p=P, q=Q)
+    assert sk.decrypt(pk.scale(pk.encrypt(m), k)) == (m * k) % pk.n
+
+
+def test_semantic_probabilistic(kp):
+    pk, _ = kp
+    assert pk.encrypt(42) != pk.encrypt(42)
+
+
+def test_rerandomize(kp):
+    pk, sk = kp
+    c = pk.encrypt(7)
+    c2 = pk.rerandomize(c)
+    assert c2 != c and sk.decrypt(c2) == 7
+
+
+@pytest.mark.parametrize("t,c", [(2, 3), (3, 5), (4, 7)])
+def test_threshold_any_t_subset(t, c):
+    import itertools
+    tp, shares = threshold_keygen(t=t, c=c, p=P, q=Q)
+    msg = 31337 % tp.pk.n
+    ct = tp.pk.encrypt(msg)
+    for subset in list(itertools.combinations(shares, t))[:5]:
+        parts = [(s.index, tp.partial_decrypt(ct, s)) for s in subset]
+        assert tp.combine(parts) == msg
+
+
+def test_threshold_below_t_shares_rejected():
+    tp, shares = threshold_keygen(t=3, c=5, p=P, q=Q)
+    ct = tp.pk.encrypt(99)
+    parts = [(s.index, tp.partial_decrypt(ct, s)) for s in shares[:2]]
+    with pytest.raises(AssertionError):
+        tp.combine(parts)
+
+
+def test_threshold_homomorphic_sum():
+    tp, shares = threshold_keygen(t=3, c=5, p=P, q=Q)
+    vals = [3, 14, 15, 92, 65]
+    agg = None
+    for v in vals:
+        ct = tp.pk.encrypt(v)
+        agg = ct if agg is None else tp.pk.add(agg, ct)
+    parts = [(s.index, tp.partial_decrypt(agg, s)) for s in shares[2:5]]
+    assert tp.combine(parts) == sum(vals)
+
+
+# --- limb arithmetic --------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2 ** 256 - 1))
+def test_limb_roundtrip(x):
+    L = limbs_needed(1 << 256)
+    assert from_limbs(to_limbs(x, L)) == x
+
+
+def test_montgomery_params():
+    n = P * Q * 3 + 2  # odd modulus
+    if n % 2 == 0:
+        n += 1
+    L = limbs_needed(n)
+    mp = montgomery_params(n, L)
+    x = 123456789 % n
+    assert (to_mont(x, mp) * pow(mp["R"], -1, n)) % n == x

@@ -1,0 +1,108 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles
+(interpret mode — deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.flash_attention import attention_ref, flash_attention_op
+from repro.kernels.secure_agg import (mask_encrypt_op, mask_encrypt_ref,
+                                      vote_combine_op, vote_combine_ref)
+from repro.kernels.ssd import ssd_op, ssd_ref
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("B,Sq,Skv,H,K,hd,causal,window", [
+    (2, 256, 256, 4, 2, 64, True, 0),
+    (1, 128, 128, 2, 2, 32, False, 0),
+    (1, 512, 512, 4, 1, 64, True, 128),
+    (2, 128, 384, 2, 1, 32, True, 0),
+    (1, 256, 256, 8, 8, 16, True, 0),
+])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_flash_attention_vs_ref(B, Sq, Skv, H, K, hd, causal, window, dtype):
+    q = jnp.asarray(RNG.normal(size=(B, Sq, H, hd)), dtype=dtype)
+    k = jnp.asarray(RNG.normal(size=(B, Skv, K, hd)), dtype=dtype)
+    v = jnp.asarray(RNG.normal(size=(B, Skv, K, hd)), dtype=dtype)
+    out = flash_attention_op(q, k, v, causal=causal, window=window)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-6 if dtype == np.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("BH,S,P,N,chunk", [
+    (4, 256, 64, 32, 64), (2, 128, 32, 16, 128), (8, 512, 64, 64, 128),
+    (1, 64, 16, 8, 32),
+])
+def test_ssd_vs_sequential_ref(BH, S, P, N, chunk):
+    x = jnp.asarray(RNG.normal(size=(BH, S, P)).astype(np.float32))
+    dt = jnp.asarray(np.abs(RNG.normal(size=(BH, S))).astype(np.float32) * 0.1)
+    a = jnp.asarray(-np.abs(RNG.normal(size=(BH,))).astype(np.float32))
+    Bm = jnp.asarray(RNG.normal(size=(BH, S, N)).astype(np.float32))
+    Cm = jnp.asarray(RNG.normal(size=(BH, S, N)).astype(np.float32))
+    y, st_ = ssd_op(x, dt, a, Bm, Cm, chunk=chunk)
+    yr, sr = ssd_ref(x, dt, a, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=5e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(st_), np.asarray(sr),
+                               atol=5e-4, rtol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.sampled_from([1024, 2048, 8192]), st.integers(0, 2 ** 31 - 1),
+       st.sampled_from(["mask", "quantize"]))
+def test_mask_encrypt_kernel_exact(T, seed, mode):
+    rng = np.random.default_rng(seed % 99999)
+    x = jnp.asarray(rng.normal(size=(T,)).astype(np.float32))
+    got = mask_encrypt_op(x, seed % 97, seed % 89, 2.0 ** 20, 1.0, mode=mode)
+    ref = mask_encrypt_ref(x, seed % 97, seed % 89, 2.0 ** 20, 1.0, mode=mode)
+    assert bool(jnp.all(got == ref))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.sampled_from([3, 5]), st.sampled_from([1024, 4096]),
+       st.integers(0, 2 ** 31 - 1))
+def test_vote_combine_kernel_exact(r, T, seed):
+    rng = np.random.default_rng(seed % 99999)
+    copies = jnp.asarray(rng.integers(0, 2 ** 32, size=(r, T), dtype=np.uint32))
+    acc = jnp.asarray(rng.integers(0, 2 ** 32, size=(T,), dtype=np.uint32))
+    assert bool(jnp.all(vote_combine_op(copies, acc)
+                        == vote_combine_ref(copies, acc)))
+
+
+@pytest.mark.parametrize("bits,batch", [(128, 64), (256, 128), (512, 32)])
+def test_mont_mul_kernel_vs_bigint(bits, batch):
+    import secrets
+
+    from repro.crypto.limb import (batch_to_limbs, limbs_needed,
+                                   montgomery_params)
+    from repro.kernels.modmul import mont_mul_int, mont_mul_op, mont_mul_ref
+    n = secrets.randbits(bits) | (1 << (bits - 1)) | 1
+    L = limbs_needed(n)
+    mp = montgomery_params(n, L)
+    avals = [secrets.randbelow(n) for _ in range(batch)]
+    bvals = [secrets.randbelow(n) for _ in range(batch)]
+    a = jnp.asarray(batch_to_limbs(avals, L))
+    b = jnp.asarray(batch_to_limbs(bvals, L))
+    got = mont_mul_op(a, b, jnp.asarray(mp["n_limbs"]), mp["n0inv"])
+    ref = mont_mul_ref(a, b, mp["n_limbs"], mp["n0inv"])
+    truth = mont_mul_int(np.asarray(a), np.asarray(b), n, L)
+    assert bool(jnp.all(got == ref))
+    assert (np.asarray(got) == truth).all()
+
+
+def test_modexp_matches_pow():
+    import secrets
+
+    from repro.crypto.limb import limbs_needed
+    from repro.kernels.modmul import modexp_ints
+    n = secrets.randbits(192) | (1 << 191) | 1
+    L = limbs_needed(n)
+    bases = [secrets.randbelow(n) for _ in range(8)]
+    exps = [secrets.randbelow(1 << 48) for _ in range(8)]
+    assert modexp_ints(bases, exps, n, L) == \
+        [pow(b, e, n) for b, e in zip(bases, exps)]

@@ -1,0 +1,29 @@
+"""Theorem 1 mechanics: sub-logarithmic fan-out gets surrounded w.h.p.;
+Θ(log n) fan-out does not."""
+from repro.core.lower_bound import predicted, surround_probability
+
+
+def test_constant_fanout_surrounded():
+    p = surround_probability(1024, eps=0.25, w_plus=2, trials=60, seed=0)
+    assert p > 0.95
+
+
+def test_log_fanout_safe():
+    import math
+    n = 1024
+    w = int(3 * math.log(n))
+    p = surround_probability(n, eps=0.25, w_plus=w, trials=60, seed=0)
+    assert p < 0.05
+
+
+def test_monotone_in_n_for_constant_w():
+    ps = [surround_probability(n, 0.2, 3, trials=80, seed=1)
+          for n in (64, 512, 4096)]
+    assert ps[-1] >= ps[0]
+
+
+def test_predicted_matches_empirical_direction():
+    for n, w in ((256, 2), (256, 12)):
+        emp = surround_probability(n, 0.25, w, trials=80, seed=2)
+        pred = predicted(n, 0.25, w)
+        assert abs(emp - pred) < 0.35

@@ -1,0 +1,85 @@
+"""Property tests (hypothesis) for the fixed-point masking layer —
+the tensor-scale 'encryption' invariants of DESIGN §2.2."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.masking import (MaskConfig, dequantize, mask,
+                                quantization_error_bound, quantize,
+                                reference_aggregate, unmask_total)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 64), st.floats(0.1, 8.0), st.integers(0, 2 ** 31 - 1))
+def test_quantize_roundtrip_bound(n_nodes, clip, seed):
+    cfg = MaskConfig(n_nodes=n_nodes, clip=clip, mode="none")
+    rng = np.random.default_rng(seed % 2 ** 31)
+    x = jnp.asarray(rng.uniform(-clip, clip, size=(128,)).astype(np.float32))
+    err = np.abs(np.asarray(dequantize(cfg, quantize(cfg, x)) - x))
+    # fixed-point rounding + fp32 representation slack on x and q/scale
+    fp32_slack = 4 * np.finfo(np.float32).eps * clip
+    assert err.max() <= 0.5 / cfg.scale + fp32_slack
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 32), st.integers(0, 10_000))
+def test_mask_unmask_identity_global(n_nodes, seed):
+    """Sum of masked values, unmasked, equals sum of quantized values."""
+    cfg = MaskConfig(n_nodes=n_nodes, clip=1.0, mode="global", seed=seed)
+    rng = np.random.default_rng(seed)
+    xs = jnp.asarray(rng.uniform(-1, 1, (n_nodes, 64)).astype(np.float32))
+    agg = jnp.zeros((64,), jnp.uint32)
+    plain = jnp.zeros((64,), jnp.uint32)
+    for i in range(n_nodes):
+        q = quantize(cfg, xs[i])
+        agg = agg + mask(cfg, q, jnp.int32(i))
+        plain = plain + q
+    assert bool(jnp.all(unmask_total(cfg, agg) == plain))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from([2, 4, 8]), st.integers(1, 8), st.integers(0, 10_000))
+def test_pairwise_masks_cancel_within_cluster(c, g, seed):
+    """Pairwise mode: the sum over each cluster carries no mask residue."""
+    cfg = MaskConfig(n_nodes=c * g, clip=1.0, mode="pairwise",
+                     cluster_size=c, seed=seed)
+    rng = np.random.default_rng(seed)
+    xs = jnp.asarray(rng.uniform(-1, 1, (c * g, 32)).astype(np.float32))
+    for cl in range(g):
+        masked = jnp.zeros((32,), jnp.uint32)
+        plain = jnp.zeros((32,), jnp.uint32)
+        for m_ in range(c):
+            i = cl * c + m_
+            q = quantize(cfg, xs[i])
+            masked = masked + mask(cfg, q, jnp.int32(i))
+            plain = plain + q
+        assert bool(jnp.all(masked == plain))
+
+
+def test_mask_actually_hides():
+    """A masked value must differ from the quantized value (semantic
+    'ciphertext' property at the dataflow level)."""
+    cfg = MaskConfig(n_nodes=4, clip=1.0, mode="global")
+    x = jnp.ones((256,), jnp.float32) * 0.5
+    q = quantize(cfg, x)
+    m0 = mask(cfg, q, jnp.int32(0))
+    m1 = mask(cfg, q, jnp.int32(1))
+    assert not bool(jnp.all(m0 == q))
+    assert not bool(jnp.all(m0 == m1))  # per-node pads differ
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from(["global", "pairwise", "none"]), st.integers(0, 999))
+def test_reference_aggregate_matches_float_sum(mode, seed):
+    n = 8
+    cfg = MaskConfig(n_nodes=n, clip=2.0, mode=mode, cluster_size=4,
+                     seed=seed)
+    rng = np.random.default_rng(seed)
+    xs = jnp.asarray(rng.normal(size=(n, 64)).astype(np.float32) * 0.2)
+    got = np.asarray(reference_aggregate(cfg, xs))
+    want = np.asarray(xs.sum(axis=0))
+    # the float reference sum itself carries n*eps rounding
+    fp32_slack = 2 * n * np.finfo(np.float32).eps * cfg.clip
+    assert np.abs(got - want).max() <= quantization_error_bound(cfg) + fp32_slack

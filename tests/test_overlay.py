@@ -1,0 +1,38 @@
+"""Cuckoo-rule overlay invariants: Θ(log n) clusters with honest majority
+w.h.p. (the paper's Remark 1 precondition)."""
+import pytest
+
+from repro.core.overlay import Overlay, build_overlay
+
+
+@pytest.mark.parametrize("n,tau", [(256, 0.2), (256, 0.3), (512, 0.3)])
+def test_honest_majority_after_bootstrap(n, tau):
+    ov = build_overlay(n, tau, seed=0)
+    inv = ov.check_invariants()
+    assert inv["all_honest_majority"], inv
+    assert inv["min_size"] >= 2
+    assert inv["max_size"] <= 8 * inv["mean_size"]
+
+
+def test_invariants_survive_churn():
+    ov = build_overlay(256, 0.3, seed=1)
+    uids = list(ov.nodes)
+    for i in range(40):  # alternating leave/join
+        ov.leave(uids[i])
+        ov.join(honest=(i % 3 != 0))
+    inv = ov.check_invariants()
+    assert inv["honest_majority_frac"] >= 0.95, inv
+
+
+def test_join_cost_is_polylog():
+    ov = build_overlay(256, 0.3, seed=2)
+    before = ov.stats.messages
+    ov.join(honest=True)
+    cost = ov.stats.messages - before
+    import math
+    assert cost < 60 * math.log2(256) ** 3
+
+
+def test_positions_in_unit_interval():
+    ov = build_overlay(64, 0.2, seed=3)
+    assert all(0.0 <= nd.pos < 1.0 for nd in ov.nodes.values())

@@ -1,0 +1,73 @@
+"""The paper's DA protocol at node scale: exactness under byzantine
+behaviour + communication-complexity scaling (Lemma 1 / §5)."""
+import math
+
+import pytest
+
+from repro.core.baseline_nl import run_nl
+from repro.core.overlay import build_overlay
+from repro.core.protocol import Adversary, DAProtocol, run_da
+
+
+def test_exact_with_honest_nodes():
+    r = run_da(64, tau=0.0, seed=3)
+    assert r.exact
+
+
+@pytest.mark.parametrize("tau", [0.1, 0.3])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_exact_with_byzantine_minority(tau, seed):
+    r = run_da(96, tau=tau, seed=seed,
+               adversary=Adversary(drop_rate=0.3, corrupt_ring=True,
+                                   bad_inputs=True))
+    assert r.exact, (r.output, r.expected)
+
+
+def test_dropouts_do_not_abort():
+    """Malicious nodes refusing to participate: protocol completes and sums
+    the participants (the paper's robustness requirement)."""
+    r = run_da(64, tau=0.3, seed=5,
+               adversary=Adversary(drop_rate=1.0, corrupt_ring=False))
+    assert r.output is not None and r.exact
+
+
+def test_da_communication_scales_quasilinearly():
+    """bytes(n)/n should grow ~ polylog(n): between n=64 and n=512 the
+    per-node growth must stay far below linear (= total quadratic)."""
+    b = {}
+    for n in (64, 512):
+        r = run_da(n, tau=0.3, seed=1)
+        b[n] = r.stats.bytes
+    per_node_growth = (b[512] / 512) / (b[64] / 64)
+    linear_per_node_growth = 512 / 64
+    assert per_node_growth < linear_per_node_growth / 2, b
+    # and the Lemma 1 shape: total <= C * n log^3 n with stable constant
+    cs = [tot / (n * math.log2(n) ** 3) for n, tot in b.items()]
+    assert max(cs) / min(cs) < 2.0, cs
+
+
+def test_nl_is_cubic():
+    a, c = run_nl(16, key_bits=32), run_nl(32, key_bits=32)
+    assert a.exact and c.exact
+    assert abs(c.stats.messages / a.stats.messages - 8.0) < 0.01  # (32/16)^3
+
+
+def test_da_beats_nl_at_scale():
+    da = run_da(512, tau=0.3, seed=0)
+    nl = run_nl(512, crypto_cutoff=0)
+    assert nl.stats.bytes / da.stats.bytes > 30
+
+
+def test_balanced_claim():
+    """(Poly(log n), Poly(log n))-balanced: per-node average bytes stays
+    within polylog growth between sizes."""
+    r1, r2 = run_da(64, seed=2), run_da(512, seed=2)
+    per1 = r1.stats.bytes / 64
+    per2 = r2.stats.bytes / 512
+    assert per2 / per1 < (math.log2(512) / math.log2(64)) ** 3 * 1.5
+
+
+def test_phase_accounting_sums():
+    r = run_da(64, tau=0.2, seed=7)
+    assert sum(r.phase_bytes.values()) == r.stats.bytes
+    assert set(r.phase_bytes) >= {"setup", "local_agg", "ring", "decrypt"}

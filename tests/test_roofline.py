@@ -1,0 +1,56 @@
+"""Roofline HLO parser: validate flop counting (incl. while trip-count
+multiplication) on a program with known FLOPs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.roofline.analysis import analyze_hlo, roofline_terms, shape_bytes
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[4,8]{1,0}") == 128
+    assert shape_bytes("bf16[2,3]") == 12
+    assert shape_bytes("(f32[2], s32[3])") == 20
+
+
+def test_dot_flops_with_scan_multiplier():
+    n_steps, m = 7, 64
+
+    def f(x, w):
+        def body(h, _):
+            return jnp.tanh(h @ w), None
+        h, _ = jax.lax.scan(body, x, None, length=n_steps)
+        return h
+
+    x = jnp.zeros((m, m), jnp.float32)
+    w = jnp.zeros((m, m), jnp.float32)
+    hlo = jax.jit(f).lower(x, w).compile().as_text()
+    p = analyze_hlo(hlo)
+    want = 2 * m * m * m * n_steps
+    assert abs(p["flops_hlo"] - want) / want < 0.01, p["flops_hlo"]
+
+
+def test_nested_while_multiplies():
+    def f(x):
+        def outer(h, _):
+            def inner(h2, _):
+                return h2 @ h2, None
+            h, _ = jax.lax.scan(inner, h, None, length=3)
+            return h, None
+        h, _ = jax.lax.scan(outer, x, None, length=5)
+        return h
+
+    x = jnp.eye(32, dtype=jnp.float32)
+    hlo = jax.jit(f).lower(x).compile().as_text()
+    p = analyze_hlo(hlo)
+    want = 2 * 32 ** 3 * 15
+    assert abs(p["flops_hlo"] - want) / want < 0.01
+
+
+def test_terms_and_dominance():
+    p = {"flops_hlo": 197e12, "hbm_traffic_bytes": 819e9 / 2,
+         "collective_bytes_total": 0.0, "collective_bytes": {}}
+    t = roofline_terms(p)
+    assert t["dominant"] == "compute_s"
+    assert abs(t["compute_s"] - 1.0) < 1e-9
+    assert abs(t["roofline_fraction"] - 1.0) < 1e-9

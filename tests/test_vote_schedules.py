@@ -1,0 +1,97 @@
+"""Majority vote + schedule properties (hypothesis): any vote-minority
+corruption pattern is corrected; every schedule delivers the exact total
+to every cluster."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.byzantine import ByzantineSpec, digest, majority_vote
+from repro.core.schedules import get_schedule, schedule_cost
+from repro.core.secure_allreduce import AggConfig, simulate_secure_allreduce
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.sampled_from([3, 5, 7]), st.integers(0, 10_000))
+def test_vote_corrects_any_minority(r, seed):
+    rng = np.random.default_rng(seed)
+    honest = jnp.asarray(rng.integers(0, 2 ** 32, size=(64,), dtype=np.uint32))
+    n_bad = rng.integers(0, (r - 1) // 2 + 1)  # strictly < r/2
+    copies = np.tile(np.asarray(honest), (r, 1))
+    bad_rows = rng.choice(r, size=n_bad, replace=False)
+    for b in bad_rows:
+        copies[b] = rng.integers(0, 2 ** 32, size=(64,), dtype=np.uint32)
+    got = majority_vote(jnp.asarray(copies))
+    assert bool(jnp.all(got == honest))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from(["ring", "tree", "butterfly"]),
+       st.sampled_from([2, 4, 8, 16]))
+def test_schedule_delivers_total_everywhere(name, g):
+    """Integer simulation at cluster granularity: after the schedule, every
+    cluster's accumulator equals the sum of all cluster locals."""
+    rng = np.random.default_rng(g)
+    locals_ = rng.integers(0, 1000, size=(g,)).astype(np.int64)
+    acc = locals_.copy()
+    for rnd in get_schedule(name, g):
+        recv = np.zeros_like(acc)
+        for dst, src in enumerate(rnd.recv_from):
+            if src is not None:
+                recv[dst] = acc[src]
+        new = acc.copy()
+        for dst, src in enumerate(rnd.recv_from):
+            if src is None:
+                continue
+            if rnd.combine == "add":
+                new[dst] = acc[dst] + recv[dst]
+            elif rnd.combine == "local_plus":
+                new[dst] = locals_[dst] + recv[dst]
+            else:
+                new[dst] = recv[dst]
+        acc = new
+    assert (acc == locals_.sum()).all(), (name, g, acc)
+
+
+def test_schedule_round_counts():
+    assert len(get_schedule("ring", 8)) == 7
+    assert len(get_schedule("tree", 8)) == 6      # log2(8)*2
+    assert len(get_schedule("butterfly", 8)) == 3  # log2(8)
+
+
+def test_digest_transport_cost_is_cheaper():
+    full = schedule_cost("ring", 8, 4, 3, payload_bytes=1 << 20)
+    dig = schedule_cost("ring", 8, 4, 3, payload_bytes=1 << 20, digest=True)
+    assert dig["bytes_total"] < full["bytes_total"] / 2.5
+
+
+def test_butterfly_fewer_rounds_same_volume_per_round():
+    ring = schedule_cost("ring", 16, 4, 3, payload_bytes=1 << 20)
+    bfly = schedule_cost("butterfly", 16, 4, 3, payload_bytes=1 << 20)
+    assert bfly["rounds"] == 4 and ring["rounds"] == 15
+    assert bfly["bytes_total"] < ring["bytes_total"]
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from(["ring", "tree", "butterfly"]),
+       st.integers(0, 1000))
+def test_simulated_allreduce_with_byzantine_minority(schedule, seed):
+    n, c = 16, 4
+    rng = np.random.default_rng(seed)
+    xs = jnp.asarray(rng.normal(size=(n, 32)).astype(np.float32) * 0.3)
+    corrupt = tuple(int(cl * c + rng.integers(0, c)) for cl in range(n // c))
+    cfg = AggConfig(n_nodes=n, cluster_size=c, redundancy=3,
+                    schedule=schedule, clip=2.0,
+                    byzantine=ByzantineSpec(corrupt_ranks=corrupt,
+                                            mode="garbage"))
+    out = np.asarray(simulate_secure_allreduce(xs, cfg))
+    want = np.asarray(xs.sum(0))
+    assert np.abs(out - want[None]).max() < 1e-4
+
+
+def test_digest_distinguishes_corruption():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(0, 2 ** 32, size=(4096,), dtype=np.uint32))
+    y = x.at[123].add(1)
+    assert not bool(jnp.all(digest(x) == digest(y)))
