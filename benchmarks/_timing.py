@@ -1,0 +1,15 @@
+"""Shared timing harness so every benchmark records comparable numbers."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_call(f, *a, reps: int = 5) -> float:
+    """us per call after one warmup (compile) call."""
+    jax.block_until_ready(f(*a))
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(f(*a))
+    return (time.time() - t0) / reps * 1e6

@@ -1,25 +1,21 @@
-"""Pallas kernel microbenchmarks (interpret mode on CPU: correctness +
-relative cost only; real perf numbers require TPU hardware)."""
+"""Pallas kernel microbenchmarks.  The execution engine comes from
+``repro.kernels.backend`` — native Mosaic on TPU, the Pallas interpreter
+elsewhere (CPU interpret numbers are correctness + relative cost only)."""
 from __future__ import annotations
-
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks._timing import time_call
+
+from repro.kernels import backend
 from repro.kernels.flash_attention import attention_ref, flash_attention_op
-from repro.kernels.secure_agg import mask_encrypt_op, vote_combine_op
+from repro.kernels.secure_agg import (mask_encrypt_op, unmask_decrypt_op,
+                                      vote_combine_op)
 from repro.kernels.ssd import ssd_op, ssd_ref
 
-
-def _time(f, *a, reps=3):
-    f(*a)
-    jax.block_until_ready(f(*a))
-    t0 = time.time()
-    for _ in range(reps):
-        jax.block_until_ready(f(*a))
-    return (time.time() - t0) / reps * 1e6
+PALLAS = backend.pallas_impl()
 
 
 def run(full: bool = False) -> None:
@@ -28,8 +24,8 @@ def run(full: bool = False) -> None:
     q = jnp.asarray(rng.normal(size=(B, S, H, hd)).astype(np.float32))
     k = jnp.asarray(rng.normal(size=(B, S, K, hd)).astype(np.float32))
     v = jnp.asarray(rng.normal(size=(B, S, K, hd)).astype(np.float32))
-    us = _time(lambda *a: flash_attention_op(*a, causal=True), q, k, v)
-    ref_us = _time(lambda *a: attention_ref(*a, causal=True), q, k, v)
+    us = time_call(lambda *a: flash_attention_op(*a, causal=True), q, k, v)
+    ref_us = time_call(lambda *a: attention_ref(*a, causal=True), q, k, v)
     print(f"kernel_flash_attn_S{S},{us:.0f},interp_vs_ref={us/ref_us:.1f}x")
 
     BH, P, N = 4, 64, 64
@@ -38,16 +34,23 @@ def run(full: bool = False) -> None:
     a = jnp.asarray(-np.abs(rng.normal(size=(BH,))).astype(np.float32))
     Bm = jnp.asarray(rng.normal(size=(BH, S, N)).astype(np.float32))
     Cm = jnp.asarray(rng.normal(size=(BH, S, N)).astype(np.float32))
-    us = _time(lambda *args: ssd_op(*args, chunk=128)[0], x, dt, a, Bm, Cm)
+    us = time_call(lambda *args: ssd_op(*args, chunk=128)[0], x, dt, a, Bm, Cm)
     print(f"kernel_ssd_S{S},{us:.0f},chunk=128")
 
     T = 1 << 16
     xx = jnp.asarray(rng.normal(size=(T,)).astype(np.float32))
-    us = _time(lambda z: mask_encrypt_op(z, 3, 42, 2.0 ** 20, 1.0), xx)
+    us = time_call(lambda z: mask_encrypt_op(z, 3, 42, 2.0 ** 20, 1.0,
+                                             impl=PALLAS), xx)
     print(f"kernel_mask_encrypt_T{T},{us:.0f},fused_quant_mask")
 
-    copies = jnp.asarray(rng.integers(0, 2 ** 32, size=(3, T),
-                                      dtype=np.uint32))
+    agg = jnp.asarray(rng.integers(0, 2 ** 32, size=(T,), dtype=np.uint32))
+    us = time_call(lambda a: unmask_decrypt_op(a, 64, 42, 2.0 ** 20,
+                                               impl=PALLAS), agg)
+    print(f"kernel_unmask_decrypt_n64_T{T},{us:.0f},fori_pad_chain")
+
+    copies = tuple(jnp.asarray(rng.integers(0, 2 ** 32, size=(T,),
+                                            dtype=np.uint32))
+                   for _ in range(3))
     acc = jnp.asarray(rng.integers(0, 2 ** 32, size=(T,), dtype=np.uint32))
-    us = _time(vote_combine_op, copies, acc)
+    us = time_call(lambda *c: vote_combine_op(c, acc, impl=PALLAS), *copies)
     print(f"kernel_vote_combine_r3_T{T},{us:.0f},median_network")

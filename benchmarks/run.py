@@ -4,15 +4,59 @@ benches.  Prints ``name,us_per_call,derived`` CSV rows.
     PYTHONPATH=src python -m benchmarks.run             # quick set
     PYTHONPATH=src python -m benchmarks.run --full      # everything
     PYTHONPATH=src python -m benchmarks.run --only comm_cost
+    PYTHONPATH=src python -m benchmarks.run --only secure_allreduce \\
+        --json BENCH_secure_agg.json    # machine-readable {name: us}
+
+``--json`` captures every CSV row whose us_per_call column parses as a
+number and writes ``{name: us_per_call}`` — the perf trajectory file
+future PRs diff against.
 """
 import argparse
+import contextlib
+import io
+import json
 import sys
+
+
+class _Tee(io.TextIOBase):
+    """Mirror writes to the real stdout while buffering for parsing."""
+
+    def __init__(self, stream):
+        self._stream = stream
+        self._buf = io.StringIO()
+
+    def write(self, s):
+        self._stream.write(s)
+        self._buf.write(s)
+        return len(s)
+
+    def flush(self):
+        self._stream.flush()
+
+    def getvalue(self):
+        return self._buf.getvalue()
+
+
+def parse_rows(text: str) -> dict:
+    """CSV rows 'name,us,derived' -> {name: us} for numeric us columns."""
+    rows = {}
+    for line in text.splitlines():
+        parts = line.strip().split(",")
+        if len(parts) < 2:
+            continue
+        try:
+            rows[parts[0]] = float(parts[1])
+        except ValueError:
+            continue
+    return rows
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only")
+    ap.add_argument("--json", dest="json_path",
+                    help="write {name: us_per_call} for all numeric rows")
     args = ap.parse_args()
 
     from benchmarks import (comm_cost, crypto_breakdown, kernels,
@@ -25,14 +69,20 @@ def main() -> None:
         "kernels": kernels.run,                    # pallas kernel microbench
     }
     names = [args.only] if args.only else list(table)
-    print("name,us_per_call,derived")
+    tee = _Tee(sys.stdout)
     ok = True
-    for n in names:
-        try:
-            table[n](full=args.full)
-        except Exception as e:  # pragma: no cover
-            ok = False
-            print(f"{n},ERROR,{e!r}")
+    with contextlib.redirect_stdout(tee):
+        print("name,us_per_call,derived")
+        for n in names:
+            try:
+                table[n](full=args.full)
+            except Exception as e:  # pragma: no cover
+                ok = False
+                print(f"{n},ERROR,{e!r}")
+    if args.json_path:
+        with open(args.json_path, "w") as f:
+            json.dump(parse_rows(tee.getvalue()), f, indent=2, sort_keys=True)
+            f.write("\n")
     sys.exit(0 if ok else 1)
 
 

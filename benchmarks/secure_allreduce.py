@@ -1,16 +1,49 @@
 """Tensor-scale secure aggregation: analytic bytes/rounds per schedule ×
-transport (the §Perf levers) + single-host wall time of the simulation
-oracle (numerics cost: quantize+mask+vote)."""
+transport (the §Perf levers), single-host wall time of the simulation
+oracle, and the per-stage hot path at T=1M elements — fused dispatch-layer
+ops vs the seed's pure-jnp path (threefry pads, unrolled O(n) unmask loop,
+stacked (r, T) vote) so the speedup is recorded in BENCH_secure_agg.json."""
 from __future__ import annotations
 
-import time
+import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks._timing import time_call
+
 from repro.core.schedules import schedule_cost
 from repro.core.secure_allreduce import AggConfig, simulate_secure_allreduce
+from repro.kernels.secure_agg import (mask_encrypt_op, unmask_decrypt_op,
+                                      vote_combine_op)
+
+# --- the seed hot path, kept verbatim for the perf trajectory ---------------
+
+
+def _legacy_pad(seed: int, node_id, shape):
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), node_id)
+    return jax.random.bits(key, shape, dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "clip", "seed"))
+def _legacy_mask(x, node_id, seed=7, scale=2.0 ** 20, clip=1.0):
+    q = jnp.round(jnp.clip(x, -clip, clip) * scale).astype(jnp.int32)
+    return q.astype(jnp.uint32) + _legacy_pad(seed, node_id, x.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "scale", "seed"))
+def _legacy_unmask(agg, n_nodes, seed=7, scale=2.0 ** 20):
+    total_pad = jnp.zeros(agg.shape, jnp.uint32)
+    for i in range(n_nodes):  # unrolled O(n) threefry chain (the seed code)
+        total_pad = total_pad + _legacy_pad(seed, i, agg.shape)
+    return (agg - total_pad).astype(jnp.int32).astype(jnp.float32) / scale
+
+
+@jax.jit
+def _legacy_vote(copies, acc):
+    r = copies.shape[0]
+    return acc + jnp.sort(copies, axis=0)[r // 2]  # materialized (r, T)
 
 
 def run(full: bool = False) -> None:
@@ -33,10 +66,35 @@ def run(full: bool = False) -> None:
                         schedule=sched, clip=2.0)
         f = jax.jit(lambda x: simulate_secure_allreduce(x, cfg))
         f(xs).block_until_ready()
-        t0 = time.time()
-        reps = 5
-        for _ in range(reps):
-            f(xs).block_until_ready()
-        us = (time.time() - t0) / reps * 1e6
+        us = time_call(f, xs)
         err = float(jnp.max(jnp.abs(f(xs)[0] - xs.sum(0))))
         print(f"secure_agg_sim_{sched}_n{n},{us:.0f},max_err={err:.2e}")
+
+    # --- per-stage hot path at T=1M, fused ops vs the seed jnp path ---
+    T, n_nodes, r = 1 << 20, 64, 3
+    x = jnp.asarray(rng.normal(size=(T,)).astype(np.float32) * 0.1)
+    agg = jnp.asarray(rng.integers(0, 2 ** 32, size=(T,), dtype=np.uint32))
+    copies = [jnp.asarray(rng.integers(0, 2 ** 32, size=(T,),
+                                       dtype=np.uint32)) for _ in range(r)]
+    acc = jnp.asarray(rng.integers(0, 2 ** 32, size=(T,), dtype=np.uint32))
+
+    us_mask = time_call(lambda z: mask_encrypt_op(z, 3, 7, 2.0 ** 20, 1.0), x)
+    us_mask_old = time_call(lambda z: _legacy_mask(z, 3), x)
+    print(f"secure_agg_hotpath_mask_T1M,{us_mask:.0f},"
+          f"legacy={us_mask_old:.0f}us;speedup={us_mask_old/us_mask:.2f}x")
+    print(f"secure_agg_hotpath_mask_legacy_T1M,{us_mask_old:.0f},threefry")
+
+    us_un = time_call(lambda a: unmask_decrypt_op(a, n_nodes, 7, 2.0 ** 20),
+                      agg)
+    us_un_old = time_call(lambda a: _legacy_unmask(a, n_nodes), agg)
+    print(f"secure_agg_hotpath_unmask_n{n_nodes}_T1M,{us_un:.0f},"
+          f"legacy={us_un_old:.0f}us;speedup={us_un_old/us_un:.2f}x")
+    print(f"secure_agg_hotpath_unmask_legacy_n{n_nodes}_T1M,{us_un_old:.0f},"
+          f"unrolled_threefry_chain")
+
+    us_v = time_call(lambda *c: vote_combine_op(c, acc), *copies)
+    us_v_old = time_call(lambda *c: _legacy_vote(jnp.stack(c), acc), *copies)
+    print(f"secure_agg_hotpath_vote_r{r}_T1M,{us_v:.0f},"
+          f"legacy={us_v_old:.0f}us;speedup={us_v_old/us_v:.2f}x")
+    print(f"secure_agg_hotpath_vote_legacy_r{r}_T1M,{us_v_old:.0f},"
+          f"stacked_sort")

@@ -25,6 +25,15 @@ def majority_vote(copies: jax.Array) -> jax.Array:
     return jnp.sort(copies, axis=0)[r // 2]
 
 
+def majority_vote_list(copies: Sequence[jax.Array]) -> jax.Array:
+    """Element-wise majority over r *separate* arrays (r odd) — the
+    kernel layer's odd-even min/max network, so no (r, ...) buffer is
+    ever stacked and the result is bit-identical to ``vote_combine``."""
+    from repro.kernels.secure_agg.secure_agg import median_network
+    assert len(copies) % 2 == 1, "vote redundancy must be odd"
+    return median_network(list(copies))
+
+
 def digest(x: jax.Array, n_words: int = 16) -> jax.Array:
     """Keyed mixing checksum of a uint32 tensor -> (n_words,) uint32.
 

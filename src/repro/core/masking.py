@@ -5,14 +5,23 @@ paper's Paillier encryption at tensor scale (DESIGN §2.2/§5):
 
   * values are quantized to signed fixed point and reinterpreted as uint32;
   * addition mod 2^32 of masked values == masked addition (homomorphism);
-  * one-time pads are threefry PRF outputs keyed by (session key, node id);
+  * one-time pads are counter-based splitmix32 streams keyed by
+    (session seed, node id) and indexed by the element's global flat
+    position — the *same* stream the Pallas ``mask_encrypt`` /
+    ``unmask_decrypt`` kernels generate, so the jnp and kernel paths are
+    bit-identical and any contiguous chunk of the stream can be produced
+    independently (``offset``); the PRF has 32-bit key entropy — it
+    models the paper's ciphertext *dataflow* at tensor scale (the
+    production-grade layer is the Paillier code in ``crypto/``), though
+    the keyed construction admits no shortcut below the 2^32 search;
   * summation of <= n_nodes values stays within the headroom chosen by
     ``scale_for`` so the wrapped signed sum is exact.
 
 Masking modes:
   * "global"   — pad_i = PRF(key, i); partial aggregates stay masked along
                  the whole ring (paper-faithful ciphertext flow); the final
-                 "threshold decryption" subtracts sum_i pad_i.
+                 "threshold decryption" subtracts sum_i pad_i via a
+                 ``fori_loop`` (O(1) program size in n_nodes).
   * "pairwise" — SecAgg-style pads that cancel within each cluster, so the
                  cluster-local aggregate emerges unmasked (beyond-paper
                  optimization: no unmask pass; cluster aggregates public).
@@ -22,10 +31,15 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.secure_agg.ref import ctr_stream, total_pad
+from repro.kernels.secure_agg.secure_agg import pad_stream
+
+# keys for pairwise pads live in a disjoint space from per-node keys
+PAIRWISE_KEY_BASE = 1 << 20
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,49 +69,59 @@ def quantize(cfg: MaskConfig, x: jax.Array) -> jax.Array:
 
 
 def dequantize(cfg: MaskConfig, q: jax.Array) -> jax.Array:
-    return q.astype(jnp.int32).astype(jnp.float32) / cfg.scale
+    return q.astype(jnp.int32).astype(jnp.float32) / jnp.float32(cfg.scale)
 
 
-def _pad(cfg: MaskConfig, node_id, shape) -> jax.Array:
-    key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), node_id)
-    return jax.random.bits(key, shape, dtype=jnp.uint32)
+def _pad(cfg: MaskConfig, key_id, shape, offset=0) -> jax.Array:
+    """Counter-based pad over the flat element positions of ``shape``."""
+    n = math.prod(shape)
+    return pad_stream(jnp.uint32(cfg.seed),
+                      jnp.asarray(key_id).astype(jnp.uint32),
+                      ctr_stream(n, offset)).reshape(shape)
 
 
-def mask(cfg: MaskConfig, q: jax.Array, node_id) -> jax.Array:
+def pairwise_pad(cfg: MaskConfig, node_id, shape, offset=0) -> jax.Array:
+    """Pairwise-cancelling pad for ``node_id`` within its cluster:
+    mask_i = sum_{j in cluster, j>i} PRF(ij) - sum_{j<i} PRF(ij)."""
+    c = cfg.cluster_size
+    cluster = node_id // c
+    member = node_id % c
+    total = jnp.zeros(shape, jnp.uint32)
+    for other in range(c):
+        # seed for unordered pair {member, other} within this cluster
+        lo = jnp.minimum(member, other)
+        hi = jnp.maximum(member, other)
+        pair_id = cluster * c * c + lo * c + hi
+        p = _pad(cfg, pair_id + PAIRWISE_KEY_BASE, shape, offset=offset)
+        sign = jnp.where(member < other, jnp.uint32(1), jnp.uint32(0))
+        contrib = jnp.where(sign == 1, p, jnp.uint32(0) - p)
+        contrib = jnp.where(member == other, jnp.uint32(0), contrib)
+        total = total + contrib
+    return total
+
+
+def mask(cfg: MaskConfig, q: jax.Array, node_id, offset=0) -> jax.Array:
     """Apply this node's pad. ``node_id`` may be a traced scalar."""
     if cfg.mode == "none":
         return q
     if cfg.mode == "global":
-        return q + _pad(cfg, node_id, q.shape)
+        return q + _pad(cfg, node_id, q.shape, offset=offset)
     if cfg.mode == "pairwise":
-        # pairwise-cancelling within the node's cluster:
-        #   mask_i = sum_{j in cluster, j>i} PRF(ij) - sum_{j<i} PRF(ij)
-        c = cfg.cluster_size
-        cluster = node_id // c
-        member = node_id % c
-        total = jnp.zeros(q.shape, jnp.uint32)
-        for other in range(c):
-            # seed for unordered pair {member, other} within this cluster
-            lo = jnp.minimum(member, other)
-            hi = jnp.maximum(member, other)
-            pair_id = cluster * c * c + lo * c + hi
-            p = _pad(cfg, pair_id + (1 << 20), q.shape)
-            sign = jnp.where(member < other, jnp.uint32(1), jnp.uint32(0))
-            contrib = jnp.where(sign == 1, p, jnp.uint32(0) - p)
-            contrib = jnp.where(member == other, jnp.uint32(0), contrib)
-            total = total + contrib
-        return q + total
+        return q + pairwise_pad(cfg, node_id, q.shape, offset=offset)
     raise ValueError(cfg.mode)
 
 
-def unmask_total(cfg: MaskConfig, agg: jax.Array) -> jax.Array:
-    """Remove the aggregate pad ("threshold decryption", DESIGN §2.2)."""
+def unmask_total(cfg: MaskConfig, agg: jax.Array, offset=0) -> jax.Array:
+    """Remove the aggregate pad ("threshold decryption", DESIGN §2.2).
+
+    The n-way total pad is accumulated in a ``fori_loop`` so the traced
+    program stays O(1) in n_nodes (the kernel path fuses this with
+    dequantize — see ``unmask_decrypt``)."""
     if cfg.mode in ("none", "pairwise"):
         return agg  # pairwise pads cancel within clusters by construction
-    total_pad = jnp.zeros(agg.shape, jnp.uint32)
-    for i in range(cfg.n_nodes):
-        total_pad = total_pad + _pad(cfg, i, agg.shape)
-    return agg - total_pad
+    n = math.prod(agg.shape)
+    return agg - total_pad(cfg.n_nodes, cfg.seed, n,
+                           offset).reshape(agg.shape)
 
 
 # ---------------------------------------------------------------------------

@@ -5,13 +5,26 @@ the paper's protocol (Steps 1-4) as a drop-in replacement for gradient
 Node = DP rank (flat index over the dp axes).  Cluster = ``c`` contiguous
 ranks.  Per aggregation:
 
-  1. quantize + mask                      (Step 1: "encrypt")
+  1. fused quantize + mask                (Step 1: "encrypt")
   2. intra-cluster modular psum           (Steps 1-2: secure broadcast +
                                            local aggregate — every member
                                            holds the identical masked sum)
   3. schedule rounds over clusters via ppermute, receiving r redundant
      copies and taking the element-wise majority (Step 3)
-  4. unmask + dequantize                  (Step 4: "threshold decryption")
+  4. fused unmask + dequantize            (Step 4: "threshold decryption")
+
+Every tensor stage runs on the kernel dispatch layer
+(``repro.kernels.secure_agg``): native Pallas on TPU, the bit-identical
+jnp reference elsewhere.  The hot path is one fused pass per stage —
+no (r, T) stacked vote buffer (copies are combined as separate operands)
+and no unrolled per-node pad chain (the n-way unmask is a single
+``fori_loop``), so the traced program size is independent of ``n_nodes``.
+
+Payloads are processed as fixed-size *chunks*: ``secure_allreduce_tree``
+packs the gradient pytree into equal chunks instead of one giant
+concatenated payload, and each round issues chunk k+1's ``ppermute``
+before voting chunk k (double-buffered software pipeline — XLA's latency
+hiding scheduler overlaps the hop with the vote).
 
 Two transports:
   * full   — r full copies per hop (paper-faithful; r x bandwidth)
@@ -23,7 +36,6 @@ Must be called inside a ``shard_map`` that is *manual* over ``dp_axes``.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional, Sequence
 
 import jax
@@ -31,8 +43,11 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import schedules as SCH
-from repro.core.byzantine import ByzantineSpec, digest, majority_vote
-from repro.core.masking import MaskConfig, dequantize, mask, quantize, unmask_total
+from repro.core.byzantine import ByzantineSpec, digest, majority_vote_list
+from repro.core.masking import MaskConfig, pairwise_pad
+from repro.kernels.secure_agg import (mask_encrypt_fn, unmask_decrypt_fn,
+                                      vote_combine_fn)
+from repro.runtime import compat
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,6 +69,11 @@ class AggConfig:
     guard_bits: int = 2
     seed: int = 0x5EC0A66
     byzantine: ByzantineSpec = ByzantineSpec()
+    # chunked transport: pytree payloads are packed into equal chunks of
+    # this many float32 elements; each hop is pipelined chunk-by-chunk.
+    chunk_elems: int = 1 << 16
+    # kernel engine override (None = auto per backend; see kernels/backend)
+    kernel_impl: Optional[str] = None
 
     def __post_init__(self):
         assert self.n_nodes % self.cluster_size == 0
@@ -98,6 +118,35 @@ def _intra_cluster_groups(cfg: AggConfig) -> list[list[int]]:
 
 
 # ---------------------------------------------------------------------------
+# Encrypt / decrypt stages (kernel dispatch layer)
+# ---------------------------------------------------------------------------
+
+
+def _encrypt_chunk(cfg: AggConfig, mcfg: MaskConfig, chunk: jax.Array,
+                   node_id, offset: int) -> jax.Array:
+    """Fused clip+quantize+pad of one flat float chunk -> uint32."""
+    if mcfg.mode == "global":
+        return mask_encrypt_fn(chunk, node_id, mcfg.seed, mcfg.scale,
+                               mcfg.clip, mode="mask", offset=offset,
+                               impl=cfg.kernel_impl)
+    q = mask_encrypt_fn(chunk, node_id, mcfg.seed, mcfg.scale, mcfg.clip,
+                        mode="quantize", offset=offset, impl=cfg.kernel_impl)
+    if mcfg.mode == "pairwise":
+        # pairwise pads cancel inside the cluster psum (no unmask pass);
+        # jnp-only for now — see ROADMAP "Hot path" for the kernel gap
+        q = q + pairwise_pad(mcfg, node_id, q.shape, offset=offset)
+    return q
+
+
+def _decrypt_chunk(cfg: AggConfig, mcfg: MaskConfig, acc: jax.Array,
+                   offset: int) -> jax.Array:
+    """Fused total-pad removal + dequantize of one uint32 chunk."""
+    mode = "mask" if mcfg.mode == "global" else "dequantize"
+    return unmask_decrypt_fn(acc, mcfg.n_nodes, mcfg.seed, mcfg.scale,
+                             mode=mode, offset=offset, impl=cfg.kernel_impl)
+
+
+# ---------------------------------------------------------------------------
 # Manual-mode core (inside shard_map over dp axes)
 # ---------------------------------------------------------------------------
 
@@ -105,8 +154,110 @@ def _intra_cluster_groups(cfg: AggConfig) -> list[list[int]]:
 def _flat_node_id(dp_axes: Sequence[str]) -> jax.Array:
     nid = jnp.zeros((), jnp.int32)
     for ax in dp_axes:
-        nid = nid * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+        nid = nid * compat.axis_size(ax) + jax.lax.axis_index(ax)
     return nid
+
+
+def _vote_base(rnd: SCH.Round, acc: jax.Array, local: jax.Array) -> jax.Array:
+    if rnd.combine == "add":
+        return acc
+    if rnd.combine == "local_plus":
+        return local
+    return jnp.zeros_like(acc)  # replace (tree broadcast-down)
+
+
+def _run_schedule(cfg: AggConfig, dp_axes: tuple, node_id, accs: list):
+    """Voted cluster schedule over a list of equal-size uint32 chunks.
+
+    Per round, chunk k+1's hop collectives are issued before chunk k's
+    vote so communication overlaps vote compute (double buffering)."""
+    rounds = SCH.get_schedule(cfg.schedule, cfg.n_clusters)
+    r = cfg.redundancy
+    byz = cfg.byzantine
+    locals_ = list(accs)  # cluster-local aggregates, fixed for ring rotation
+    K = len(accs)
+
+    for rnd in rounds:
+        perms = [_hop_perm(cfg, rnd.recv_from, s) for s in range(r)]
+        participates = jnp.zeros((), bool)
+        for cl, src in enumerate(rnd.recv_from):
+            if src is not None:
+                in_cl = (node_id // cfg.cluster_size) == cl
+                participates = participates | in_cl
+        # fault injection happens on the SENT value (a corrupt member
+        # corrupts every copy it forwards)
+        sent = [byz.corrupt(a, node_id) for a in accs]
+
+        if cfg.transport == "full":
+            def hop(k):
+                return [jax.lax.ppermute(sent[k], dp_axes, perms[s])
+                        for s in range(r)]
+        else:
+            perm_backup = _hop_perm(cfg, rnd.recv_from, 1)
+
+            def hop(k):
+                payload = jax.lax.ppermute(sent[k], dp_axes, perms[0])
+                dg = digest(sent[k], cfg.digest_words)
+                dg_copies = [jax.lax.ppermute(dg, dp_axes, perms[s])
+                             for s in range(r)]
+                backup = (jax.lax.ppermute(sent[k], dp_axes, perm_backup)
+                          if cfg.digest_backup else None)
+                return payload, dg_copies, backup
+
+        inflight = hop(0)
+        new_accs = []
+        for k in range(K):
+            nxt = hop(k + 1) if k + 1 < K else None  # issue before voting
+            base = _vote_base(rnd, accs[k], locals_[k])
+            if cfg.transport == "full":
+                voted = vote_combine_fn(inflight, base, impl=cfg.kernel_impl)
+            else:  # digest transport: one full payload + r digest votes
+                payload, dg_copies, backup = inflight
+                dg_major = majority_vote_list(dg_copies)
+                ok = jnp.all(digest(payload, cfg.digest_words) == dg_major)
+                if cfg.digest_backup:
+                    # eager fallback stream for a corrupt copy-0 sender
+                    recv = jnp.where(ok, payload, backup)
+                else:
+                    # happy path: digest mismatch would trigger a
+                    # retransmission round (modeled analytically); the
+                    # barrier keeps the verification live in the program
+                    payload, ok = jax.lax.optimization_barrier((payload, ok))
+                    recv = payload
+                voted = base + recv
+            new_accs.append(jnp.where(participates, voted, accs[k]))
+            inflight = nxt
+        accs = new_accs
+    return accs
+
+
+def _secure_allreduce_chunks(chunks: list, cfg: AggConfig,
+                             dp_axes: tuple) -> list:
+    """The full protocol over a list of equal-size flat float32 chunks;
+    chunk k covers pad-stream offsets [k*size, (k+1)*size)."""
+    mcfg = cfg.mask_cfg()
+    node_id = _flat_node_id(dp_axes)
+    size = chunks[0].shape[0]
+    offsets = [k * size for k in range(len(chunks))]
+
+    # --- Step 1: encrypt (fused quantize+mask kernel) ---
+    qs = [_encrypt_chunk(cfg, mcfg, ch, node_id, off)
+          for ch, off in zip(chunks, offsets)]
+
+    # --- Steps 1-2: intra-cluster local aggregate (modular sum) ---
+    if cfg.cluster_size > 1:
+        groups = _intra_cluster_groups(cfg)
+        accs = [jax.lax.psum(q, dp_axes, axis_index_groups=groups)
+                for q in qs]
+    else:
+        accs = qs
+
+    # --- Step 3: cluster schedule with redundant voted hops ---
+    accs = _run_schedule(cfg, dp_axes, node_id, accs)
+
+    # --- Step 4: threshold decryption (fused unmask+dequantize kernel) ---
+    return [_decrypt_chunk(cfg, mcfg, a, off)
+            for a, off in zip(accs, offsets)]
 
 
 def secure_allreduce_manual(x: jax.Array, cfg: AggConfig,
@@ -116,86 +267,74 @@ def secure_allreduce_manual(x: jax.Array, cfg: AggConfig,
     Call inside shard_map manual over ``dp_axes``. Returns float32 sum.
     """
     dp_axes = tuple(dp_axes)
-    mcfg = cfg.mask_cfg()
-    node_id = _flat_node_id(dp_axes)
-    byz = cfg.byzantine
+    flat = x.reshape(-1).astype(jnp.float32)
+    (out,) = _secure_allreduce_chunks([flat], cfg, dp_axes)
+    return out.reshape(x.shape)
 
-    shape = x.shape
-    q = mask(mcfg, quantize(mcfg, x), node_id)
 
-    # --- Steps 1-2: intra-cluster local aggregate (modular sum) ---
-    groups = _intra_cluster_groups(cfg)
-    if cfg.cluster_size > 1:
-        acc = jax.lax.psum(q, dp_axes, axis_index_groups=groups)
-    else:
-        acc = q
+# ---------------------------------------------------------------------------
+# Pytree payloads: pack leaves into fixed-size chunks (no giant concat)
+# ---------------------------------------------------------------------------
 
-    # --- Step 3: cluster schedule with redundant voted hops ---
-    rounds = SCH.get_schedule(cfg.schedule, cfg.n_clusters)
-    r = cfg.redundancy
-    local = acc  # cluster-local aggregate, fixed for ring rotation
-    for rnd in rounds:
-        # fault injection happens on the SENT value (a corrupt member
-        # corrupts every copy it forwards)
-        sent = byz.corrupt(acc, node_id)
-        if cfg.transport == "full":
-            copies = []
-            for s in range(r):
-                perm = _hop_perm(cfg, rnd.recv_from, s)
-                copies.append(jax.lax.ppermute(sent, dp_axes, perm))
-            recv = majority_vote(jnp.stack(copies))
-        else:  # digest transport: one full payload + r digest votes
-            perm0 = _hop_perm(cfg, rnd.recv_from, 0)
-            payload = jax.lax.ppermute(sent, dp_axes, perm0)
-            dg = digest(sent, cfg.digest_words)
-            dg_copies = []
-            for s in range(r):
-                perm = _hop_perm(cfg, rnd.recv_from, s)
-                dg_copies.append(jax.lax.ppermute(dg, dp_axes, perm))
-            dg_major = majority_vote(jnp.stack(dg_copies))
-            ok = jnp.all(digest(payload, cfg.digest_words) == dg_major)
-            if cfg.digest_backup:
-                # eager fallback stream for a corrupt copy-0 sender
-                perm1 = _hop_perm(cfg, rnd.recv_from, 1)
-                backup = jax.lax.ppermute(sent, dp_axes, perm1)
-                recv = jnp.where(ok, payload, backup)
-            else:
-                # happy path: digest mismatch would trigger a retransmission
-                # round (modeled analytically); the barrier keeps the digest
-                # verification live in the compiled program
-                payload, ok = jax.lax.optimization_barrier((payload, ok))
-                recv = payload
-        participates = jnp.zeros((), bool)
-        for cl, src in enumerate(rnd.recv_from):
-            if src is not None:
-                in_cl = (node_id // cfg.cluster_size) == cl
-                participates = participates | in_cl
-        if rnd.combine == "add":
-            new_acc = acc + recv
-        elif rnd.combine == "local_plus":
-            new_acc = local + recv
-        else:  # replace (tree broadcast-down)
-            new_acc = recv
-        acc = jnp.where(participates, new_acc, acc)
 
-    # --- Step 4: threshold decryption ---
-    total = unmask_total(mcfg, acc)
-    return dequantize(mcfg, total)
+def _pack_chunks(leaves: list, chunk_elems: int) -> list:
+    """Flatten leaves into equal chunks of ``chunk_elems`` float32 elements
+    (last chunk zero-padded).  The max live buffer is one chunk — the
+    whole gradient is never concatenated into a single payload."""
+    pieces = [l.reshape(-1).astype(jnp.float32) for l in leaves
+              if l.size > 0]
+    total = sum(p.shape[0] for p in pieces)
+    chunk_elems = min(chunk_elems, total)
+    chunks, cur, cur_n = [], [], 0
+    for p in pieces:
+        pos = 0
+        while pos < p.shape[0]:
+            take = min(chunk_elems - cur_n, p.shape[0] - pos)
+            cur.append(p[pos:pos + take])
+            cur_n += take
+            pos += take
+            if cur_n == chunk_elems:
+                chunks.append(cur[0] if len(cur) == 1
+                              else jnp.concatenate(cur))
+                cur, cur_n = [], 0
+    if cur_n:
+        cur.append(jnp.zeros((chunk_elems - cur_n,), jnp.float32))
+        chunks.append(jnp.concatenate(cur))
+    return chunks
+
+
+def _unpack_chunks(chunks: list, leaves: list) -> list:
+    """Inverse of ``_pack_chunks``: re-slice summed chunks into leaves."""
+    size = chunks[0].shape[0]
+    outs, off = [], 0
+    for l in leaves:
+        if l.size == 0:
+            outs.append(jnp.zeros(l.shape, l.dtype))
+            continue
+        need, parts = l.size, []
+        while need:
+            k, j = divmod(off, size)
+            take = min(need, size - j)
+            parts.append(chunks[k][j:j + take])
+            off += take
+            need -= take
+        flat = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+        outs.append(flat.reshape(l.shape).astype(l.dtype))
+    return outs
 
 
 def secure_allreduce_tree(tree, cfg: AggConfig, dp_axes: Sequence[str]):
-    """Apply to a pytree, concatenating leaves into one flat payload so the
-    per-hop vote covers the entire gradient in one collective sequence."""
+    """Apply to a pytree.  Leaves are packed into fixed-size chunks
+    (``cfg.chunk_elems``) and the voted hops are software-pipelined over
+    the chunks, so hop communication overlaps vote compute and no
+    gradient-sized payload is ever materialized."""
+    dp_axes = tuple(dp_axes)
     leaves, treedef = jax.tree.flatten(tree)
-    sizes = [l.size for l in leaves]
-    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
-    out = secure_allreduce_manual(flat, cfg, dp_axes)
-    outs = []
-    off = 0
-    for l, sz in zip(leaves, sizes):
-        outs.append(out[off:off + sz].reshape(l.shape).astype(l.dtype))
-        off += sz
-    return jax.tree.unflatten(treedef, outs)
+    chunks = _pack_chunks(leaves, cfg.chunk_elems)
+    if not chunks:  # every leaf zero-size: nothing to aggregate
+        return tree
+    outs = _secure_allreduce_chunks(chunks, cfg, dp_axes)
+    return jax.tree.unflatten(treedef, _unpack_chunks(outs, leaves))
 
 
 # ---------------------------------------------------------------------------
@@ -210,37 +349,45 @@ def secure_allreduce_sharded(x, mesh: jax.sharding.Mesh, cfg: AggConfig,
     value (fully replicated over dp_axes)."""
     dp_axes = tuple(dp_axes)
     in_spec = in_spec if in_spec is not None else P(dp_axes)
-    other = tuple(a for a in mesh.axis_names if a not in dp_axes)
 
     def body(xs):
         local = xs.reshape(xs.shape[1:]) if xs.shape[0] == 1 else xs[0]
         return secure_allreduce_manual(local, cfg, dp_axes)[None]
 
-    fn = jax.shard_map(body, mesh=mesh, in_specs=(in_spec,),
-                       out_specs=in_spec,
-                       check_vma=False)
-    out = fn(x)
-    return out
+    fn = compat.shard_map(body, mesh=mesh, in_specs=(in_spec,),
+                          out_specs=in_spec,
+                          check_vma=False)
+    return fn(x)
 
 
 # ---------------------------------------------------------------------------
 # Single-device simulation oracle (node axis explicit) — matches the
 # distributed implementation bit-for-bit, including byzantine voting.
+# Runs the dispatch layer's jnp engine (vmap-safe by construction).
 # ---------------------------------------------------------------------------
 
 
 def simulate_secure_allreduce(xs: jax.Array, cfg: AggConfig) -> jax.Array:
     """xs: (n_nodes, ...) -> per-node results (n_nodes, ...), emulating the
     full schedule with voting + injected corruption on a single device."""
+    from repro.kernels import backend
     n, c, g, r = cfg.n_nodes, cfg.cluster_size, cfg.n_clusters, cfg.redundancy
     mcfg = cfg.mask_cfg()
     byz = cfg.byzantine
+    # honor an explicit engine (cfg or REPRO_KERNEL_IMPL); the whole oracle
+    # runs under vmap, where the interpreter and jnp paths are safe but
+    # native Mosaic batching is not — demote only "pallas" to "jnp"
+    impl = backend.resolve(cfg.kernel_impl)
+    jcfg = dataclasses.replace(
+        cfg, kernel_impl="jnp" if impl == "pallas" else impl)
     ids = jnp.arange(n, dtype=jnp.int32)
-    q = jax.vmap(lambda x, i: mask(mcfg, quantize(mcfg, x), i))(xs, ids)
+    item_shape = xs.shape[1:]
+    flat = xs.reshape(n, -1)
+    q = jax.vmap(lambda x, i: _encrypt_chunk(jcfg, mcfg, x, i, 0))(flat, ids)
 
     # intra-cluster sums, replicated to members
-    acc = q.reshape(g, c, *q.shape[1:]).sum(axis=1, dtype=jnp.uint32)
-    acc = jnp.repeat(acc[:, None], c, axis=1).reshape(n, *q.shape[1:])
+    acc = q.reshape(g, c, -1).sum(axis=1, dtype=jnp.uint32)
+    acc = jnp.repeat(acc[:, None], c, axis=1).reshape(n, -1)
 
     rounds = SCH.get_schedule(cfg.schedule, g)
     local = acc
@@ -252,9 +399,8 @@ def simulate_secure_allreduce(xs: jax.Array, cfg: AggConfig) -> jax.Array:
                 continue
             for m in range(c):
                 dst = cl * c + m
-                copies = jnp.stack([sent[src_cl * c + (m + s) % c]
-                                    for s in range(r)])
-                recv = majority_vote(copies)
+                copies = [sent[src_cl * c + (m + s) % c] for s in range(r)]
+                recv = majority_vote_list(copies)
                 if rnd.combine == "add":
                     val = acc[dst] + recv
                 elif rnd.combine == "local_plus":
@@ -264,5 +410,5 @@ def simulate_secure_allreduce(xs: jax.Array, cfg: AggConfig) -> jax.Array:
                 new_acc = new_acc.at[dst].set(val)
         acc = new_acc
 
-    out = jax.vmap(lambda a: dequantize(mcfg, unmask_total(mcfg, a)))(acc)
-    return out
+    out = jax.vmap(lambda a: _decrypt_chunk(jcfg, mcfg, a, 0))(acc)
+    return out.reshape(n, *item_shape)

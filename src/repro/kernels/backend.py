@@ -1,0 +1,78 @@
+"""Kernel backend selection — one place that decides how every repro
+kernel executes for the current process:
+
+  * ``pallas``           — native Pallas lowering (TPU: Mosaic).
+  * ``pallas_interpret`` — Pallas interpreter (any backend; used for
+                           kernel-vs-reference equivalence tests and for
+                           debugging on CPU).
+  * ``jnp``              — the pure-jnp reference path (bit-identical to
+                           the kernels by construction; fastest option on
+                           CPU/GPU where no Mosaic lowering exists).
+
+The protocol layer (``core/secure_allreduce``) and the jit'd op wrappers
+ask :func:`resolve` instead of hard-coding ``interpret=True``, so the same
+program compiles natively on TPU and falls back gracefully elsewhere.
+
+``REPRO_KERNEL_IMPL`` overrides the automatic choice (useful to force
+``pallas_interpret`` in CI or ``jnp`` on a TPU host for A/B timing).
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+
+IMPLS = ("pallas", "pallas_interpret", "jnp")
+
+
+@functools.lru_cache(maxsize=None)
+def _auto_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def default_impl() -> str:
+    """Auto-select the kernel implementation for ``jax.default_backend()``.
+
+    The env override is re-read on every call (tests monkeypatch it);
+    only the backend query is cached."""
+    env = os.environ.get("REPRO_KERNEL_IMPL", "").strip().lower()
+    if env:
+        if env not in IMPLS:
+            raise ValueError(
+                f"REPRO_KERNEL_IMPL={env!r} not in {IMPLS}")
+        return env
+    return _auto_impl()
+
+
+def resolve(impl: Optional[str]) -> str:
+    """Resolve an explicit/None impl request to a concrete choice."""
+    if impl is None:
+        return default_impl()
+    if impl not in IMPLS:
+        raise ValueError(f"impl={impl!r} not in {IMPLS}")
+    return impl
+
+
+def pallas_impl() -> str:
+    """The Pallas flavour for this backend (for kernel micro-benchmarks
+    and equivalence tests that must exercise the kernel, never the jnp
+    fallback)."""
+    return "pallas" if jax.default_backend() == "tpu" else "pallas_interpret"
+
+
+def interpret_default(interpret: Optional[bool] = None) -> bool:
+    """Resolve an ``interpret=`` kwarg: None -> follow the process-wide
+    impl choice (so ``REPRO_KERNEL_IMPL`` reaches every kernel package):
+    native under ``pallas``, interpreter under ``pallas_interpret``, and
+    for ``jnp`` (a choice raw-kernel callers can't honor) native on TPU,
+    interpreter elsewhere."""
+    if interpret is not None:
+        return interpret
+    impl = default_impl()
+    if impl == "pallas":
+        return False
+    if impl == "pallas_interpret":
+        return True
+    return jax.default_backend() != "tpu"

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import backend
+
 NEG_INF = -1e30
 
 
@@ -67,7 +69,7 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: int = 0,
                     bq: int = 128, bkv: int = 128,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: Optional[bool] = None) -> jax.Array:
     """q: (B, Sq, H, hd); k/v: (B, Skv, K, hd).  Returns (B, Sq, H, hd)."""
     B, Sq, H, hd = q.shape
     _, Skv, K, _ = k.shape
@@ -103,6 +105,6 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pltpu.VMEM((bq,), jnp.float32),
             pltpu.VMEM((bq,), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=backend.interpret_default(interpret),
     )(qr, kr, vr)
     return out.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)

@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 
@@ -10,6 +11,6 @@ from repro.kernels.flash_attention.flash_attention import flash_attention
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "interpret"))
 def flash_attention_op(q, k, v, causal: bool = True, window: int = 0,
-                       interpret: bool = True):
+                       interpret: Optional[bool] = None):
     return flash_attention(q, k, v, causal=causal, window=window,
                            interpret=interpret)

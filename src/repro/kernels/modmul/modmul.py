@@ -21,12 +21,15 @@ Grid: (batch_blocks,); block = (bb, L) uint32 in VMEM; the limb loop is a
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import backend
 
 LIMB_BITS = 16
 MASK = np.uint32(0xFFFF)
@@ -90,7 +93,8 @@ def _kernel(a_ref, b_ref, n_ref, meta_ref, o_ref, *, L: int):
 
 
 def mont_mul(a: jax.Array, b: jax.Array, n_limbs: jax.Array, n0inv,
-             *, block: int = 128, interpret: bool = True) -> jax.Array:
+             *, block: int = 128,
+             interpret: Optional[bool] = None) -> jax.Array:
     """a, b: (batch, L) uint32 Montgomery-domain operands."""
     batch, L = a.shape
     block = min(block, batch)
@@ -108,5 +112,5 @@ def mont_mul(a: jax.Array, b: jax.Array, n_limbs: jax.Array, n0inv,
         ],
         out_specs=pl.BlockSpec((block, L), lambda ib: (ib, 0)),
         out_shape=jax.ShapeDtypeStruct((batch, L), jnp.uint32),
-        interpret=interpret,
+        interpret=backend.interpret_default(interpret),
     )(a.astype(jnp.uint32), b.astype(jnp.uint32), nl, meta)

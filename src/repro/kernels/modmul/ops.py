@@ -3,6 +3,7 @@
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -14,13 +15,13 @@ from repro.kernels.modmul.modmul import mont_mul
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def mont_mul_op(a, b, n_limbs, n0inv, interpret: bool = True):
+def mont_mul_op(a, b, n_limbs, n0inv, interpret: Optional[bool] = None):
     return mont_mul(a, b, n_limbs, jnp.asarray(n0inv, jnp.uint32),
                     interpret=interpret)
 
 
 def mont_exp_op(a, e_bits, n_limbs, n0inv, one_mont, *,
-                interpret: bool = True):
+                interpret: Optional[bool] = None):
     """Batched left-to-right square-and-multiply.
 
     a: (batch, L) Montgomery-domain bases; e_bits: (batch, nbits) uint32
@@ -40,7 +41,7 @@ def mont_exp_op(a, e_bits, n_limbs, n0inv, one_mont, *,
 
 
 def modexp_ints(bases: list[int], exps: list[int], n: int, L: int,
-                interpret: bool = True) -> list[int]:
+                interpret: Optional[bool] = None) -> list[int]:
     """Convenience: batched c^e mod n over Python ints via the kernel."""
     mp = montgomery_params(n, L)
     nbits = max(e.bit_length() for e in exps) or 1

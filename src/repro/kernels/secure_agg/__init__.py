@@ -1,2 +1,8 @@
-from repro.kernels.secure_agg.ops import mask_encrypt_op, vote_combine_op
-from repro.kernels.secure_agg.ref import mask_encrypt_ref, vote_combine_ref
+from repro.kernels.secure_agg.ops import (mask_encrypt_fn, mask_encrypt_op,
+                                          unmask_decrypt_fn,
+                                          unmask_decrypt_op, vote_combine_fn,
+                                          vote_combine_op)
+from repro.kernels.secure_agg.ref import (mask_encrypt_ref,
+                                          unmask_decrypt_ref,
+                                          vote_combine_ref)
+from repro.kernels.secure_agg.secure_agg import pad_stream, splitmix32

@@ -1,21 +1,80 @@
-"""Jit'd public wrappers for the secure aggregation kernels."""
+"""Dispatch layer for the secure-aggregation hot path.
+
+Every protocol stage goes through one of these ops; ``impl`` selects the
+execution engine (``pallas`` / ``pallas_interpret`` / ``jnp``), defaulting
+to :func:`repro.kernels.backend.default_impl` — native Pallas on TPU, the
+bit-identical jnp reference elsewhere.  The un-jitted ``*_fn`` variants
+are for callers that are already inside jit/shard_map (the protocol); the
+``*_op`` wrappers are jitted entry points for tests and benchmarks.
+"""
 from __future__ import annotations
 
 import functools
+from typing import Optional, Sequence, Union
 
 import jax
 
-from repro.kernels.secure_agg.secure_agg import mask_encrypt, vote_combine
+from repro.kernels import backend
+from repro.kernels.secure_agg import ref as R
+from repro.kernels.secure_agg.secure_agg import (mask_encrypt,
+                                                 unmask_decrypt,
+                                                 vote_combine)
+
+
+def _interp(impl: str) -> bool:
+    return impl != "pallas"
+
+
+def mask_encrypt_fn(x, node_id, seed, scale: float, clip: float,
+                    mode: str = "mask", offset=0,
+                    impl: Optional[str] = None) -> jax.Array:
+    """Fused clip+quantize(+pad) of a flat float payload -> uint32."""
+    impl = backend.resolve(impl)
+    if impl == "jnp":
+        return R.mask_encrypt_ref(x, node_id, seed, scale, clip, mode=mode,
+                                  offset=offset)
+    return mask_encrypt(x, node_id, seed, scale, clip, mode=mode,
+                        offset=offset, interpret=_interp(impl))
+
+
+def unmask_decrypt_fn(agg, n_nodes: int, seed, scale: float,
+                      mode: str = "mask", offset=0,
+                      impl: Optional[str] = None) -> jax.Array:
+    """Fused n-way total-pad removal + dequantize -> float32."""
+    impl = backend.resolve(impl)
+    if impl == "jnp":
+        return R.unmask_decrypt_ref(agg, n_nodes, seed, scale, mode=mode,
+                                    offset=offset)
+    return unmask_decrypt(agg, n_nodes, seed, scale, mode=mode,
+                          offset=offset, interpret=_interp(impl))
+
+
+def vote_combine_fn(copies: Union[jax.Array, Sequence[jax.Array]], acc,
+                    impl: Optional[str] = None) -> jax.Array:
+    """acc + majority(copies); copies is a list of r flat uint32 arrays
+    (or a stacked (r, T) array for back-compat)."""
+    impl = backend.resolve(impl)
+    if impl == "jnp":
+        return R.vote_combine_ref(copies, acc)
+    return vote_combine(copies, acc, interpret=_interp(impl))
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("scale", "clip", "mode", "interpret"))
-def mask_encrypt_op(x, node_id, seed, scale, clip, mode="mask",
-                    interpret: bool = True):
-    return mask_encrypt(x, node_id, seed, scale, clip, mode=mode,
-                        interpret=interpret)
+                   static_argnames=("scale", "clip", "mode", "impl"))
+def mask_encrypt_op(x, node_id, seed, scale, clip, mode="mask", offset=0,
+                    impl: Optional[str] = None):
+    return mask_encrypt_fn(x, node_id, seed, scale, clip, mode=mode,
+                           offset=offset, impl=impl)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def vote_combine_op(copies, acc, interpret: bool = True):
-    return vote_combine(copies, acc, interpret=interpret)
+@functools.partial(jax.jit,
+                   static_argnames=("n_nodes", "scale", "mode", "impl"))
+def unmask_decrypt_op(agg, n_nodes, seed, scale, mode="mask", offset=0,
+                      impl: Optional[str] = None):
+    return unmask_decrypt_fn(agg, n_nodes, seed, scale, mode=mode,
+                             offset=offset, impl=impl)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def vote_combine_op(copies, acc, impl: Optional[str] = None):
+    return vote_combine_fn(copies, acc, impl=impl)

@@ -1,25 +1,62 @@
-"""Pure-jnp oracle for the secure_agg kernels."""
+"""Pure-jnp oracle for the secure_agg kernels — bit-identical to the
+Pallas path by construction (same splitmix32 pad stream, same fixed-point
+rounding), and the implementation the dispatch layer selects on backends
+without a native Pallas lowering.  Every function keeps O(1) program
+size: the n-way unmask is a ``fori_loop``, the vote is a min/max network
+over separate arrays (no (r, T) stack)."""
 from __future__ import annotations
+
+from typing import Sequence, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.secure_agg.secure_agg import MIX1, splitmix32
+from repro.kernels.secure_agg.secure_agg import (as_copy_list,
+                                                 median_network, pad_stream)
+
+
+def ctr_stream(T: int, offset) -> jax.Array:
+    """uint32 PRF counter positions for a flat chunk of length T starting
+    at global element ``offset`` — the single definition the masking
+    layer and both unmask paths share."""
+    return jnp.asarray(offset).astype(jnp.uint32) + \
+        jnp.arange(T, dtype=jnp.uint32)
+
+
+def total_pad(n_nodes: int, seed, T: int, offset=0) -> jax.Array:
+    """sum_{i<n_nodes} pad_stream(seed, i, ctr) via ``fori_loop`` —
+    O(1) program size in n_nodes (the jnp mirror of the in-kernel loop
+    in ``unmask_decrypt``)."""
+    seed_u = jnp.asarray(seed).astype(jnp.uint32)
+    ctr = ctr_stream(T, offset)
+
+    def body(i, acc):
+        return acc + pad_stream(seed_u, jnp.uint32(i), ctr)
+
+    return jax.lax.fori_loop(0, int(n_nodes), body,
+                             jnp.zeros((T,), jnp.uint32))
 
 
 def mask_encrypt_ref(x: jax.Array, node_id, seed, scale: float, clip: float,
-                     mode: str = "mask") -> jax.Array:
+                     mode: str = "mask", offset=0) -> jax.Array:
     xq = jnp.clip(x.astype(jnp.float32), -clip, clip) * jnp.float32(scale)
     q = jnp.round(xq).astype(jnp.int32).astype(jnp.uint32)
     if mode == "mask":
-        ctr = jnp.arange(x.shape[0], dtype=jnp.uint32)
-        seed = jnp.asarray(seed, jnp.uint32)
-        node_id = jnp.asarray(node_id, jnp.uint32)
-        stream = splitmix32(splitmix32(seed ^ node_id * MIX1) ^ ctr)
-        q = q + stream
+        seed = jnp.asarray(seed).astype(jnp.uint32)
+        node_id = jnp.asarray(node_id).astype(jnp.uint32)
+        q = q + pad_stream(seed, node_id, ctr_stream(x.shape[0], offset))
     return q
 
 
-def vote_combine_ref(copies: jax.Array, acc: jax.Array) -> jax.Array:
-    r = copies.shape[0]
-    return acc + jnp.sort(copies, axis=0)[r // 2]
+def unmask_decrypt_ref(agg: jax.Array, n_nodes: int, seed, scale: float,
+                       mode: str = "mask", offset=0) -> jax.Array:
+    if mode == "mask":
+        agg = agg - total_pad(n_nodes, seed, agg.shape[0], offset)
+    return agg.astype(jnp.int32).astype(jnp.float32) / jnp.float32(scale)
+
+
+def vote_combine_ref(copies: Union[jax.Array, Sequence[jax.Array]],
+                     acc: jax.Array) -> jax.Array:
+    copies = as_copy_list(copies)
+    assert len(copies) % 2 == 1
+    return acc + median_network(copies)

@@ -1,18 +1,28 @@
 """Secure-aggregation Pallas TPU kernels (the paper's per-step hot path,
-DESIGN §2.2):
+DESIGN §2.2) — one fused VMEM pass per protocol stage:
 
-  * ``mask_encrypt``  — fused clip + fixed-point quantize + PRF pad-add over
+  * ``mask_encrypt``   — clip + fixed-point quantize + PRF pad-add over
     Z_{2^32}.  The pad is a counter-based splitmix32 stream keyed by
-    (seed, node_id, element index): one fused VMEM pass instead of
-    separate clip/round/cast/bits/add HLOs.
-  * ``vote_combine``  — element-wise majority (median network) over r
-    redundant uint32 copies fused with the ring accumulate add.
+    (seed, node_id) and indexed by the global element position, so the
+    same stream can be produced chunk-by-chunk (``offset``) and the
+    aggregate pad can be regenerated without per-node state.
+  * ``unmask_decrypt`` — the "threshold decryption": subtract the n-way
+    total pad (in-kernel ``fori_loop`` over node ids — O(1) program size,
+    one VMEM pass regardless of n_nodes) fused with dequantize.
+  * ``vote_combine``   — element-wise majority (odd-even sort network)
+    over r redundant uint32 copies fused with the ring accumulate add.
+    Copies arrive as r *separate* operands so no (r, T) buffer is ever
+    materialized by the caller.
 
-Both are grid-tiled over flat element blocks (8*128-aligned).
+All kernels use (8, 128)-aligned 2-D tiles (the float32/uint32 VPU tile)
+so they compile natively on TPU; arbitrary flat lengths are handled by
+internal padding + a final slice.  ``interpret=None`` defers to
+``repro.kernels.backend`` (native on TPU, interpreter elsewhere).
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -20,10 +30,15 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import backend
+
 # numpy literals (not traced arrays) so pallas kernels don't capture consts
 GOLDEN = np.uint32(0x9E3779B9)
 MIX1 = np.uint32(0x85EBCA6B)
 MIX2 = np.uint32(0xC2B2AE35)
+
+LANES = 128      # TPU lane count (last tile dim)
+SUBLANES = 8     # float32/uint32 sublane count (second-to-last tile dim)
 
 
 def splitmix32(x: jax.Array) -> jax.Array:
@@ -34,80 +49,203 @@ def splitmix32(x: jax.Array) -> jax.Array:
     return x ^ (x >> 16)
 
 
-def _mask_kernel(x_ref, meta_ref, o_ref, *, block: int, mode: str):
-    ib = pl.program_id(0)
-    seed = meta_ref[0]
-    node_id = meta_ref[1]
-    scale = jax.lax.bitcast_convert_type(meta_ref[2], jnp.float32)
-    clip = jax.lax.bitcast_convert_type(meta_ref[3], jnp.float32)
+def pad_stream(seed, key_id, ctr: jax.Array) -> jax.Array:
+    """The masking one-time pad: PRF(seed, key_id) evaluated at counter
+    positions ``ctr`` (all uint32).  Shared by the Pallas kernels and the
+    jnp reference/masking layer so both paths are bit-identical.
 
+    Two independent subkeys are derived per (seed, key_id) and the second
+    is added *outside* the mixer: a single known plaintext element yields
+    one equation in two unknowns, and differencing two known elements
+    still leaves a nonlinear relation in ``k1`` — no algebraic inversion,
+    only a 2^32 key search (the entropy bound of this 32-bit toy scale;
+    see masking.py for the trust-model caveat)."""
+    k1 = splitmix32(seed ^ key_id * MIX1)
+    k2 = splitmix32(k1 ^ MIX2)
+    return splitmix32(ctr ^ k1) + k2
+
+
+# ---------------------------------------------------------------------------
+# 2-D tiling helpers: flat (T,) -> (rows, 128) padded to whole tiles
+# ---------------------------------------------------------------------------
+
+
+def _tile_rows(T: int, block_rows: int) -> tuple[int, int]:
+    """(rows_per_tile, padded_rows) for a flat length T."""
+    rows = pl.cdiv(T, LANES)
+    tr = min(block_rows, pl.cdiv(rows, SUBLANES) * SUBLANES)
+    tr = max(SUBLANES, (tr // SUBLANES) * SUBLANES)
+    rows_p = pl.cdiv(rows, tr) * tr
+    return tr, rows_p
+
+
+def _to_tiles(x: jax.Array, rows_p: int) -> jax.Array:
+    T = x.shape[0]
+    pad = rows_p * LANES - T
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
+    return x.reshape(rows_p, LANES)
+
+
+def _ctr_tile(meta_off, ib, tr: int) -> jax.Array:
+    """Global flat element index of every lane in tile ``ib`` (uint32)."""
+    base = meta_off + jnp.uint32(ib * tr * LANES)
+    row = jax.lax.broadcasted_iota(jnp.uint32, (tr, LANES), 0)
+    col = jax.lax.broadcasted_iota(jnp.uint32, (tr, LANES), 1)
+    return base + row * jnp.uint32(LANES) + col
+
+
+# ---------------------------------------------------------------------------
+# mask_encrypt: clip + quantize + pad-add
+# ---------------------------------------------------------------------------
+
+
+def _mask_kernel(x_ref, meta_ref, o_ref, *, tr: int, scale: float,
+                 clip: float, mode: str):
+    ib = pl.program_id(0)
     x = x_ref[...].astype(jnp.float32)
-    xq = jnp.clip(x, -clip, clip) * scale
-    # round-to-nearest-even then two's-complement reinterpret
+    xq = jnp.clip(x, -jnp.float32(clip), jnp.float32(clip)) * jnp.float32(scale)
     q = jnp.round(xq).astype(jnp.int32).astype(jnp.uint32)
     if mode == "mask":
-        ctr = (jnp.uint32(ib * block)
-               + jax.lax.broadcasted_iota(jnp.uint32, (block,), 0))
-        stream = splitmix32(splitmix32(seed ^ node_id * MIX1) ^ ctr)
-        q = q + stream
+        ctr = _ctr_tile(meta_ref[2], ib, tr)
+        q = q + pad_stream(meta_ref[0], meta_ref[1], ctr)
     o_ref[...] = q
 
 
 def mask_encrypt(x: jax.Array, node_id, seed, scale: float, clip: float,
-                 *, mode: str = "mask", block: int = 1024,
-                 interpret: bool = True) -> jax.Array:
-    """x: flat (T,) float -> masked uint32 (T,). T must divide by block."""
+                 *, mode: str = "mask", offset=0, block_rows: int = 256,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """x: flat (T,) float -> quantized(+masked) uint32 (T,), any T.
+
+    ``offset`` shifts the PRF counter so chunked calls reproduce the same
+    stream as one monolithic call over the concatenated payload.
+    """
     (T,) = x.shape
-    block = min(block, T)
-    assert T % block == 0
-    meta = jnp.stack([
-        jnp.asarray(seed, jnp.uint32),
-        jnp.asarray(node_id, jnp.uint32),
-        jax.lax.bitcast_convert_type(jnp.float32(scale), jnp.uint32),
-        jax.lax.bitcast_convert_type(jnp.float32(clip), jnp.uint32),
-    ])
-    return pl.pallas_call(
-        functools.partial(_mask_kernel, block=block, mode=mode),
-        grid=(T // block,),
+    tr, rows_p = _tile_rows(T, block_rows)
+    x2 = _to_tiles(x.astype(jnp.float32), rows_p)
+    meta = jnp.stack([jnp.asarray(seed).astype(jnp.uint32),
+                      jnp.asarray(node_id).astype(jnp.uint32),
+                      jnp.asarray(offset).astype(jnp.uint32)])
+    out = pl.pallas_call(
+        functools.partial(_mask_kernel, tr=tr, scale=scale, clip=clip,
+                          mode=mode),
+        grid=(rows_p // tr,),
         in_specs=[
-            pl.BlockSpec((block,), lambda ib: (ib,)),
+            pl.BlockSpec((tr, LANES), lambda ib: (ib, 0)),
             pl.BlockSpec(memory_space=pltpu.SMEM),
         ],
-        out_specs=pl.BlockSpec((block,), lambda ib: (ib,)),
-        out_shape=jax.ShapeDtypeStruct((T,), jnp.uint32),
-        interpret=interpret,
-    )(x, meta)
+        out_specs=pl.BlockSpec((tr, LANES), lambda ib: (ib, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows_p, LANES), jnp.uint32),
+        interpret=backend.interpret_default(interpret),
+    )(x2, meta)
+    return out.reshape(-1)[:T]
 
 
-def _vote_kernel(copies_ref, acc_ref, o_ref, *, r: int):
-    c = copies_ref[...]  # (r, block)
-    acc = acc_ref[...]
-    # odd-even transposition sort network over the r axis (r is tiny)
-    rows = [c[i] for i in range(r)]
+# ---------------------------------------------------------------------------
+# unmask_decrypt: subtract n-way total pad (fori_loop) + dequantize
+# ---------------------------------------------------------------------------
+
+
+def _unmask_kernel(agg_ref, meta_ref, o_ref, *, tr: int, n_nodes: int,
+                   scale: float, mode: str):
+    ib = pl.program_id(0)
+    agg = agg_ref[...]
+    if mode == "mask":
+        seed = meta_ref[0]
+        ctr = _ctr_tile(meta_ref[1], ib, tr)
+
+        def body(i, acc):
+            return acc + pad_stream(seed, jnp.uint32(i), ctr)
+
+        total_pad = jax.lax.fori_loop(
+            0, n_nodes, body, jnp.zeros((tr, LANES), jnp.uint32))
+        agg = agg - total_pad
+    o_ref[...] = agg.astype(jnp.int32).astype(jnp.float32) / jnp.float32(scale)
+
+
+def unmask_decrypt(agg: jax.Array, n_nodes: int, seed, scale: float,
+                   *, mode: str = "mask", offset=0, block_rows: int = 256,
+                   interpret: Optional[bool] = None) -> jax.Array:
+    """agg: flat (T,) uint32 aggregate -> float32 (T,) decrypted sum.
+
+    mode "mask" removes the n-way global pad then dequantizes; mode
+    "dequantize" only dequantizes (pairwise pads cancel / no masking).
+    """
+    (T,) = agg.shape
+    tr, rows_p = _tile_rows(T, block_rows)
+    a2 = _to_tiles(agg, rows_p)
+    meta = jnp.stack([jnp.asarray(seed).astype(jnp.uint32),
+                      jnp.asarray(offset).astype(jnp.uint32)])
+    out = pl.pallas_call(
+        functools.partial(_unmask_kernel, tr=tr, n_nodes=int(n_nodes),
+                          scale=scale, mode=mode),
+        grid=(rows_p // tr,),
+        in_specs=[
+            pl.BlockSpec((tr, LANES), lambda ib: (ib, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((tr, LANES), lambda ib: (ib, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows_p, LANES), jnp.float32),
+        interpret=backend.interpret_default(interpret),
+    )(a2, meta)
+    return out.reshape(-1)[:T]
+
+
+# ---------------------------------------------------------------------------
+# vote_combine: majority over r separate copies + accumulate add
+# ---------------------------------------------------------------------------
+
+
+def as_copy_list(copies: Union[jax.Array, Sequence[jax.Array]]
+                 ) -> list[jax.Array]:
+    """Normalize vote input: a stacked (r, T) array (back-compat) or a
+    sequence of r flat arrays -> list of r rows.  The single definition
+    both vote engines share, so their contracts can't drift."""
+    if isinstance(copies, jax.Array):
+        return [copies[i] for i in range(copies.shape[0])]
+    return list(copies)
+
+
+def median_network(rows: list[jax.Array]) -> jax.Array:
+    """Odd-even transposition sort over a tiny list; returns the median."""
+    rows = list(rows)
+    r = len(rows)
     for phase in range(r):
-        start = phase % 2
-        for i in range(start, r - 1, 2):
+        for i in range(phase % 2, r - 1, 2):
             lo = jnp.minimum(rows[i], rows[i + 1])
             hi = jnp.maximum(rows[i], rows[i + 1])
             rows[i], rows[i + 1] = lo, hi
-    o_ref[...] = acc + rows[r // 2]
+    return rows[r // 2]
 
 
-def vote_combine(copies: jax.Array, acc: jax.Array, *, block: int = 1024,
-                 interpret: bool = True) -> jax.Array:
-    """copies: (r, T) uint32, acc: (T,) uint32 -> acc + majority(copies)."""
-    r, T = copies.shape
-    assert r % 2 == 1
-    block = min(block, T)
-    assert T % block == 0
-    return pl.pallas_call(
+def _vote_kernel(*refs, r: int):
+    acc_ref, o_ref = refs[r], refs[r + 1]
+    o_ref[...] = acc_ref[...] + median_network([refs[i][...]
+                                                for i in range(r)])
+
+
+def vote_combine(copies: Union[jax.Array, Sequence[jax.Array]],
+                 acc: jax.Array, *, block_rows: int = 256,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """acc + elementwise-majority(copies) over Z_{2^32}.
+
+    ``copies`` is a sequence of r flat (T,) uint32 arrays (r odd) — each
+    copy is a separate kernel operand, so the caller never stacks an
+    (r, T) buffer.  A stacked (r, T) array is also accepted for
+    benchmarks/back-compat and is split into rows.
+    """
+    copies = as_copy_list(copies)
+    r = len(copies)
+    assert r % 2 == 1, "vote redundancy must be odd"
+    (T,) = acc.shape
+    tr, rows_p = _tile_rows(T, block_rows)
+    spec = pl.BlockSpec((tr, LANES), lambda ib: (ib, 0))
+    out = pl.pallas_call(
         functools.partial(_vote_kernel, r=r),
-        grid=(T // block,),
-        in_specs=[
-            pl.BlockSpec((r, block), lambda ib: (0, ib)),
-            pl.BlockSpec((block,), lambda ib: (ib,)),
-        ],
-        out_specs=pl.BlockSpec((block,), lambda ib: (ib,)),
-        out_shape=jax.ShapeDtypeStruct((T,), jnp.uint32),
-        interpret=interpret,
-    )(copies, acc)
+        grid=(rows_p // tr,),
+        in_specs=[spec] * (r + 1),
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((rows_p, LANES), jnp.uint32),
+        interpret=backend.interpret_default(interpret),
+    )(*[_to_tiles(c, rows_p) for c in copies], _to_tiles(acc, rows_p))
+    return out.reshape(-1)[:T]

@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 
@@ -9,5 +10,5 @@ from repro.kernels.ssd.ssd import ssd
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def ssd_op(x, dt, a, Bm, Cm, chunk: int = 128, interpret: bool = True):
+def ssd_op(x, dt, a, Bm, Cm, chunk: int = 128, interpret: Optional[bool] = None):
     return ssd(x, dt, a, Bm, Cm, chunk=chunk, interpret=interpret)

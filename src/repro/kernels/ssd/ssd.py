@@ -13,11 +13,14 @@ Output y (BH, S, P) and final state (BH, P, N).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import backend
 
 
 def _kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, st_out_ref,
@@ -70,7 +73,7 @@ def _kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, st_out_ref,
 
 def ssd(x: jax.Array, dt: jax.Array, a: jax.Array, Bm: jax.Array,
         Cm: jax.Array, *, chunk: int = 128,
-        interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+        interpret: Optional[bool] = None) -> tuple[jax.Array, jax.Array]:
     """x: (BH, S, P); dt: (BH, S); a: (BH,); Bm/Cm: (BH, S, N)."""
     BH, S, P = x.shape
     N = Bm.shape[-1]
@@ -97,6 +100,6 @@ def ssd(x: jax.Array, dt: jax.Array, a: jax.Array, Bm: jax.Array,
             jax.ShapeDtypeStruct((BH, P, N), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
-        interpret=interpret,
+        interpret=backend.interpret_default(interpret),
     )(a, x, dt, Bm, Cm)
     return y, st

@@ -6,13 +6,13 @@ from __future__ import annotations
 
 import jax
 
+from repro.runtime import compat
+
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1,
@@ -22,9 +22,7 @@ def make_host_mesh(data: int = 1, model: int = 1,
         shape, axes = (pod, data, model), ("pod", "data", "model")
     else:
         shape, axes = (data, model), ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def dp_axes_of(mesh: jax.sharding.Mesh) -> tuple[str, ...]:

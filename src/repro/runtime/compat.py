@@ -1,0 +1,44 @@
+"""Version compatibility shims for jax APIs that moved between releases."""
+from __future__ import annotations
+
+import jax
+
+
+def make_mesh(shape, axes) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with explicit-Auto axis types where the API has
+    them (0.5+); older releases are Auto-only and take no kwarg."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def axis_size(axis_name):
+    """``jax.lax.axis_size`` with a pre-0.5 fallback (a psum of the static
+    constant 1 folds to the axis size at trace time)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None,
+              axis_names=None):
+    """``jax.shard_map`` (new API) with fallback to
+    ``jax.experimental.shard_map.shard_map`` (pre-0.6 releases, where the
+    replication check kwarg is spelled ``check_rep`` and partial-manual
+    mode is requested via ``auto=`` — the complement of ``axis_names``)."""
+    if hasattr(jax, "shard_map"):
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+        if auto:
+            kw["auto"] = auto
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)

@@ -55,8 +55,8 @@ def test_elastic_restore_new_sharding(tmp_path):
     from jax.sharding import PartitionSpec as P
     t = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
     CK.save(str(tmp_path), 1, t)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.runtime import compat
+    mesh = compat.make_mesh((1,), ("data",))
     sh = {"w": NamedSharding(mesh, P("data", None))}
     r = CK.restore(str(tmp_path), 1, t, shardings=sh)
     np.testing.assert_array_equal(np.asarray(r["w"]), np.asarray(t["w"]))

@@ -7,12 +7,14 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
+from repro.kernels import backend
 from repro.kernels.flash_attention import attention_ref, flash_attention_op
 from repro.kernels.secure_agg import (mask_encrypt_op, mask_encrypt_ref,
                                       vote_combine_op, vote_combine_ref)
 from repro.kernels.ssd import ssd_op, ssd_ref
 
 RNG = np.random.default_rng(0)
+PALLAS = backend.pallas_impl()  # exercise the kernel, never the jnp path
 
 
 @pytest.mark.parametrize("B,Sq,Skv,H,K,hd,causal,window", [
@@ -58,7 +60,8 @@ def test_ssd_vs_sequential_ref(BH, S, P, N, chunk):
 def test_mask_encrypt_kernel_exact(T, seed, mode):
     rng = np.random.default_rng(seed % 99999)
     x = jnp.asarray(rng.normal(size=(T,)).astype(np.float32))
-    got = mask_encrypt_op(x, seed % 97, seed % 89, 2.0 ** 20, 1.0, mode=mode)
+    got = mask_encrypt_op(x, seed % 97, seed % 89, 2.0 ** 20, 1.0, mode=mode,
+                          impl=PALLAS)
     ref = mask_encrypt_ref(x, seed % 97, seed % 89, 2.0 ** 20, 1.0, mode=mode)
     assert bool(jnp.all(got == ref))
 
@@ -70,7 +73,7 @@ def test_vote_combine_kernel_exact(r, T, seed):
     rng = np.random.default_rng(seed % 99999)
     copies = jnp.asarray(rng.integers(0, 2 ** 32, size=(r, T), dtype=np.uint32))
     acc = jnp.asarray(rng.integers(0, 2 ** 32, size=(T,), dtype=np.uint32))
-    assert bool(jnp.all(vote_combine_op(copies, acc)
+    assert bool(jnp.all(vote_combine_op(copies, acc, impl=PALLAS)
                         == vote_combine_ref(copies, acc)))
 
 

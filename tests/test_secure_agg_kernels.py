@@ -1,0 +1,184 @@
+"""Kernel/jnp equivalence for the secure-aggregation hot path, and the
+program-size guarantees the dispatch-layer rewrite exists for: the traced
+protocol has O(1) PRF calls (no unrolled per-node pad chain), no stacked
+(r, T) vote buffer, and a constant number of collectives per round.
+
+No hypothesis dependency — deterministic sweeps only."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.byzantine import ByzantineSpec, majority_vote, \
+    majority_vote_list
+from repro.core.masking import MaskConfig, reference_aggregate
+from repro.core.secure_allreduce import AggConfig, simulate_secure_allreduce
+from repro.kernels import backend
+from repro.kernels.secure_agg import (mask_encrypt_op, mask_encrypt_ref,
+                                      unmask_decrypt_op, unmask_decrypt_ref,
+                                      vote_combine_op, vote_combine_ref)
+
+PALLAS = backend.pallas_impl()
+RNG = np.random.default_rng(7)
+ODD_SIZES = [1, 77, 128, 1000, 1024, 8193]
+
+
+@pytest.mark.parametrize("T", ODD_SIZES)
+@pytest.mark.parametrize("mode", ["mask", "quantize"])
+def test_mask_encrypt_kernel_matches_jnp(T, mode):
+    """Pallas kernel == jnp reference bit-for-bit, any length (internal
+    tile padding), negative values included."""
+    x = jnp.asarray((RNG.normal(size=(T,)) - 0.3).astype(np.float32))
+    got = mask_encrypt_op(x, 5, 1234, 2.0 ** 20, 1.0, mode=mode, impl=PALLAS)
+    ref = mask_encrypt_op(x, 5, 1234, 2.0 ** 20, 1.0, mode=mode, impl="jnp")
+    oracle = mask_encrypt_ref(x, 5, 1234, 2.0 ** 20, 1.0, mode=mode)
+    assert got.shape == (T,)
+    assert bool(jnp.all(got == oracle)) and bool(jnp.all(ref == oracle))
+
+
+@pytest.mark.parametrize("T", ODD_SIZES)
+@pytest.mark.parametrize("mode", ["mask", "dequantize"])
+def test_unmask_decrypt_kernel_matches_jnp(T, mode):
+    agg = jnp.asarray(RNG.integers(0, 2 ** 32, size=(T,), dtype=np.uint32))
+    got = unmask_decrypt_op(agg, 64, 1234, 2.0 ** 20, mode=mode, impl=PALLAS)
+    ref = unmask_decrypt_op(agg, 64, 1234, 2.0 ** 20, mode=mode, impl="jnp")
+    oracle = unmask_decrypt_ref(agg, 64, 1234, 2.0 ** 20, mode=mode)
+    assert got.dtype == jnp.float32
+    assert bool(jnp.all(got == oracle)) and bool(jnp.all(ref == oracle))
+
+
+@pytest.mark.parametrize("T", [1, 129, 4096])
+@pytest.mark.parametrize("r", [1, 3, 5])
+def test_vote_combine_kernel_matches_jnp(T, r):
+    copies = [jnp.asarray(RNG.integers(0, 2 ** 32, size=(T,),
+                                       dtype=np.uint32)) for _ in range(r)]
+    acc = jnp.asarray(RNG.integers(0, 2 ** 32, size=(T,), dtype=np.uint32))
+    got = vote_combine_op(tuple(copies), acc, impl=PALLAS)
+    ref = vote_combine_op(tuple(copies), acc, impl="jnp")
+    oracle = vote_combine_ref(copies, acc)
+    assert bool(jnp.all(got == oracle)) and bool(jnp.all(ref == oracle))
+    # list-median path == stacked-median path
+    stacked = jnp.stack(copies)
+    assert bool(jnp.all(majority_vote_list(copies)
+                        == majority_vote(stacked)))
+
+
+def test_chunked_stream_equals_monolithic():
+    """offset makes chunked encrypt/decrypt reproduce the whole-payload
+    pad stream exactly — what the pipelined tree transport relies on."""
+    T, C = 4096, 1024
+    x = jnp.asarray(RNG.normal(size=(T,)).astype(np.float32))
+    whole = mask_encrypt_ref(x, 9, 77, 2.0 ** 18, 1.0)
+    parts = [
+        np.asarray(mask_encrypt_op(x[o:o + C], 9, 77, 2.0 ** 18, 1.0,
+                                   impl=PALLAS, offset=o))
+        for o in range(0, T, C)
+    ]
+    assert np.array_equal(np.concatenate(parts), np.asarray(whole))
+    agg = jnp.asarray(RNG.integers(0, 2 ** 32, size=(T,), dtype=np.uint32))
+    whole_u = unmask_decrypt_ref(agg, 16, 77, 2.0 ** 18)
+    parts_u = [
+        np.asarray(unmask_decrypt_op(agg[o:o + C], 16, 77, 2.0 ** 18,
+                                     impl=PALLAS, offset=o))
+        for o in range(0, T, C)
+    ]
+    assert np.array_equal(np.concatenate(parts_u), np.asarray(whole_u))
+
+
+def test_tree_pack_unpack_handles_zero_size_leaves():
+    """Chunk packing round-trips pytrees containing 0-element leaves."""
+    from repro.core.secure_allreduce import _pack_chunks, _unpack_chunks
+    leaves = [jnp.arange(3, dtype=jnp.float32),
+              jnp.zeros((0,), jnp.float32),
+              jnp.arange(5, dtype=jnp.float32) * 2,
+              jnp.zeros((0, 4), jnp.float32)]
+    chunks = _pack_chunks(leaves, 4)
+    assert all(c.shape == (4,) for c in chunks)
+    back = _unpack_chunks(chunks, leaves)
+    for l, b in zip(leaves, back):
+        assert b.shape == l.shape and b.dtype == l.dtype
+        assert np.array_equal(np.asarray(b), np.asarray(l))
+    assert _pack_chunks([jnp.zeros((0,), jnp.float32)], 4) == []
+
+
+@pytest.mark.parametrize("masking", ["global", "pairwise", "none"])
+@pytest.mark.parametrize("schedule", ["ring", "butterfly"])
+def test_simulate_matches_reference_under_byzantine(masking, schedule):
+    """The full protocol (vote r=3, one corrupt member per cluster) equals
+    the single-device masked-sum oracle bit-for-bit."""
+    n, c = 16, 4
+    xs = jnp.asarray(RNG.normal(size=(n, 333)).astype(np.float32) * 0.2)
+    corrupt = tuple(cl * c + (cl % c) for cl in range(n // c))
+    cfg = AggConfig(n_nodes=n, cluster_size=c, redundancy=3,
+                    schedule=schedule, masking=masking, clip=2.0,
+                    byzantine=ByzantineSpec(corrupt_ranks=corrupt,
+                                            mode="garbage"))
+    out = np.asarray(simulate_secure_allreduce(xs, cfg))
+    want = np.asarray(reference_aggregate(cfg.mask_cfg(), xs))
+    assert np.array_equal(out, np.tile(want, (n, 1)))
+
+
+_JAXPR_PROBE = """
+import json, numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.core.secure_allreduce import AggConfig, secure_allreduce_manual
+from repro.runtime import compat
+
+def count_eqns(jaxpr, counts):
+    for eqn in jaxpr.eqns:
+        counts["total"] = counts.get("total", 0) + 1
+        name = eqn.primitive.name
+        counts[name] = counts.get(name, 0) + 1
+        for v in eqn.params.values():
+            vals = v if isinstance(v, (list, tuple)) else [v]
+            for sub in vals:
+                if hasattr(sub, "eqns"):          # plain Jaxpr
+                    count_eqns(sub, counts)
+                elif hasattr(sub, "jaxpr"):       # ClosedJaxpr
+                    count_eqns(sub.jaxpr, counts)
+    return counts
+
+def trace(n_nodes, cluster_size):
+    cfg = AggConfig(n_nodes=n_nodes, cluster_size=cluster_size,
+                    redundancy=3, schedule="tree")
+    mesh = Mesh(np.array(jax.devices()[:n_nodes]), ("data",))
+    fn = compat.shard_map(
+        lambda x: secure_allreduce_manual(x[0], cfg, ("data",))[None],
+        mesh=mesh, in_specs=(P("data"),), out_specs=P("data"),
+        check_vma=False)
+    x = jax.ShapeDtypeStruct((n_nodes, 2048), jnp.float32)
+    jaxpr = jax.make_jaxpr(jax.jit(fn))(x)
+    return count_eqns(jaxpr.jaxpr, {})
+
+small = trace(16, 4)    # g=4 clusters -> 4 tree rounds
+big = trace(64, 16)     # same 4 clusters, 4x the nodes
+print(json.dumps({"small": small, "big": big}))
+"""
+
+
+def test_traced_program_size_independent_of_n_nodes():
+    """make_jaxpr at n_nodes=64, r=3: collective count is r*rounds (+1
+    intra-cluster psum), zero threefry PRF calls, no (r, T) stack — and
+    the whole program is the same size as the n_nodes=16 trace."""
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=64"
+    r = subprocess.run([sys.executable, "-c", _JAXPR_PROBE], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-4000:]
+    counts = json.loads(r.stdout.strip().splitlines()[-1])
+    small, big = counts["small"], counts["big"]
+    rounds, redundancy = 4, 3  # tree over g=4 clusters
+    for trace in (small, big):
+        assert trace.get("ppermute", 0) == rounds * redundancy, trace
+        assert trace.get("psum", 0) <= 2, trace  # 1 intra-cluster (+axis id)
+        assert trace.get("threefry2x32", 0) == 0, trace
+        assert trace.get("concatenate", 0) == 0, trace
+    # O(1) PRF / O(1) program size: 4x the nodes, same traced program
+    assert small["total"] == big["total"], (small["total"], big["total"])
