@@ -1,0 +1,25 @@
+# Repro CI lanes.  `make test` is tier-1; the kernel lane re-runs the
+# dispatch-layer suites with the Pallas *interpreter* forced via
+# REPRO_KERNEL_IMPL (the same override the TPU lane would set to
+# `pallas`), so kernel==jnp bit-exactness is exercised even on hosts
+# whose auto-selected engine is the jnp reference.
+PY := PYTHONPATH=src python
+
+.PHONY: test kernel-lane service-lane bench-service bench
+
+test:
+	$(PY) -m pytest -x -q
+
+kernel-lane:
+	REPRO_KERNEL_IMPL=pallas_interpret $(PY) -m pytest \
+	    tests/test_secure_agg_kernels.py tests/test_service.py -q
+
+service-lane:
+	$(PY) -m pytest tests/test_service.py tests/test_overlay.py \
+	    tests/test_crypto.py -q
+
+bench-service:
+	$(PY) -m benchmarks.run --only service --json BENCH_service.json
+
+bench:
+	$(PY) -m benchmarks.run

@@ -60,13 +60,14 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (comm_cost, crypto_breakdown, kernels,
-                            lower_bound, secure_allreduce)
+                            lower_bound, secure_allreduce, service)
     table = {
         "comm_cost": comm_cost.run,                # paper Fig 3a/3b
         "crypto_breakdown": crypto_breakdown.run,  # paper Fig 3c/3d
         "lower_bound": lower_bound.run,            # paper Thm 1
         "secure_allreduce": secure_allreduce.run,  # tensor-scale schedules
         "kernels": kernels.run,                    # pallas kernel microbench
+        "service": service.run,                    # multi-session load gen
     }
     names = [args.only] if args.only else list(table)
     tee = _Tee(sys.stdout)

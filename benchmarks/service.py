@@ -1,0 +1,94 @@
+"""Load-generator benchmark for the multi-session aggregation service:
+sessions/sec vs batch size S.
+
+The *sequential per-session baseline* is what serving a query cost
+before the service subsystem existed: one monolithic run of the PR-1
+protocol oracle (``simulate_secure_allreduce``) per session.  The
+batched executor packs S sessions into one (S, n, T) dispatch and
+decrypts only the revealed copy (``reveal_only``), so its advantage is
+batching + no n-way replicated decryption — both are service-layer wins
+recorded here.  ``service_throughput_*`` rows carry sessions/sec in the
+numeric column (higher is better); ``service_executor_*`` rows carry
+us/batch.  A full-service row (admission queue + python session
+bookkeeping included) closes the loop.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks._timing import time_call
+
+from repro.core.secure_allreduce import (AggConfig, simulate_secure_allreduce,
+                                         simulate_secure_allreduce_batch)
+
+N_NODES, CLUSTER, R, T = 16, 4, 3, 1024
+S_SWEEP = (1, 8, 64)
+
+
+def _cfg() -> AggConfig:
+    return AggConfig(n_nodes=N_NODES, cluster_size=CLUSTER, redundancy=R,
+                     schedule="ring")
+
+
+def run(full: bool = False) -> None:
+    rng = np.random.default_rng(0)
+    cfg = _cfg()
+
+    # --- sequential per-session baseline: the PR-1 monolithic path ---
+    x1 = jnp.asarray(rng.normal(size=(N_NODES, T)).astype(np.float32) * 0.1)
+    seq_fn = jax.jit(lambda x: simulate_secure_allreduce(x, cfg))
+    us_seq = time_call(seq_fn, x1)
+    seq_per_s = 1e6 / us_seq
+    print(f"service_seq_monolithic_T{T},{us_seq:.0f},"
+          f"per_session_PR1_path;n={N_NODES}")
+    print(f"service_throughput_seq_per_session,{seq_per_s:.0f},"
+          f"sessions_per_s;baseline")
+
+    # --- batched executor path at S in {1, 8, 64} ---
+    bat_fn = jax.jit(lambda x, s: simulate_secure_allreduce_batch(
+        x, cfg, seeds=s, reveal_only=True))
+    for S in S_SWEEP:
+        xs = jnp.asarray(
+            rng.normal(size=(S, N_NODES, T)).astype(np.float32) * 0.1)
+        seeds = jnp.arange(S, dtype=jnp.uint32) + 7
+        us = time_call(bat_fn, xs, seeds, reps=max(5, 64 // S))
+        per_s = S * 1e6 / us
+        print(f"service_executor_S{S}_T{T},{us:.0f},"
+              f"sessions_per_s={per_s:.0f};speedup_vs_seq="
+              f"{per_s / seq_per_s:.2f}x")
+        print(f"service_throughput_batched_S{S},{per_s:.0f},"
+              f"sessions_per_s;speedup_vs_seq={per_s / seq_per_s:.2f}x")
+
+    # --- full service: admission queue + watermarks + bookkeeping ---
+    import time as _time
+
+    from repro.service import (AggregationService, BatchingConfig,
+                               SessionParams)
+    params = SessionParams(n_nodes=N_NODES, elems=T, cluster_size=CLUSTER,
+                           redundancy=R)
+    n_sessions = 128 if full else 48
+    batch = 16
+    vals = rng.normal(size=(N_NODES, T)).astype(np.float32) * 0.1
+
+    svc = AggregationService(
+        params, batching=BatchingConfig(max_batch=batch, max_age=1e9))
+
+    def load_once() -> float:
+        t0 = _time.monotonic()
+        for i in range(n_sessions):
+            s = svc.open(now=float(i))
+            for slot in range(N_NODES):
+                s.contribute(slot, vals[slot])
+            svc.seal(s.sid, now=float(i))
+            svc.pump(now=float(i))
+        svc.drain()
+        return _time.monotonic() - t0
+
+    load_once()                       # warm the executor's compile cache
+    wall = load_once()
+    print(f"service_load_gen_S{batch},{wall / n_sessions * 1e6:.0f},"
+          f"sessions_per_s={n_sessions / wall:.0f};"
+          f"queue_and_python_included")

@@ -1,25 +1,37 @@
-"""The paper's own application: a distributed poll with two choices over a
-byzantine network, end-to-end with real threshold-Paillier crypto, the
-cuckoo overlay, majority-voted ring aggregation — and a comparison with
-the O(n^3) non-layout (NL) baseline (paper §5).
+"""The paper's own application — distributed polling — rewritten on the
+multi-session aggregation service: many concurrent polls run as sessions
+(open -> contribute -> seal -> aggregate -> reveal), batched into single
+kernel dispatches by the admission scheduler, surviving overlay churn
+mid-flight via epoch pinning.  A one-shot run of the node-scale DA
+protocol (real threshold Paillier, with Step 4 routed through the
+batched modmul kernel) is kept as the protocol-level cross-check.
 
-    PYTHONPATH=src python examples/secure_polling.py [--n 128] [--tau 0.3]
+    PYTHONPATH=src python examples/secure_polling.py \
+        [--n 256] [--tau 0.2] [--polls 12] [--questions 8]
 """
 import argparse
 import sys
 
 sys.path.insert(0, "src")
 
-from repro.core.baseline_nl import run_nl
+import numpy as np
+
 from repro.core.overlay import build_overlay
 from repro.core.protocol import Adversary, DAProtocol
+from repro.runtime.fault import SessionFaultPlan
+from repro.service import (AggregationService, BatchingConfig, EpochManager,
+                           SessionParams)
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--n", type=int, default=128)
-    ap.add_argument("--tau", type=float, default=0.3)
+    ap.add_argument("--n", type=int, default=256)
+    ap.add_argument("--tau", type=float, default=0.2)
+    ap.add_argument("--polls", type=int, default=12)
+    ap.add_argument("--questions", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--key-bits", type=int, default=32)
+    ap.add_argument("--skip-paillier", action="store_true")
     args = ap.parse_args()
 
     print(f"== building cuckoo overlay: n={args.n}, tau={args.tau} ==")
@@ -28,24 +40,69 @@ def main():
     print(f"clusters: g={inv['g']}, sizes [{inv['min_size']}..{inv['max_size']}], "
           f"honest-majority clusters: {inv['honest_majority_frac']*100:.0f}%")
 
-    print("== running the DA polling protocol (yes/no vote) ==")
-    proto = DAProtocol(ov, key_bits=args.key_bits,
-                       adversary=Adversary(drop_rate=0.2, corrupt_ring=True,
-                                           bad_inputs=True), seed=7)
-    r = proto.run()
-    print(f"poll result: {r.output} yes of {args.n} voters "
-          f"(expected {r.expected}) — exact={r.exact}")
-    print(f"communication: {r.stats.messages} msgs, "
-          f"{r.stats.bytes/1e6:.2f} MB total, "
-          f"{r.stats.bytes/args.n/1e3:.1f} KB/node")
-    print("phase bytes:", {k: f"{v/1e3:.0f}KB" for k, v in
-                           sorted(r.phase_bytes.items())})
+    print(f"== aggregation service: {args.polls} concurrent polls, "
+          f"{args.questions} yes/no questions each ==")
+    em = EpochManager(ov, cluster_size=4)
+    snap = em.current()
+    params = SessionParams(n_nodes=snap.n_nodes, elems=args.questions,
+                           cluster_size=4, redundancy=3)
+    svc = AggregationService(
+        params, epochs=em,
+        batching=BatchingConfig(max_batch=args.batch, max_age=1e9))
+    print(f"committees: {snap.n_clusters} clusters x 4 -> "
+          f"{snap.n_nodes} protocol slots/poll")
 
-    print("== NL baseline (paper §5 comparison) ==")
-    nl = run_nl(args.n, crypto_cutoff=32)
-    print(f"NL: {nl.stats.messages} msgs, {nl.stats.bytes/1e6:.2f} MB "
-          f"({nl.stats.bytes/max(r.stats.bytes,1):.0f}x the DA cost)")
-    assert r.exact
+    rng = np.random.default_rng(7)
+    expected = {}
+    for i in range(args.polls):
+        s = svc.open(now=float(i))
+        votes = rng.integers(0, 2,
+                             size=(params.n_nodes, args.questions)
+                             ).astype(np.float32)
+        for slot in range(params.n_nodes):
+            s.contribute(slot, votes[slot])
+        expected[s.sid] = votes.sum(0)
+        # one poll suffers a mid-session Byzantine member: its forwarded
+        # ring copies are flipped and out-voted by the r=3 majority
+        if i == 1:
+            s.inject_fault(SessionFaultPlan(byzantine_slots=(2,)))
+        svc.seal(s.sid, now=float(i))
+        if i == args.polls // 2:
+            # churn strikes mid-flight: sealed polls stay pinned to their
+            # epoch's committees; departures become vote-absorbed crashes
+            em.churn(joins=8, leaves=8, honest_join_frac=1.0)
+            print(f"  churn after poll {i}: epoch -> "
+                  f"{em.current().epoch}, overlay n={len(ov.nodes)}")
+        svc.pump(now=float(i))
+    svc.drain()
+
+    exact = 0
+    for sid, want in expected.items():
+        got = svc.result(sid)
+        exact += bool(np.allclose(got, want, atol=1e-3))
+    st = svc.stats
+    print(f"polls revealed: {st['sessions_run']}, exact tallies: "
+          f"{exact}/{args.polls}")
+    print(f"batches: {st['batches_run']} (sizes {st['batch_sizes']}), "
+          f"final epoch: {st['epoch']}")
+    sample = svc.result(0).astype(int)
+    print(f"poll 0 tally: {sample.tolist()} yes of {params.n_nodes} voters")
+    assert exact == args.polls
+
+    if not args.skip_paillier:
+        print("== protocol-level cross-check: one DA poll with real "
+              "threshold Paillier (kernel-batched Step 4) ==")
+        proto = DAProtocol(ov, key_bits=args.key_bits,
+                           adversary=Adversary(drop_rate=0.2,
+                                               corrupt_ring=True,
+                                               bad_inputs=True),
+                           seed=7, kernel_crypto=True)
+        r = proto.run()
+        print(f"poll result: {r.output} yes of {len(ov.nodes)} voters "
+              f"(expected {r.expected}) — exact={r.exact}")
+        print(f"communication: {r.stats.messages} msgs, "
+              f"{r.stats.bytes/1e6:.2f} MB total")
+        assert r.exact
 
 
 if __name__ == "__main__":

@@ -54,12 +54,16 @@ class DAProtocol:
 
     def __init__(self, overlay: Overlay, key_bits: int = 32,
                  value_range: int = 2, adversary: Optional[Adversary] = None,
-                 seed: int = 0):
+                 seed: int = 0, kernel_crypto: bool = False):
         self.ov = overlay
         self.rng = random.Random(seed)
         self.adv = adversary or Adversary()
         self.key_bits = key_bits
         self.value_range = value_range
+        # route Step 4's modular exponentiations through the batched
+        # modmul kernel (one dispatch for all shareholders) instead of
+        # per-share Python pow — identical values either way
+        self.kernel_crypto = kernel_crypto
         self.stats = MsgStats()
         self.phase_bytes: dict[str, int] = {}
 
@@ -146,16 +150,17 @@ class DAProtocol:
             partial = Counter(ballots).most_common(1)[0][0]
 
         # --- Step 4: threshold decryption ------------------------------
-        parts = []
+        decryptors = []
         for nd in tc:
             if nd.uid not in share_of:
                 continue
             if not nd.honest and self.adv.rng.random() < 0.5:
                 continue  # malicious shareholder refuses to decrypt
-            sh = share_of[nd.uid]
-            parts.append((sh.index, tp.partial_decrypt(partial, sh)))
+            decryptors.append(share_of[nd.uid])
             # share broadcast within cluster + NIZK of share validity [DJ01]
             self._count("decrypt", c_t, c_t * ct_bytes * 2)
+        parts = tp.partial_decrypt_batch(partial, decryptors,
+                                         use_kernel=self.kernel_crypto)
         if len(parts) < t:
             output = None
         else:

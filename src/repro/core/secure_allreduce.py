@@ -40,12 +40,15 @@ from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import schedules as SCH
 from repro.core.byzantine import ByzantineSpec, digest, majority_vote_list
 from repro.core.masking import MaskConfig, pairwise_pad
-from repro.kernels.secure_agg import (mask_encrypt_fn, unmask_decrypt_fn,
+from repro.kernels.secure_agg import (mask_encrypt_batch_fn, mask_encrypt_fn,
+                                      unmask_decrypt_batch_fn,
+                                      unmask_decrypt_fn, vote_combine_batch_fn,
                                       vote_combine_fn)
 from repro.runtime import compat
 
@@ -412,3 +415,142 @@ def simulate_secure_allreduce(xs: jax.Array, cfg: AggConfig) -> jax.Array:
 
     out = jax.vmap(lambda a: _decrypt_chunk(jcfg, mcfg, a, 0))(acc)
     return out.reshape(n, *item_shape)
+
+
+# ---------------------------------------------------------------------------
+# Batched multi-session entry point — S concurrent aggregation sessions,
+# each with its own pad-stream key (seed) and counter offset, sharing one
+# static AggConfig.  Every protocol stage is ONE dispatch over the whole
+# (S, ...) batch via the *_batch kernel ops: encrypt is a single
+# (S*n, T) mask pass, each voted round is a single (S*n, T) vote pass
+# (destination gathers are static index maps), and decryption is a single
+# batched unmask pass.  Bit-identical to running each session through
+# ``simulate_secure_allreduce`` on its own — the service's batched
+# executor relies on exactly that equivalence.
+# ---------------------------------------------------------------------------
+
+
+def _fault_masks(faults, n_nodes: int):
+    """Per-session fault specs -> {mode: (S, n) bool mask} (static numpy).
+
+    ``faults[s]`` is a sequence of ByzantineSpec for session s; a rank may
+    appear under at most one mode per session (disjointness keeps the
+    sequential application order-independent)."""
+    masks: dict[str, np.ndarray] = {}
+    for s_idx, specs in enumerate(faults):
+        for sp in specs:
+            if not sp.corrupt_ranks:
+                continue
+            m = masks.setdefault(
+                sp.mode, np.zeros((len(faults), n_nodes), bool))
+            m[s_idx, list(sp.corrupt_ranks)] = True
+    return masks
+
+
+def _corrupt_batch(masks, acc: jax.Array) -> jax.Array:
+    """Apply grouped per-mode fault masks to (S, n, T) SENT values —
+    the batched mirror of ``ByzantineSpec.corrupt`` per session row.
+    ``masks`` maps mode -> (S, n) bool, static numpy or traced arrays
+    (an all-False mask is the identity, so callers may pass fixed-key
+    traced masks and keep the program structure fault-independent)."""
+    sent = acc
+    for mode, m in masks.items():
+        if mode == "flip":
+            evil = acc ^ jnp.uint32(0xFFFFFFFF)
+        elif mode == "garbage":
+            evil = acc * jnp.uint32(2654435761) + jnp.uint32(0xDEADBEEF)
+        else:  # drop
+            evil = jnp.zeros_like(acc)
+        sent = jnp.where(jnp.asarray(m)[:, :, None], evil, sent)
+    return sent
+
+
+def simulate_secure_allreduce_batch(
+        xs: jax.Array, cfg: AggConfig, seeds=None, offsets=None,
+        faults: Optional[Sequence[Sequence[ByzantineSpec]]] = None,
+        fault_masks=None, reveal_only: bool = False,
+) -> jax.Array:
+    """xs: (S, n_nodes, ...) — S sessions' per-node payloads -> per-node
+    results (S, n_nodes, ...).  ``seeds``/``offsets``: per-session pad
+    stream key and counter offset ((S,), default cfg.seed / 0).
+    ``faults``: per-session ByzantineSpec sequences applied to sent ring
+    values (static; ranks disjoint across modes within a session) — or
+    pass ``fault_masks``, a {mode: (S, n) bool} dict of *traced* arrays,
+    to keep the compiled program independent of the fault pattern (the
+    executor's compile-cache path).  ``reveal_only`` decrypts just
+    member 0's (identical) aggregate per session -> (S, ...) — the
+    service path, which never needs all n_nodes copies of the revealed
+    value."""
+    from repro.kernels import backend
+    S, n = xs.shape[0], xs.shape[1]
+    c, g, r = cfg.cluster_size, cfg.n_clusters, cfg.redundancy
+    assert n == cfg.n_nodes
+    assert cfg.masking in ("global", "none"), \
+        "batched sessions support global/none masking (pairwise is jnp-only)"
+    mcfg = cfg.mask_cfg()
+    impl = backend.resolve(cfg.kernel_impl)
+    if seeds is None:
+        seeds = jnp.full((S,), mcfg.seed, jnp.uint32)
+    seeds = jnp.asarray(seeds).astype(jnp.uint32)
+    if offsets is None:
+        offsets = jnp.zeros((S,), jnp.uint32)
+    offsets = jnp.asarray(offsets).astype(jnp.uint32)
+    if fault_masks is not None:
+        assert faults is None, "pass faults or fault_masks, not both"
+        masks = dict(fault_masks)
+    else:
+        if faults is None:
+            faults = [()] * S
+        assert len(faults) == S
+        masks = _fault_masks(faults, n)
+
+    item_shape = xs.shape[2:]
+    T = int(np.prod(item_shape)) if item_shape else 1
+    flat = xs.reshape(S, n, T).astype(jnp.float32)
+
+    # --- Step 1: one batched encrypt over all (session, node) rows ---
+    node_ids = jnp.tile(jnp.arange(n, dtype=jnp.uint32), S)
+    row_seeds = jnp.repeat(seeds, n)
+    row_offs = jnp.repeat(offsets, n)
+    mode = "mask" if mcfg.mode == "global" else "quantize"
+    q = mask_encrypt_batch_fn(flat.reshape(S * n, T), node_ids, row_seeds,
+                              mcfg.scale, mcfg.clip, mode=mode,
+                              offsets=row_offs, impl=impl)
+
+    # --- Steps 1-2: intra-cluster sums, replicated to members ---
+    acc = q.reshape(S, g, c, T).sum(axis=2, dtype=jnp.uint32)
+    acc = jnp.repeat(acc[:, :, None], c, axis=2).reshape(S, n, T)
+
+    # --- Step 3: voted schedule; one batched vote per round ---
+    local = acc
+    for rnd in SCH.get_schedule(cfg.schedule, g):
+        participates = np.zeros((n,), bool)
+        src_idx = np.arange(n)[None, :].repeat(r, axis=0)  # (r, n)
+        for cl, src_cl in enumerate(rnd.recv_from):
+            if src_cl is None:
+                continue
+            for m in range(c):
+                dst = cl * c + m
+                participates[dst] = True
+                for s in range(r):
+                    src_idx[s, dst] = src_cl * c + (m + s) % c
+        if not participates.any():
+            continue
+        sent = _corrupt_batch(masks, acc)
+        copies = [sent[:, src_idx[s], :].reshape(S * n, T) for s in range(r)]
+        base = _vote_base(rnd, acc, local)
+        voted = vote_combine_batch_fn(copies, base.reshape(S * n, T),
+                                      impl=impl).reshape(S, n, T)
+        acc = jnp.where(jnp.asarray(participates)[None, :, None], voted, acc)
+
+    # --- Step 4: one batched unmask ---
+    umode = "mask" if mcfg.mode == "global" else "dequantize"
+    if reveal_only:   # service path: one revealed copy per session
+        out = unmask_decrypt_batch_fn(acc[:, 0], mcfg.n_nodes, seeds,
+                                      mcfg.scale, mode=umode,
+                                      offsets=offsets, impl=impl)
+        return out.reshape(S, *item_shape)
+    out = unmask_decrypt_batch_fn(acc.reshape(S * n, T), mcfg.n_nodes,
+                                  row_seeds, mcfg.scale, mode=umode,
+                                  offsets=row_offs, impl=impl)
+    return out.reshape(S, n, *item_shape)

@@ -157,6 +157,27 @@ class ThresholdPublic:
     def partial_decrypt(self, ct: int, share: ThresholdShare) -> int:
         return pow(ct, 2 * self.delta * share.value, self.pk.n2)
 
+    def partial_decrypt_batch(self, ct: int,
+                              shares: Sequence[ThresholdShare], *,
+                              use_kernel: bool = True,
+                              interpret: Optional[bool] = None,
+                              ) -> list[tuple[int, int]]:
+        """All shareholders' partial decryptions of ``ct`` in one batched
+        modular exponentiation on the kernel dispatch layer
+        (``kernels/modmul.mont_exp_op``: each vector lane runs one
+        share's square-and-multiply) — the Fig 3d hot spot shares the
+        same engine selection as the tensor path.  ``use_kernel=False``
+        falls back to per-share Python ``pow`` (identical values)."""
+        if not shares or not use_kernel:
+            return [(sh.index, self.partial_decrypt(ct, sh))
+                    for sh in shares]
+        from repro.crypto.limb import limbs_needed
+        from repro.kernels.modmul.ops import modexp_ints
+        exps = [2 * self.delta * sh.value for sh in shares]
+        outs = modexp_ints([ct % self.pk.n2] * len(shares), exps, self.pk.n2,
+                           limbs_needed(self.pk.n2), interpret=interpret)
+        return [(sh.index, o) for sh, o in zip(shares, outs)]
+
     def combine(self, ct_parts: Sequence[tuple[int, int]]) -> int:
         """ct_parts: [(index, partial)] with >= t distinct indices."""
         assert len({i for i, _ in ct_parts}) >= self.t

@@ -12,6 +12,11 @@ kernel executes for the current process:
 The protocol layer (``core/secure_allreduce``) and the jit'd op wrappers
 ask :func:`resolve` instead of hard-coding ``interpret=True``, so the same
 program compiles natively on TPU and falls back gracefully elsewhere.
+The batched multi-session ops (``*_batch`` in ``kernels/secure_agg``)
+resolve the same way: native Pallas kernels carry the leading session
+axis as an extra grid dimension with per-session SMEM metadata, while
+the jnp engine vmaps the scalar-meta reference — one ``impl`` choice
+covers both the single-query and the service path.
 
 ``REPRO_KERNEL_IMPL`` overrides the automatic choice (useful to force
 ``pallas_interpret`` in CI or ``jnp`` on a TPU host for A/B timing).

@@ -1,8 +1,16 @@
-from repro.kernels.secure_agg.ops import (mask_encrypt_fn, mask_encrypt_op,
+from repro.kernels.secure_agg.ops import (mask_encrypt_batch_fn,
+                                          mask_encrypt_batch_op,
+                                          mask_encrypt_fn, mask_encrypt_op,
+                                          unmask_decrypt_batch_fn,
+                                          unmask_decrypt_batch_op,
                                           unmask_decrypt_fn,
-                                          unmask_decrypt_op, vote_combine_fn,
-                                          vote_combine_op)
-from repro.kernels.secure_agg.ref import (mask_encrypt_ref,
+                                          unmask_decrypt_op,
+                                          vote_combine_batch_fn,
+                                          vote_combine_batch_op,
+                                          vote_combine_fn, vote_combine_op)
+from repro.kernels.secure_agg.ref import (mask_encrypt_batch_ref,
+                                          mask_encrypt_ref,
+                                          unmask_decrypt_batch_ref,
                                           unmask_decrypt_ref,
                                           vote_combine_ref)
 from repro.kernels.secure_agg.secure_agg import pad_stream, splitmix32

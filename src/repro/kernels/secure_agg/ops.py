@@ -17,7 +17,9 @@ import jax
 from repro.kernels import backend
 from repro.kernels.secure_agg import ref as R
 from repro.kernels.secure_agg.secure_agg import (mask_encrypt,
+                                                 mask_encrypt_batch,
                                                  unmask_decrypt,
+                                                 unmask_decrypt_batch,
                                                  vote_combine)
 
 
@@ -57,6 +59,69 @@ def vote_combine_fn(copies: Union[jax.Array, Sequence[jax.Array]], acc,
     if impl == "jnp":
         return R.vote_combine_ref(copies, acc)
     return vote_combine(copies, acc, interpret=_interp(impl))
+
+
+# ---------------------------------------------------------------------------
+# Batched variants (leading session axis) — one dispatch covers S sessions
+# with per-row (seed, node_id, offset).  The multi-session service's
+# executor packs concurrent sessions into these instead of looping.
+# ---------------------------------------------------------------------------
+
+
+def mask_encrypt_batch_fn(x, node_ids, seeds, scale: float, clip: float,
+                          mode: str = "mask", offsets=None,
+                          impl: Optional[str] = None) -> jax.Array:
+    """(B, T) float rows -> (B, T) uint32, row b keyed by
+    (seeds[b], node_ids[b]) at counter offset ``offsets[b]``."""
+    impl = backend.resolve(impl)
+    if impl == "jnp":
+        return R.mask_encrypt_batch_ref(x, node_ids, seeds, scale, clip,
+                                        mode=mode, offsets=offsets)
+    return mask_encrypt_batch(x, node_ids, seeds, scale, clip, mode=mode,
+                              offsets=offsets, interpret=_interp(impl))
+
+
+def unmask_decrypt_batch_fn(agg, n_nodes: int, seeds, scale: float,
+                            mode: str = "mask", offsets=None,
+                            impl: Optional[str] = None) -> jax.Array:
+    """(B, T) uint32 aggregates -> (B, T) float32 per-row decryptions."""
+    impl = backend.resolve(impl)
+    if impl == "jnp":
+        return R.unmask_decrypt_batch_ref(agg, n_nodes, seeds, scale,
+                                          mode=mode, offsets=offsets)
+    return unmask_decrypt_batch(agg, n_nodes, seeds, scale, mode=mode,
+                                offsets=offsets, interpret=_interp(impl))
+
+
+def vote_combine_batch_fn(copies: Sequence[jax.Array], acc,
+                          impl: Optional[str] = None) -> jax.Array:
+    """acc + majority(copies) over (B, T) rows — the vote is elementwise,
+    so the batch flattens into one call of the flat kernel (bit-identical
+    to voting each row separately)."""
+    copies = [c.reshape(-1) for c in R.as_copy_list(copies)]
+    return vote_combine_fn(copies, acc.reshape(-1),
+                           impl=impl).reshape(acc.shape)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "clip", "mode", "impl"))
+def mask_encrypt_batch_op(x, node_ids, seeds, scale, clip, mode="mask",
+                          offsets=None, impl: Optional[str] = None):
+    return mask_encrypt_batch_fn(x, node_ids, seeds, scale, clip, mode=mode,
+                                 offsets=offsets, impl=impl)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_nodes", "scale", "mode", "impl"))
+def unmask_decrypt_batch_op(agg, n_nodes, seeds, scale, mode="mask",
+                            offsets=None, impl: Optional[str] = None):
+    return unmask_decrypt_batch_fn(agg, n_nodes, seeds, scale, mode=mode,
+                                   offsets=offsets, impl=impl)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def vote_combine_batch_op(copies, acc, impl: Optional[str] = None):
+    return vote_combine_batch_fn(copies, acc, impl=impl)
 
 
 @functools.partial(jax.jit,

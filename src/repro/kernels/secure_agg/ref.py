@@ -60,3 +60,38 @@ def vote_combine_ref(copies: Union[jax.Array, Sequence[jax.Array]],
     copies = as_copy_list(copies)
     assert len(copies) % 2 == 1
     return acc + median_network(copies)
+
+
+# ---------------------------------------------------------------------------
+# Batched variants (leading session axis, per-row seed/node_id/offset) —
+# vmap over the scalar-meta references, so each row is bit-identical to a
+# separate single-session call by construction.
+# ---------------------------------------------------------------------------
+
+
+def _row_meta(B: int, *vals):
+    return [jnp.broadcast_to(jnp.asarray(v).astype(jnp.uint32), (B,))
+            for v in vals]
+
+
+def mask_encrypt_batch_ref(x: jax.Array, node_ids, seeds, scale: float,
+                           clip: float, mode: str = "mask",
+                           offsets=None) -> jax.Array:
+    B = x.shape[0]
+    nids, sds, offs = _row_meta(
+        B, node_ids, seeds, 0 if offsets is None else offsets)
+    return jax.vmap(
+        lambda xr, nid, sd, off: mask_encrypt_ref(
+            xr, nid, sd, scale, clip, mode=mode, offset=off)
+    )(x, nids, sds, offs)
+
+
+def unmask_decrypt_batch_ref(agg: jax.Array, n_nodes: int, seeds,
+                             scale: float, mode: str = "mask",
+                             offsets=None) -> jax.Array:
+    B = agg.shape[0]
+    sds, offs = _row_meta(B, seeds, 0 if offsets is None else offsets)
+    return jax.vmap(
+        lambda ar, sd, off: unmask_decrypt_ref(
+            ar, n_nodes, sd, scale, mode=mode, offset=off)
+    )(agg, sds, offs)

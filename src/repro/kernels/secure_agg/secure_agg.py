@@ -192,6 +192,119 @@ def unmask_decrypt(agg: jax.Array, n_nodes: int, seed, scale: float,
 
 
 # ---------------------------------------------------------------------------
+# Batched variants: leading session axis with *per-row* (seed, node_id,
+# offset) — the multi-session service packs S concurrent aggregation
+# sessions into one (S, T) dispatch instead of S kernel launches.  The
+# grid gains a session dimension; per-session metadata lives in SMEM and
+# is indexed by the session program id, so one pallas_call covers every
+# session natively (no vmap over the Mosaic kernel).
+# ---------------------------------------------------------------------------
+
+
+def _to_tiles_b(x: jax.Array, rows_p: int) -> jax.Array:
+    """(B, T) -> (B, rows_p, LANES) with zero padding per row."""
+    B, T = x.shape
+    pad = rows_p * LANES - T
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((B, pad), x.dtype)], axis=1)
+    return x.reshape(B, rows_p, LANES)
+
+
+def _mask_batch_kernel(x_ref, meta_ref, o_ref, *, tr: int, scale: float,
+                       clip: float, mode: str):
+    ib = pl.program_id(0)   # session row
+    it = pl.program_id(1)   # tile within the row
+    x = x_ref[0].astype(jnp.float32)
+    xq = jnp.clip(x, -jnp.float32(clip), jnp.float32(clip)) * jnp.float32(scale)
+    q = jnp.round(xq).astype(jnp.int32).astype(jnp.uint32)
+    if mode == "mask":
+        ctr = _ctr_tile(meta_ref[2, ib], it, tr)
+        q = q + pad_stream(meta_ref[0, ib], meta_ref[1, ib], ctr)
+    o_ref[0] = q
+
+
+def mask_encrypt_batch(x: jax.Array, node_ids, seeds, scale: float,
+                       clip: float, *, mode: str = "mask", offsets=None,
+                       block_rows: int = 256,
+                       interpret: Optional[bool] = None) -> jax.Array:
+    """x: (B, T) float -> quantized(+masked) uint32 (B, T); row b is padded
+    with the stream keyed by (seeds[b], node_ids[b]) starting at counter
+    ``offsets[b]`` — bit-identical to B separate ``mask_encrypt`` calls."""
+    B, T = x.shape
+    tr, rows_p = _tile_rows(T, block_rows)
+    x3 = _to_tiles_b(x.astype(jnp.float32), rows_p)
+    if offsets is None:
+        offsets = jnp.zeros((B,), jnp.uint32)
+    meta = jnp.stack([
+        jnp.broadcast_to(jnp.asarray(seeds).astype(jnp.uint32), (B,)),
+        jnp.broadcast_to(jnp.asarray(node_ids).astype(jnp.uint32), (B,)),
+        jnp.broadcast_to(jnp.asarray(offsets).astype(jnp.uint32), (B,)),
+    ])
+    out = pl.pallas_call(
+        functools.partial(_mask_batch_kernel, tr=tr, scale=scale, clip=clip,
+                          mode=mode),
+        grid=(B, rows_p // tr),
+        in_specs=[
+            pl.BlockSpec((1, tr, LANES), lambda ib, it: (ib, it, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, tr, LANES), lambda ib, it: (ib, it, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, rows_p, LANES), jnp.uint32),
+        interpret=backend.interpret_default(interpret),
+    )(x3, meta)
+    return out.reshape(B, -1)[:, :T]
+
+
+def _unmask_batch_kernel(agg_ref, meta_ref, o_ref, *, tr: int, n_nodes: int,
+                         scale: float, mode: str):
+    ib = pl.program_id(0)
+    it = pl.program_id(1)
+    agg = agg_ref[0]
+    if mode == "mask":
+        seed = meta_ref[0, ib]
+        ctr = _ctr_tile(meta_ref[1, ib], it, tr)
+
+        def body(i, acc):
+            return acc + pad_stream(seed, jnp.uint32(i), ctr)
+
+        total_pad = jax.lax.fori_loop(
+            0, n_nodes, body, jnp.zeros((tr, LANES), jnp.uint32))
+        agg = agg - total_pad
+    o_ref[0] = agg.astype(jnp.int32).astype(jnp.float32) / jnp.float32(scale)
+
+
+def unmask_decrypt_batch(agg: jax.Array, n_nodes: int, seeds, scale: float,
+                         *, mode: str = "mask", offsets=None,
+                         block_rows: int = 256,
+                         interpret: Optional[bool] = None) -> jax.Array:
+    """agg: (B, T) uint32 aggregates -> (B, T) float32; row b removes the
+    n-way total pad of stream ``seeds[b]`` at counter ``offsets[b]`` —
+    bit-identical to B separate ``unmask_decrypt`` calls."""
+    B, T = agg.shape
+    tr, rows_p = _tile_rows(T, block_rows)
+    a3 = _to_tiles_b(agg, rows_p)
+    if offsets is None:
+        offsets = jnp.zeros((B,), jnp.uint32)
+    meta = jnp.stack([
+        jnp.broadcast_to(jnp.asarray(seeds).astype(jnp.uint32), (B,)),
+        jnp.broadcast_to(jnp.asarray(offsets).astype(jnp.uint32), (B,)),
+    ])
+    out = pl.pallas_call(
+        functools.partial(_unmask_batch_kernel, tr=tr, n_nodes=int(n_nodes),
+                          scale=scale, mode=mode),
+        grid=(B, rows_p // tr),
+        in_specs=[
+            pl.BlockSpec((1, tr, LANES), lambda ib, it: (ib, it, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, tr, LANES), lambda ib, it: (ib, it, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, rows_p, LANES), jnp.float32),
+        interpret=backend.interpret_default(interpret),
+    )(a3, meta)
+    return out.reshape(B, -1)[:, :T]
+
+
+# ---------------------------------------------------------------------------
 # vote_combine: majority over r separate copies + accumulate add
 # ---------------------------------------------------------------------------
 

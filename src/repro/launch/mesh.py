@@ -17,12 +17,10 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
 
 def make_host_mesh(data: int = 1, model: int = 1,
                    pod: int = 0) -> jax.sharding.Mesh:
-    """Small mesh over however many (host) devices exist — tests/examples."""
-    if pod:
-        shape, axes = (pod, data, model), ("pod", "data", "model")
-    else:
-        shape, axes = (data, model), ("data", "model")
-    return compat.make_mesh(shape, axes)
+    """Small mesh over however many (host) devices exist — tests/examples.
+    Delegates to ``runtime.compat.host_mesh`` so every CLI driver shares
+    one mesh/compat bootstrap."""
+    return compat.host_mesh(data=data, model=model, pod=pod)
 
 
 def dp_axes_of(mesh: jax.sharding.Mesh) -> tuple[str, ...]:

@@ -1,0 +1,108 @@
+"""Aggregation-service driver: many concurrent secure-aggregation
+sessions under synthetic load, batched by the admission scheduler.
+
+    PYTHONPATH=src python -m repro.launch.serve_agg --sessions 64 \
+        --batch 16 --elems 1024 --overlay-n 256 --churn-every 16
+
+Opens ``--sessions`` sessions against a cuckoo-overlay network, feeds
+every protocol slot's contribution, seals them as load arrives, and lets
+the size/age watermarks of the admission queue decide when batches
+flush.  ``--churn-every`` applies a join/leave burst (advancing the
+churn epoch) every that-many sessions, so part of the load drains on
+old-epoch committees with vote-absorbed departures.  Prints sessions/sec
+and the realized batch-size histogram.
+
+Mesh/compat bootstrap is shared with ``launch.serve`` via
+``runtime.compat.host_mesh`` (one place for jax-version shims);
+``REPRO_KERNEL_IMPL`` (or ``--impl``) picks the kernel engine exactly as
+in the single-query path.
+"""
+from __future__ import annotations
+
+import argparse
+import collections
+import time
+
+import numpy as np
+
+from repro.core.overlay import build_overlay
+from repro.launch.mesh import make_host_mesh
+from repro.service import (AggregationService, BatchingConfig, EpochManager,
+                           SessionParams)
+
+
+def run_load(svc: AggregationService, em: EpochManager, *, sessions: int,
+             elems: int, churn_every: int, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    n = svc.default_params.n_nodes
+    expected: dict[int, np.ndarray] = {}
+    t0 = time.monotonic()
+    for i in range(sessions):
+        if churn_every and i and i % churn_every == 0:
+            em.churn(joins=4, leaves=4, honest_join_frac=1.0)
+        s = svc.open(now=time.monotonic())
+        vals = rng.integers(0, 2, size=(n, elems)).astype(np.float32)
+        for slot in range(n):
+            s.contribute(slot, vals[slot])
+        expected[s.sid] = vals.sum(0)
+        svc.seal(s.sid, now=time.monotonic())
+        svc.pump()                       # watermark-driven flushes
+    svc.drain()
+    wall = time.monotonic() - t0
+    exact = sum(
+        bool(np.allclose(svc.result(sid), want, atol=1e-3))
+        for sid, want in expected.items())
+    return {"wall_s": wall, "sessions": sessions,
+            "sessions_per_s": sessions / max(wall, 1e-9),
+            "exact": exact, "stats": svc.stats}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sessions", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--max-age", type=float, default=0.05)
+    ap.add_argument("--elems", type=int, default=1024)
+    ap.add_argument("--overlay-n", type=int, default=256)
+    ap.add_argument("--tau", type=float, default=0.2)
+    ap.add_argument("--cluster-size", type=int, default=4)
+    ap.add_argument("--redundancy", type=int, default=3)
+    ap.add_argument("--schedule", default="ring")
+    ap.add_argument("--churn-every", type=int, default=0)
+    ap.add_argument("--impl", default=None,
+                    help="kernel engine override (pallas/pallas_interpret/jnp)")
+    ap.add_argument("--data", type=int, default=1)
+    ap.add_argument("--model", type=int, default=1)
+    args = ap.parse_args()
+
+    mesh = make_host_mesh(data=args.data, model=args.model)
+    print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))} "
+          f"on {mesh.devices.ravel()[0].platform}")
+
+    ov = build_overlay(args.overlay_n, args.tau, seed=42)
+    em = EpochManager(ov, cluster_size=args.cluster_size)
+    snap = em.current()
+    params = SessionParams(n_nodes=snap.n_nodes, elems=args.elems,
+                           cluster_size=args.cluster_size,
+                           redundancy=args.redundancy,
+                           schedule=args.schedule)
+    svc = AggregationService(
+        params, epochs=em,
+        batching=BatchingConfig(max_batch=args.batch, max_age=args.max_age),
+        kernel_impl=args.impl)
+    print(f"service: g={snap.n_clusters} clusters x c={args.cluster_size} "
+          f"-> {snap.n_nodes} slots, T={args.elems}, r={args.redundancy}")
+
+    out = run_load(svc, em, sessions=args.sessions, elems=args.elems,
+                   churn_every=args.churn_every)
+    hist = collections.Counter(out["stats"]["batch_sizes"])
+    print(f"{out['sessions']} sessions in {out['wall_s']:.2f}s "
+          f"({out['sessions_per_s']:.1f} sessions/s), "
+          f"exact results: {out['exact']}/{out['sessions']}")
+    print(f"batches: {out['stats']['batches_run']} "
+          f"(size histogram {dict(sorted(hist.items()))}), "
+          f"final epoch: {out['stats']['epoch']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,6 +14,19 @@ def make_mesh(shape, axes) -> jax.sharding.Mesh:
     return jax.make_mesh(shape, axes)
 
 
+def host_mesh(data: int = 1, model: int = 1,
+              pod: int = 0) -> jax.sharding.Mesh:
+    """The one mesh bootstrap every CLI driver shares (``launch.serve``,
+    ``launch.serve_agg``, tests): a small mesh over the host's devices,
+    built through :func:`make_mesh` so the jax-version shims apply in one
+    place instead of being duplicated per driver."""
+    if pod:
+        shape, axes = (pod, data, model), ("pod", "data", "model")
+    else:
+        shape, axes = (data, model), ("data", "model")
+    return make_mesh(shape, axes)
+
+
 def axis_size(axis_name):
     """``jax.lax.axis_size`` with a pre-0.5 fallback (a psum of the static
     constant 1 folds to the axis size at trace time)."""

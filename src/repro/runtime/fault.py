@@ -13,12 +13,20 @@ the driver:
     from the last checkpoint.  At tensor scale, per-*member* straggling is
     absorbed by the vote redundancy (any r of c copies suffice) — that is
     the paper-level mitigation; this guard covers whole-slice stalls.
+  * ``SessionFaultPlan`` — mid-session fault injection for the
+    multi-session aggregation service: protocol slots that crash (their
+    forwarded ring copies drop to zeros) or turn Byzantine (copies are
+    flipped) while the session is in flight.  Both lower to the vote
+    path's ``ByzantineSpec`` — a dropped or corrupted contribution is
+    out-voted by the r-redundant majority, never retried.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from typing import Optional
+
+from repro.core.byzantine import ByzantineSpec
 
 
 class InjectedCrash(RuntimeError):
@@ -42,6 +50,53 @@ class FailurePlan:
     def byzantine_active(self, step: int) -> bool:
         return (self.byzantine_from_step is not None
                 and step >= self.byzantine_from_step)
+
+
+@dataclasses.dataclass(frozen=True)
+class SessionFaultPlan:
+    """Injected faults for one aggregation session, by protocol slot.
+
+    ``crashed_slots``: members that die mid-session — they stop forwarding
+    (mode "drop"; the epoch layer also adds slots whose overlay node left
+    after the session's epoch snapshot).  ``byzantine_slots``: members
+    whose outgoing copies are corrupted (``byzantine_mode``).  Slots must
+    be disjoint across the two groups; the batched executor applies each
+    group as one masked pass."""
+    crashed_slots: tuple[int, ...] = ()
+    byzantine_slots: tuple[int, ...] = ()
+    byzantine_mode: str = "flip"   # flip | garbage
+
+    def __post_init__(self):
+        overlap = set(self.crashed_slots) & set(self.byzantine_slots)
+        assert not overlap, f"slots in both fault groups: {sorted(overlap)}"
+
+    def specs(self) -> tuple[ByzantineSpec, ...]:
+        """Lower to the vote path's per-mode corruption specs."""
+        out = []
+        if self.crashed_slots:
+            out.append(ByzantineSpec(
+                corrupt_ranks=tuple(sorted(self.crashed_slots)), mode="drop"))
+        if self.byzantine_slots:
+            out.append(ByzantineSpec(
+                corrupt_ranks=tuple(sorted(self.byzantine_slots)),
+                mode=self.byzantine_mode))
+        return tuple(out)
+
+    def merge(self, other: "SessionFaultPlan") -> "SessionFaultPlan":
+        assert other.byzantine_mode == self.byzantine_mode or \
+            not (self.byzantine_slots and other.byzantine_slots)
+        mode = (self.byzantine_mode if self.byzantine_slots
+                else other.byzantine_mode)
+        crashed = tuple(sorted(set(self.crashed_slots)
+                               | set(other.crashed_slots)))
+        byz = tuple(sorted((set(self.byzantine_slots)
+                            | set(other.byzantine_slots)) - set(crashed)))
+        return SessionFaultPlan(crashed_slots=crashed, byzantine_slots=byz,
+                                byzantine_mode=mode)
+
+    @property
+    def empty(self) -> bool:
+        return not (self.crashed_slots or self.byzantine_slots)
 
 
 @dataclasses.dataclass

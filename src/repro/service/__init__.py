@@ -1,0 +1,140 @@
+"""Multi-session secure-aggregation service (DESIGN §Service).
+
+Three layers on top of the PR-1 kernel dispatch path:
+
+  * ``session``  — per-query lifecycle (open -> contribute -> seal ->
+    aggregate -> reveal) with per-session pad key / offset /
+    quantization / redundancy;
+  * ``executor`` — packs S compatible sessions into one (S, T) batched
+    kernel dispatch, plus the admission queue with size/age watermarks;
+  * ``epochs``   — overlay churn epochs: sessions stay pinned to their
+    epoch's committee snapshot, departures become vote-absorbed crashes.
+
+:class:`AggregationService` is the facade gluing them together.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.service.epochs import EpochManager, EpochSnapshot
+from repro.service.executor import (AdmissionQueue, BatchedExecutor,
+                                    BatchingConfig)
+from repro.service.session import (LifecycleError, Session, SessionParams,
+                                   SessionState, derive_session_seed)
+
+__all__ = [
+    "AdmissionQueue", "AggregationService", "BatchedExecutor",
+    "BatchingConfig", "EpochManager", "EpochSnapshot", "LifecycleError",
+    "Session", "SessionParams", "SessionState", "derive_session_seed",
+]
+
+
+class AggregationService:
+    """Front door of the aggregation service.
+
+    ``open`` admits a new session (pinned to the current overlay epoch
+    when an :class:`EpochManager` is attached), ``seal`` hands it to the
+    admission queue, ``pump`` flushes ready batches through the batched
+    executor.  With no epoch manager the service runs a static network
+    of ``default_params.n_nodes`` slots.
+    """
+
+    def __init__(self, default_params: SessionParams,
+                 epochs: Optional[EpochManager] = None,
+                 batching: BatchingConfig = BatchingConfig(),
+                 kernel_impl: Optional[str] = None,
+                 base_seed: int = 0x5EC0_A66):
+        if epochs is not None:
+            snap = epochs.current()
+            assert snap.n_nodes == default_params.n_nodes, \
+                (snap.n_nodes, default_params.n_nodes)
+        self.default_params = default_params
+        self.epochs = epochs
+        self.base_seed = base_seed
+        self.executor = BatchedExecutor(kernel_impl=kernel_impl)
+        self.queue = AdmissionQueue(self.executor, batching,
+                                    pre_execute=self._merge_epoch_faults)
+        self._sessions: dict[int, Session] = {}
+        self._next_sid = 0
+
+    # -- epoch integration --------------------------------------------------
+    def _merge_epoch_faults(self, batch: Sequence[Session]) -> None:
+        """Right before a batch executes, crash-inject every pinned slot
+        whose overlay node departed after the session's epoch snapshot."""
+        if self.epochs is None:
+            return
+        for s in batch:
+            if s.epoch is not None:
+                plan = self.epochs.departed_plan(s.epoch)
+                if not plan.empty:
+                    s.inject_fault(plan)
+
+    # -- lifecycle ----------------------------------------------------------
+    # open/seal/pump share one clock: ``now`` defaults to time.monotonic()
+    # in all three, so the age watermark is meaningful out of the box;
+    # tests pass explicit ticks to all of them instead.
+    def open(self, params: Optional[SessionParams] = None,
+             now: Optional[float] = None) -> Session:
+        now = time.monotonic() if now is None else now
+        params = params or self.default_params
+        sid = self._next_sid
+        self._next_sid += 1
+        epoch = self.epochs.current() if self.epochs is not None else None
+        if epoch is not None:
+            assert epoch.n_nodes == params.n_nodes, \
+                "session shape must match the epoch committee layout"
+        s = Session(sid, params, derive_session_seed(self.base_seed, sid),
+                    epoch=epoch, opened_at=now)
+        self._sessions[sid] = s
+        return s
+
+    def get(self, sid: int) -> Session:
+        return self._sessions[sid]
+
+    def contribute(self, sid: int, slot: int, value) -> None:
+        self._sessions[sid].contribute(slot, value)
+
+    def seal(self, sid: int, now: Optional[float] = None) -> None:
+        s = self._sessions[sid]
+        s.seal(time.monotonic() if now is None else now)
+        self.queue.submit(s)
+
+    def pump(self, now: Optional[float] = None, force: bool = False) -> int:
+        """Flush ready batches; returns number of sessions revealed."""
+        return self.queue.pump(time.monotonic() if now is None else now,
+                               force=force)
+
+    def drain(self) -> int:
+        """Force-flush everything pending (shutdown / end of load)."""
+        return self.queue.pump(force=True)
+
+    def result(self, sid: int, evict: bool = False) -> np.ndarray:
+        """Revealed aggregate of session ``sid``.  ``evict=True`` also
+        forgets the session — a long-lived service should evict (or call
+        :meth:`evict` on FAILED sessions) to keep memory bounded."""
+        out = self._sessions[sid].result
+        if evict:
+            del self._sessions[sid]
+        return out
+
+    def evict(self, sid: int) -> None:
+        """Forget a terminal (REVEALED/FAILED) session."""
+        s = self._sessions[sid]
+        assert s.state in (SessionState.REVEALED, SessionState.FAILED), s
+        del self._sessions[sid]
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def stats(self) -> dict:
+        return {
+            "sessions_opened": self._next_sid,
+            "sessions_run": self.executor.sessions_run,
+            "batches_run": self.executor.batches_run,
+            "pending": self.queue.depth(),
+            "batch_sizes": tuple(self.queue.batch_sizes),
+            "epoch": (self.epochs.current().epoch
+                      if self.epochs is not None else None),
+        }

@@ -1,0 +1,127 @@
+"""Churn-epoch integration: pin in-flight sessions to overlay snapshots.
+
+The cuckoo overlay (``core/overlay.py``) churns continuously — joins and
+leaves move nodes between clusters.  The tensor path, however, needs a
+*fixed* (g clusters x c members) committee layout for the whole life of
+an aggregation session.  The bridge is the epoch:
+
+  * ``EpochManager.current()`` snapshots the overlay's cluster
+    assignments into an :class:`EpochSnapshot` — for each of g clusters,
+    a committee of ``cluster_size`` members (protocol slots), with their
+    overlay uids and honesty flags.
+  * Sessions opened under epoch e stay pinned to e's snapshot even if
+    the overlay churns while they are in flight — their ppermute layout
+    and pad streams never change mid-session.
+  * At execute time, any pinned slot whose overlay node has since *left*
+    is injected as a mid-session crash via
+    ``runtime.fault.SessionFaultPlan`` (mode "drop") — the dropped
+    contribution is resolved by the vote path's r-redundant majority,
+    exactly like the paper's Byzantine tolerance, with no retry round.
+
+``churn`` applies a join/leave burst to the overlay and advances the
+epoch, so new sessions see the new committees while old sessions drain
+on the old ones.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Optional
+
+from repro.core.overlay import Overlay
+from repro.runtime.fault import SessionFaultPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class EpochSnapshot:
+    """Frozen committee layout: slot s belongs to cluster s // cluster_size
+    and is played by overlay node ``slot_uids[s]``."""
+    epoch: int
+    cluster_size: int
+    slot_uids: tuple[int, ...]
+    honest: tuple[bool, ...]
+
+    @property
+    def n_nodes(self) -> int:
+        return len(self.slot_uids)
+
+    @property
+    def n_clusters(self) -> int:
+        return self.n_nodes // self.cluster_size
+
+    def slots_of(self, uid: int) -> tuple[int, ...]:
+        return tuple(s for s, u in enumerate(self.slot_uids) if u == uid)
+
+
+class EpochManager:
+    """Owns the overlay's epoch counter and committee snapshots."""
+
+    def __init__(self, overlay: Overlay, cluster_size: int = 4,
+                 n_clusters: Optional[int] = None):
+        self.overlay = overlay
+        self.cluster_size = cluster_size
+        self.n_clusters = n_clusters or overlay.g
+        self._epoch = 0
+        self._snap: Optional[EpochSnapshot] = None
+
+    # -- snapshots ----------------------------------------------------------
+    def _committee(self) -> tuple[list[int], list[bool]]:
+        """Pick ``cluster_size`` members per cluster (lowest uids — a
+        deterministic stand-in for the paper's intra-cluster selection).
+        Short clusters cycle their members; empty clusters borrow from
+        the nearest non-empty one (both only occur at tiny sizes)."""
+        clusters = self.overlay.clusters()[: self.n_clusters]
+        non_empty = [sorted(nd.uid for nd in cl) for cl in clusters if cl]
+        assert non_empty, "overlay has no members to snapshot"
+        uids, honest = [], []
+        for ci in range(self.n_clusters):
+            members = (sorted(nd.uid for nd in clusters[ci])
+                       if ci < len(clusters) and clusters[ci]
+                       else non_empty[ci % len(non_empty)])
+            for m in range(self.cluster_size):
+                uid = members[m % len(members)]
+                uids.append(uid)
+                honest.append(self.overlay.nodes[uid].honest)
+        return uids, honest
+
+    def current(self) -> EpochSnapshot:
+        if self._snap is None:
+            uids, honest = self._committee()
+            self._snap = EpochSnapshot(
+                epoch=self._epoch, cluster_size=self.cluster_size,
+                slot_uids=tuple(uids), honest=tuple(honest))
+        return self._snap
+
+    def advance(self) -> EpochSnapshot:
+        """Start a new epoch with a fresh committee snapshot."""
+        self._epoch += 1
+        self._snap = None
+        return self.current()
+
+    # -- churn --------------------------------------------------------------
+    def churn(self, joins: int = 0, leaves: int = 0,
+              honest_join_frac: float = 1.0,
+              rng: Optional[random.Random] = None) -> EpochSnapshot:
+        """Apply a join/leave burst to the overlay, then advance the
+        epoch.  Sessions opened before this call stay pinned to the old
+        snapshot; their departed members surface via ``departed_plan``."""
+        rng = rng or random.Random(self._epoch * 7919 + 13)
+        uids = list(self.overlay.nodes)
+        for uid in rng.sample(uids, min(leaves, len(uids))):
+            self.overlay.leave(uid)
+        for _ in range(joins):
+            self.overlay.join(honest=rng.random() < honest_join_frac)
+        return self.advance()
+
+    # -- fault integration --------------------------------------------------
+    def departed_slots(self, snap: EpochSnapshot) -> tuple[int, ...]:
+        """Slots of ``snap`` whose overlay node has left since the
+        snapshot was taken."""
+        alive = self.overlay.nodes
+        return tuple(s for s, uid in enumerate(snap.slot_uids)
+                     if uid not in alive)
+
+    def departed_plan(self, snap: EpochSnapshot) -> SessionFaultPlan:
+        """Mid-session crash injection for a pinned session: every
+        departed slot stops forwarding; the vote absorbs it."""
+        return SessionFaultPlan(crashed_slots=self.departed_slots(snap))

@@ -1,0 +1,178 @@
+"""Batched session executor + admission scheduler.
+
+The executor is where the service meets the PR-1 kernel dispatch layer:
+S concurrent sessions that share a :class:`BatchKey` are packed into one
+(S, n_nodes, T_chunk) batch and run through
+``simulate_secure_allreduce_batch`` — every protocol stage
+(``mask_encrypt`` / voted hops / ``unmask_decrypt``) is ONE batched
+kernel dispatch over all S sessions instead of S separate protocol runs,
+bit-identical to the monolithic per-session path by construction.
+
+The admission queue coalesces sealed sessions per batch key and flushes
+on two watermarks:
+
+  * size — a full batch of ``max_batch`` sessions flushes immediately;
+  * age  — a partial batch flushes once its oldest sealed session has
+    waited ``max_age`` (time units are whatever the caller passes as
+    ``now``: seconds from a wall clock, or integer ticks in tests).
+
+Payload lengths are rounded up to ``pad_buckets`` so sessions with
+similar (not identical) T share a compiled executable; the pad tail is
+zero-contribution elements that are sliced off at reveal.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.secure_allreduce import (_fault_masks,
+                                         simulate_secure_allreduce_batch)
+from repro.service.session import Session, SessionState
+
+BatchKey = tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchingConfig:
+    max_batch: int = 8            # size watermark (S)
+    max_age: float = 0.05         # age watermark, in `now` units
+    pad_buckets: tuple[int, ...] = (64, 256, 1024, 4096, 16384)
+
+    def padded_elems(self, elems: int) -> int:
+        for b in self.pad_buckets:
+            if elems <= b:
+                return b
+        top = self.pad_buckets[-1]
+        return ((elems + top - 1) // top) * top
+
+
+class BatchedExecutor:
+    """Runs batches of sealed sessions through one batched dispatch.
+
+    Compiled executables are cached per (batch key, S, fault plan) — a
+    steady-state service replays a handful of shapes, so each shape
+    compiles once and every later batch is a single cached call.
+    """
+
+    def __init__(self, kernel_impl: Optional[str] = None):
+        self.kernel_impl = kernel_impl
+        self._fns: dict = {}
+        self.batches_run = 0
+        self.sessions_run = 0
+
+    def _compiled(self, template: Session, padded: int, S: int,
+                  modes: frozenset) -> Callable:
+        # fault PATTERNS are runtime (S, n) masks, so churn/missing-slot
+        # variation never retraces; only the set of fault MODES present
+        # (<= 8 combinations) is part of the executable's identity
+        key = (template.params.batch_key(padded), S, modes)
+        fn = self._fns.get(key)
+        if fn is None:
+            cfg = template.params.agg_config(self.kernel_impl)
+
+            @jax.jit
+            def fn(xs, seeds, offsets, fault_masks):
+                # every member holds the same aggregate; reveal one copy
+                return simulate_secure_allreduce_batch(
+                    xs, cfg, seeds=seeds, offsets=offsets,
+                    fault_masks=fault_masks, reveal_only=True)
+
+            self._fns[key] = fn
+        return fn
+
+    def execute(self, sessions: Sequence[Session],
+                padded_elems: Optional[int] = None) -> None:
+        """Aggregate + reveal one batch (all sessions share a batch key).
+
+        On an executor error every session in the batch moves to FAILED
+        (never retried, never wedged in AGGREGATING) and the error
+        propagates to the pump caller."""
+        if not sessions:
+            return
+        padded = padded_elems or max(s.params.elems for s in sessions)
+        key0 = sessions[0].params.batch_key(padded)
+        assert all(s.params.batch_key(padded) == key0 for s in sessions), \
+            "batch mixes incompatible sessions"
+        for s in sessions:
+            s.mark_aggregating()
+        try:
+            xs = np.stack([s.payload_matrix(padded) for s in sessions])
+            seeds = jnp.asarray([s.seed for s in sessions], dtype=jnp.uint32)
+            offsets = jnp.asarray([s.pad_offset for s in sessions],
+                                  dtype=jnp.uint32)
+            masks = _fault_masks([s.fault.specs() for s in sessions],
+                                 sessions[0].params.n_nodes)
+            fn = self._compiled(sessions[0], padded, len(sessions),
+                                frozenset(masks))
+            revealed = np.asarray(fn(
+                jnp.asarray(xs), seeds, offsets,
+                {k: jnp.asarray(v) for k, v in masks.items()}))
+        except Exception as e:
+            for s in sessions:
+                s.fail(repr(e))
+            raise
+        for s, row in zip(sessions, revealed):
+            s.reveal(row)
+        self.batches_run += 1
+        self.sessions_run += len(sessions)
+
+
+class AdmissionQueue:
+    """Coalesces sealed sessions into fixed-size batches per batch key."""
+
+    def __init__(self, executor: BatchedExecutor,
+                 batching: BatchingConfig = BatchingConfig(),
+                 pre_execute: Optional[Callable] = None):
+        self.executor = executor
+        self.batching = batching
+        self.pre_execute = pre_execute   # e.g. epoch-departure fault merge
+        self._pending: dict[BatchKey, list[Session]] = {}
+        self.batch_sizes: list[int] = []
+
+    def submit(self, session: Session) -> BatchKey:
+        assert session.state is SessionState.SEALED, session
+        padded = self.batching.padded_elems(session.params.elems)
+        key = session.params.batch_key(padded)
+        self._pending.setdefault(key, []).append(session)
+        return key
+
+    def depth(self) -> int:
+        return sum(len(q) for q in self._pending.values())
+
+    def _run(self, key: BatchKey, batch: list[Session]) -> None:
+        if self.pre_execute is not None:
+            self.pre_execute(batch)
+        self.executor.execute(batch, padded_elems=key[-1])
+        self.batch_sizes.append(len(batch))
+        if len(self.batch_sizes) > 4096:   # bounded history
+            del self.batch_sizes[:-2048]
+
+    def pump(self, now: float = 0.0, force: bool = False) -> int:
+        """Flush ready batches; returns the number of sessions executed.
+
+        Size watermark: every full ``max_batch`` group flushes.  Age
+        watermark: a partial group flushes when its oldest member sealed
+        more than ``max_age`` ago (or unconditionally with ``force``)."""
+        ran = 0
+        for key in list(self._pending):
+            q = self._pending[key]
+            while len(q) >= self.batching.max_batch:
+                batch, self._pending[key] = (q[: self.batching.max_batch],
+                                             q[self.batching.max_batch:])
+                q = self._pending[key]
+                self._run(key, batch)
+                ran += len(batch)
+            if q and (force or
+                      now - min(s.sealed_at for s in q)
+                      >= self.batching.max_age):
+                batch, self._pending[key] = list(q), []
+                q = self._pending[key]
+                self._run(key, batch)   # batch already dequeued: a raising
+                ran += len(batch)       # executor FAILs it, never retries
+            if not q:
+                del self._pending[key]
+        return ran

@@ -1,0 +1,189 @@
+"""Aggregation-session engine — one session per query (DESIGN §Service).
+
+The paper's protocol aggregates one query over one network; the service
+turns that into a *stream* of queries: every session is an independent
+secure aggregation with an explicit lifecycle
+
+    open -> contribute -> seal -> aggregate -> reveal
+
+and carries its own pad-stream key (derived from the service seed and the
+session id with the same splitmix32 mixer the kernels use), a pad-stream
+counter offset, its quantization config, and its vote redundancy.
+Sessions that share a :class:`BatchKey` (identical static protocol
+parameters and padded payload length) can be packed by the executor into
+one (S, T) batched kernel dispatch.
+
+A slot that never contributes by seal time is treated as crashed: its
+payload counts as zero and its ring copies are dropped — resolved by the
+vote path, exactly like a mid-session crash injected via
+``runtime.fault.SessionFaultPlan``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+import numpy as np
+
+from repro.core.secure_allreduce import AggConfig
+from repro.runtime.fault import SessionFaultPlan
+
+_MASK32 = 0xFFFFFFFF
+
+
+def derive_session_seed(base_seed: int, session_id: int) -> int:
+    """Per-session pad-stream key: the kernels' splitmix32 mixer applied
+    to (base_seed, session_id) — distinct sessions never share a pad
+    stream even at identical counter offsets."""
+    x = (base_seed ^ (session_id * 0x85EBCA6B)) & _MASK32
+    x = (x + 0x9E3779B9) & _MASK32
+    x = ((x ^ (x >> 16)) * 0x85EBCA6B) & _MASK32
+    x = ((x ^ (x >> 13)) * 0xC2B2AE35) & _MASK32
+    return (x ^ (x >> 16)) & _MASK32
+
+
+class SessionState(enum.Enum):
+    OPEN = "open"                # accepting contributions
+    SEALED = "sealed"            # admitted to the scheduler queue
+    AGGREGATING = "aggregating"  # packed into an executing batch
+    REVEALED = "revealed"        # result available
+    FAILED = "failed"
+
+
+class LifecycleError(RuntimeError):
+    """An operation was attempted in the wrong session state."""
+
+
+@dataclasses.dataclass(frozen=True)
+class SessionParams:
+    """Static protocol parameters of one session.  Everything here is
+    part of the batch key — sessions must agree on all of it (plus the
+    padded payload length) to share one (S, T) executor batch."""
+    n_nodes: int
+    elems: int                    # payload length T (per-node vector)
+    cluster_size: int = 4
+    redundancy: int = 3           # r odd, <= cluster_size
+    schedule: str = "ring"
+    clip: float = 1.0
+    guard_bits: int = 2
+    masking: str = "global"       # global | none
+
+    def __post_init__(self):
+        assert self.elems >= 1
+        AggConfig(n_nodes=self.n_nodes, cluster_size=self.cluster_size,
+                  redundancy=self.redundancy, schedule=self.schedule)
+
+    def agg_config(self, kernel_impl: Optional[str] = None) -> AggConfig:
+        return AggConfig(n_nodes=self.n_nodes,
+                         cluster_size=self.cluster_size,
+                         redundancy=self.redundancy, schedule=self.schedule,
+                         masking=self.masking, clip=self.clip,
+                         guard_bits=self.guard_bits,
+                         kernel_impl=kernel_impl)
+
+    def batch_key(self, padded_elems: int) -> tuple:
+        return (self.n_nodes, self.cluster_size, self.redundancy,
+                self.schedule, self.clip, self.guard_bits, self.masking,
+                padded_elems)
+
+
+class Session:
+    """One aggregation query in flight.
+
+    Created by the service facade (which pins it to the current overlay
+    epoch); nodes ``contribute`` their payload by protocol slot; ``seal``
+    freezes the input set and hands the session to the admission queue;
+    the executor moves it through AGGREGATING to REVEALED.
+    """
+
+    def __init__(self, sid: int, params: SessionParams, seed: int,
+                 pad_offset: int = 0, epoch: Optional[object] = None,
+                 opened_at: float = 0.0):
+        self.sid = sid
+        self.params = params
+        self.seed = int(seed) & _MASK32
+        self.pad_offset = int(pad_offset) & _MASK32
+        self.epoch = epoch            # EpochSnapshot this session is pinned to
+        self.opened_at = opened_at
+        self.sealed_at: Optional[float] = None
+        self.state = SessionState.OPEN
+        self.fault = SessionFaultPlan()
+        self.failed_reason: Optional[str] = None
+        self._contrib: dict[int, np.ndarray] = {}
+        self._slots: Optional[tuple[int, ...]] = None
+        self._result: Optional[np.ndarray] = None
+
+    # -- lifecycle ----------------------------------------------------------
+    def _require(self, *states: SessionState) -> None:
+        if self.state not in states:
+            raise LifecycleError(
+                f"session {self.sid}: {self.state.value} not in "
+                f"{[s.value for s in states]}")
+
+    def contribute(self, slot: int, value) -> None:
+        """Record slot's payload (float vector of ``params.elems``)."""
+        self._require(SessionState.OPEN)
+        if not 0 <= slot < self.params.n_nodes:
+            raise ValueError(f"slot {slot} out of range")
+        vec = np.asarray(value, np.float32).reshape(-1)
+        if vec.shape[0] != self.params.elems:
+            raise ValueError(
+                f"payload length {vec.shape[0]} != elems {self.params.elems}")
+        self._contrib[slot] = vec
+
+    def inject_fault(self, plan: SessionFaultPlan) -> None:
+        """Merge mid-session faults (crashes / Byzantine flips)."""
+        self._require(SessionState.OPEN, SessionState.SEALED)
+        self.fault = self.fault.merge(plan)
+
+    def seal(self, now: float = 0.0) -> None:
+        """Freeze the input set.  Slots that never contributed are
+        marked crashed (zero payload + dropped ring copies)."""
+        self._require(SessionState.OPEN)
+        missing = tuple(sorted(set(range(self.params.n_nodes))
+                               - set(self._contrib)))
+        if missing:
+            self.fault = self.fault.merge(
+                SessionFaultPlan(crashed_slots=missing))
+        self._slots = tuple(sorted(self._contrib))
+        self.state = SessionState.SEALED
+        self.sealed_at = now
+
+    def payload_matrix(self, padded_elems: int) -> np.ndarray:
+        """(n_nodes, padded_elems) float32 contributions, zero-filled for
+        missing slots and for the pad tail beyond ``params.elems``."""
+        self._require(SessionState.SEALED, SessionState.AGGREGATING)
+        out = np.zeros((self.params.n_nodes, padded_elems), np.float32)
+        for slot, vec in self._contrib.items():
+            out[slot, : self.params.elems] = vec
+        return out
+
+    def mark_aggregating(self) -> None:
+        self._require(SessionState.SEALED)
+        self.state = SessionState.AGGREGATING
+
+    def reveal(self, revealed: np.ndarray) -> None:
+        self._require(SessionState.AGGREGATING)
+        self._result = np.asarray(revealed[: self.params.elems])
+        self._contrib.clear()   # payloads are dead weight once revealed
+        self.state = SessionState.REVEALED
+
+    def fail(self, reason: str = "") -> None:
+        self.state = SessionState.FAILED
+        self.failed_reason = reason
+        self._contrib.clear()
+
+    @property
+    def result(self) -> np.ndarray:
+        self._require(SessionState.REVEALED)
+        return self._result
+
+    @property
+    def contributed_slots(self) -> tuple[int, ...]:
+        return (self._slots if self._slots is not None
+                else tuple(sorted(self._contrib)))
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"Session(sid={self.sid}, state={self.state.value}, "
+                f"n={self.params.n_nodes}, T={self.params.elems})")

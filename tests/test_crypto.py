@@ -70,6 +70,34 @@ def test_threshold_below_t_shares_rejected():
         tp.combine(parts)
 
 
+def test_threshold_partial_decrypt_kernel_matches_python():
+    """Threshold decryption routed through the batched modmul kernel
+    (``mont_exp_op`` square-and-multiply, one lane per share) produces
+    the exact Python-pow partials, and they combine to the plaintext —
+    protocol-scale crypto shares the kernel dispatch layer."""
+    tp, shares = threshold_keygen(t=3, c=5, p=P, q=Q)
+    msg = 31337 % tp.pk.n
+    ct = tp.pk.encrypt(msg)
+    want = [(s.index, tp.partial_decrypt(ct, s)) for s in shares]
+    got_kernel = tp.partial_decrypt_batch(ct, shares)
+    got_py = tp.partial_decrypt_batch(ct, shares, use_kernel=False)
+    assert got_kernel == want == got_py
+    assert tp.combine(got_kernel[:3]) == msg
+    assert tp.partial_decrypt_batch(ct, []) == []
+
+
+def test_protocol_step4_kernel_crypto_matches_python():
+    """DAProtocol with kernel-routed Step 4 returns the identical poll
+    result (same adversary draws, same decrypted output)."""
+    from repro.core.overlay import build_overlay
+    from repro.core.protocol import DAProtocol
+    a = DAProtocol(build_overlay(64, 0.2, seed=5), key_bits=32, seed=5,
+                   kernel_crypto=False).run()
+    b = DAProtocol(build_overlay(64, 0.2, seed=5), key_bits=32, seed=5,
+                   kernel_crypto=True).run()
+    assert b.output == a.output == a.expected and b.exact and a.exact
+
+
 def test_threshold_homomorphic_sum():
     tp, shares = threshold_keygen(t=3, c=5, p=P, q=Q)
     vals = [3, 14, 15, 92, 65]

@@ -33,6 +33,46 @@ def test_join_cost_is_polylog():
     assert cost < 60 * math.log2(256) ** 3
 
 
+def test_long_interleaved_churn_keeps_invariants():
+    """Long alternating join/leave traffic (several times the network
+    size in churn events): cluster sizes stay Θ(log n) — bounded within
+    a constant factor of the mean — and the honest-majority fraction
+    stays w.h.p.-high throughout, checked at regular probes rather than
+    only at the end."""
+    import math
+    import random as _r
+    ov = build_overlay(512, 0.3, seed=7)
+    rng = _r.Random(99)
+    logn = math.log2(512)
+    for step in range(600):
+        if ov.nodes and rng.random() < 0.5:
+            ov.leave(rng.choice(list(ov.nodes)))
+        else:
+            # keep the adversarial fraction near tau on average
+            ov.join(honest=rng.random() >= 0.3)
+        if step % 100 == 99:
+            inv = ov.check_invariants()
+            assert inv["min_size"] >= 1, inv
+            assert inv["max_size"] <= 10 * inv["mean_size"], inv
+            assert inv["mean_size"] >= logn / 4, inv
+            assert inv["honest_majority_frac"] >= 0.9, inv
+
+
+def test_churn_epoch_manager_tracks_departures():
+    """EpochManager snapshots are stable under overlay churn; departed
+    committee members are reported for exactly the old epoch."""
+    from repro.service import EpochManager
+    ov = build_overlay(256, 0.2, seed=11)
+    em = EpochManager(ov, cluster_size=4)
+    snap = em.current()
+    victim = snap.slot_uids[1]
+    ov.leave(victim)
+    assert set(em.departed_slots(snap)) == set(snap.slots_of(victim))
+    new = em.advance()
+    assert victim not in new.slot_uids
+    assert em.departed_slots(new) == ()
+
+
 def test_positions_in_unit_interval():
     ov = build_overlay(64, 0.2, seed=3)
     assert all(0.0 <= nd.pos < 1.0 for nd in ov.nodes.values())

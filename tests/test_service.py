@@ -1,0 +1,354 @@
+"""Multi-session aggregation service: batched executor bit-exactness vs
+the PR-1 per-session path (under injected crash + Byzantine sessions),
+session lifecycle, admission watermarks, and churn-epoch pinning."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.byzantine import ByzantineSpec
+from repro.core.overlay import build_overlay
+from repro.core.secure_allreduce import (AggConfig,
+                                         simulate_secure_allreduce,
+                                         simulate_secure_allreduce_batch)
+from repro.runtime.fault import SessionFaultPlan
+from repro.service import (AggregationService, BatchingConfig, EpochManager,
+                           LifecycleError, SessionParams, SessionState)
+
+RNG = np.random.default_rng(11)
+
+
+# ---------------------------------------------------------------------------
+# Batched entry point == S monolithic PR-1 runs (the acceptance pin)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("schedule", ["ring", "butterfly"])
+def test_batched_equals_monolithic_under_faults(schedule):
+    """(S, n, T) batch == S monolithic ``simulate_secure_allreduce`` runs
+    bit-for-bit, S=8, with one injected crash session and one Byzantine
+    session; per-session pad-stream keys."""
+    S, n, c, T = 8, 16, 4, 333
+    xs = jnp.asarray(RNG.normal(size=(S, n, T)).astype(np.float32) * 0.2)
+    seeds = [0x5EC0A66 + 977 * s for s in range(S)]
+    faults = [() for _ in range(S)]
+    faults[2] = (ByzantineSpec(corrupt_ranks=(5,), mode="drop"),)   # crash
+    faults[5] = (ByzantineSpec(corrupt_ranks=(10,), mode="flip"),)  # byz
+    cfg = AggConfig(n_nodes=n, cluster_size=c, redundancy=3,
+                    schedule=schedule, clip=2.0)
+    got = np.asarray(simulate_secure_allreduce_batch(
+        xs, cfg, seeds=jnp.asarray(seeds, dtype=jnp.uint32), faults=faults))
+    for s in range(S):
+        scfg = dataclasses.replace(
+            cfg, seed=seeds[s],
+            byzantine=faults[s][0] if faults[s] else ByzantineSpec())
+        want = np.asarray(simulate_secure_allreduce(xs[s], scfg))
+        assert np.array_equal(got[s], want), f"session {s} diverged"
+    # faults were absorbed by the vote: revealed sums stay exact
+    err = np.abs(got[:, 0] - np.asarray(xs).sum(1)).max()
+    assert err < 1e-4
+
+
+def test_reveal_only_matches_full_output():
+    S, n, T = 4, 16, 257
+    xs = jnp.asarray(RNG.normal(size=(S, n, T)).astype(np.float32) * 0.2)
+    seeds = jnp.arange(S, dtype=jnp.uint32) + 3
+    cfg = AggConfig(n_nodes=n, cluster_size=4, redundancy=3)
+    full = simulate_secure_allreduce_batch(xs, cfg, seeds=seeds)
+    ro = simulate_secure_allreduce_batch(xs, cfg, seeds=seeds,
+                                         reveal_only=True)
+    assert np.array_equal(np.asarray(full[:, 0]), np.asarray(ro))
+
+
+def test_per_session_offsets_shift_the_pad_stream():
+    """A session at counter offset k reproduces the tail of a longer
+    session's stream — what chunked long payloads rely on."""
+    n, T, k = 16, 128, 64
+    x = RNG.normal(size=(1, n, T)).astype(np.float32) * 0.2
+    cfg = AggConfig(n_nodes=n, cluster_size=4, redundancy=3)
+    seeds = jnp.asarray([42], dtype=jnp.uint32)
+    whole = simulate_secure_allreduce_batch(jnp.asarray(x), cfg, seeds=seeds)
+    tail = simulate_secure_allreduce_batch(
+        jnp.asarray(x[:, :, k:]), cfg, seeds=seeds,
+        offsets=jnp.asarray([k], dtype=jnp.uint32))
+    assert np.array_equal(np.asarray(whole)[:, :, k:], np.asarray(tail))
+
+
+# ---------------------------------------------------------------------------
+# Session lifecycle
+# ---------------------------------------------------------------------------
+
+
+def _params(n=8, elems=16, c=4):
+    return SessionParams(n_nodes=n, elems=elems, cluster_size=c,
+                         redundancy=3)
+
+
+def test_lifecycle_enforced():
+    svc = AggregationService(_params(),
+                             batching=BatchingConfig(max_batch=1))
+    s = svc.open()
+    assert s.state is SessionState.OPEN
+    with pytest.raises(LifecycleError):
+        _ = s.result                        # not revealed yet
+    s.contribute(0, np.ones(16, np.float32))
+    with pytest.raises(ValueError):
+        s.contribute(99, np.ones(16, np.float32))   # bad slot
+    with pytest.raises(ValueError):
+        s.contribute(1, np.ones(5, np.float32))     # bad length
+    svc.seal(s.sid)
+    assert s.state is SessionState.SEALED
+    with pytest.raises(LifecycleError):
+        s.contribute(1, np.ones(16, np.float32))    # sealed: no contribs
+    svc.pump(force=True)
+    assert s.state is SessionState.REVEALED
+    with pytest.raises(LifecycleError):
+        s.seal()                                    # cannot re-seal
+
+
+def test_missing_contributions_count_as_zero_and_crash():
+    """Slots that never contribute are zero-payload + dropped ring copies
+    (vote-absorbed) — the revealed sum covers contributors only."""
+    svc = AggregationService(_params(n=16, elems=8),
+                             batching=BatchingConfig(max_batch=1))
+    s = svc.open()
+    vals = RNG.integers(0, 2, size=(16, 8)).astype(np.float32)
+    contributors = [i for i in range(16) if i % 5 != 0]  # <= 1 miss/cluster
+    for slot in contributors:
+        s.contribute(slot, vals[slot])
+    svc.seal(s.sid)
+    assert set(s.fault.crashed_slots) == {0, 5, 10, 15}
+    svc.pump(force=True)
+    want = vals[contributors].sum(0)
+    assert np.allclose(s.result, want, atol=1e-4)
+
+
+def test_distinct_sessions_get_distinct_pad_keys():
+    svc = AggregationService(_params())
+    seeds = {svc.open().seed for _ in range(64)}
+    assert len(seeds) == 64
+
+
+# ---------------------------------------------------------------------------
+# Admission queue watermarks and batching
+# ---------------------------------------------------------------------------
+
+
+def _fill(svc, elems=16, now=0.0):
+    s = svc.open(now=now)
+    for slot in range(s.params.n_nodes):
+        s.contribute(slot, np.full(elems, 0.5, np.float32))
+    svc.seal(s.sid, now=now)
+    return s
+
+
+def test_size_watermark_flushes_full_batches():
+    svc = AggregationService(
+        _params(), batching=BatchingConfig(max_batch=4, max_age=1e9))
+    sessions = [_fill(svc) for _ in range(10)]
+    assert svc.pump(now=0.0) == 8          # two full batches of 4
+    assert svc.stats["batch_sizes"] == (4, 4)
+    assert svc.queue.depth() == 2
+    assert sessions[7].state is SessionState.REVEALED
+    assert sessions[8].state is SessionState.SEALED
+
+
+def test_age_watermark_flushes_partial_batches():
+    svc = AggregationService(
+        _params(), batching=BatchingConfig(max_batch=4, max_age=5.0))
+    _fill(svc, now=0.0)
+    _fill(svc, now=2.0)
+    assert svc.pump(now=3.0) == 0          # young partial batch waits
+    assert svc.pump(now=5.0) == 2          # oldest aged out: flush both
+    assert svc.stats["batch_sizes"] == (2,)
+
+
+def test_incompatible_sessions_never_share_a_batch():
+    svc = AggregationService(
+        _params(), batching=BatchingConfig(max_batch=8, max_age=1e9))
+    _fill(svc, elems=16)
+    other = svc.open(params=SessionParams(   # different quantization cfg
+        n_nodes=8, elems=16, cluster_size=4, redundancy=3, clip=2.0))
+    for slot in range(8):
+        other.contribute(slot, np.full(16, 0.5, np.float32))
+    svc.seal(other.sid)
+    assert svc.pump(force=True) == 2
+    assert sorted(svc.stats["batch_sizes"]) == [1, 1]  # two separate batches
+
+
+def test_pad_bucket_rounds_up_payload_length():
+    b = BatchingConfig(pad_buckets=(64, 256))
+    assert b.padded_elems(3) == 64
+    assert b.padded_elems(64) == 64
+    assert b.padded_elems(65) == 256
+    assert b.padded_elems(1000) == 1024    # beyond top bucket: multiples
+    svc = AggregationService(
+        _params(elems=33), batching=BatchingConfig(max_batch=1,
+                                                   pad_buckets=(64,)))
+    s = _fill(svc, elems=33)
+    svc.pump(force=True)
+    assert s.result.shape == (33,)         # pad tail sliced off
+    assert np.allclose(s.result, np.full(33, 0.5 * 8), atol=1e-4)
+
+
+def test_batched_service_matches_per_session_service():
+    """S >= 8 sessions through one batch == the same sessions executed
+    one-by-one (max_batch=1), bit for bit."""
+    vals = RNG.normal(size=(12, 8, 16)).astype(np.float32) * 0.3
+
+    def run(max_batch):
+        svc = AggregationService(
+            _params(), batching=BatchingConfig(max_batch=max_batch,
+                                               max_age=1e9))
+        out = []
+        for i in range(12):
+            s = svc.open()
+            for slot in range(8):
+                s.contribute(slot, vals[i, slot])
+            svc.seal(s.sid)
+        svc.pump(force=True)
+        for sid in range(12):
+            out.append(svc.result(sid))
+        return np.stack(out)
+
+    assert np.array_equal(run(12), run(1))
+
+
+def test_executor_failure_fails_batch_not_wedges(monkeypatch):
+    """An executor error moves the whole batch to FAILED and leaves the
+    queue drained — no session is wedged in AGGREGATING, no retry."""
+    svc = AggregationService(
+        _params(), batching=BatchingConfig(max_batch=4, max_age=1e9))
+    s = _fill(svc)
+
+    def boom(*a, **k):
+        raise RuntimeError("injected executor failure")
+
+    monkeypatch.setattr(svc.executor, "_compiled", boom)
+    with pytest.raises(RuntimeError):
+        svc.pump(force=True)
+    assert s.state is SessionState.FAILED
+    assert "injected" in s.failed_reason
+    assert svc.queue.depth() == 0
+    assert svc.pump(force=True) == 0      # nothing left to retry
+    with pytest.raises(LifecycleError):
+        _ = s.result
+    svc.evict(s.sid)
+
+
+def test_reveal_frees_payloads_and_evict_forgets():
+    svc = AggregationService(_params(),
+                             batching=BatchingConfig(max_batch=1))
+    s = _fill(svc)
+    svc.pump(force=True)
+    assert s.contributed_slots == tuple(range(8))
+    assert not s._contrib                 # payloads freed at reveal
+    out = svc.result(s.sid, evict=True)
+    assert out.shape == (16,)
+    with pytest.raises(KeyError):
+        svc.result(s.sid)
+
+
+def test_fault_patterns_share_one_compiled_executable():
+    """Different fault PATTERNS (masks) reuse one executable; only the
+    set of fault modes is part of the compile-cache key."""
+    svc = AggregationService(
+        _params(n=16, elems=8),
+        batching=BatchingConfig(max_batch=1, max_age=1e9))
+    vals = RNG.integers(0, 2, size=(16, 8)).astype(np.float32)
+    for victim in (0, 5, 10):             # three distinct crash patterns
+        s = svc.open()
+        for slot in range(16):
+            if slot != victim:
+                s.contribute(slot, vals[slot])
+        svc.seal(s.sid)
+        svc.pump(force=True)
+        want = vals.sum(0) - vals[victim]
+        assert np.allclose(s.result, want, atol=1e-4)
+    assert len(svc.executor._fns) == 1
+
+
+# ---------------------------------------------------------------------------
+# Churn epochs: pinned sessions survive mid-flight churn
+# ---------------------------------------------------------------------------
+
+
+def _service_on_overlay(n=256, tau=0.2, seed=3, max_batch=4):
+    ov = build_overlay(n, tau, seed=seed)
+    em = EpochManager(ov, cluster_size=4)
+    snap = em.current()
+    params = SessionParams(n_nodes=snap.n_nodes, elems=8, cluster_size=4,
+                           redundancy=3)
+    svc = AggregationService(
+        params, epochs=em,
+        batching=BatchingConfig(max_batch=max_batch, max_age=1e9))
+    return ov, em, svc
+
+
+def test_epoch_snapshot_is_stable_until_advance():
+    _, em, _ = _service_on_overlay()
+    assert em.current() is em.current()
+    old = em.current()
+    new = em.churn(joins=2, leaves=2)
+    assert new.epoch == old.epoch + 1 and em.current() is new
+
+
+def test_epoch_pinned_sessions_survive_mid_flight_churn():
+    """Sessions opened in epoch e keep e's committees; a pinned member
+    that leaves mid-flight is crash-injected and out-voted — tallies
+    stay exact.  New sessions pin to the new epoch."""
+    ov, em, svc = _service_on_overlay()
+    n = svc.default_params.n_nodes
+    vals = RNG.integers(0, 2, size=(n, 8)).astype(np.float32)
+    old_snap = em.current()
+
+    s_old = svc.open(now=0.0)
+    for slot in range(n):
+        s_old.contribute(slot, vals[slot])
+    svc.seal(s_old.sid, now=0.0)
+
+    # kill one pinned committee member per cluster (departure, not Byz):
+    # <= 1 corrupt copy per r=3 vote keeps the honest majority
+    victims = [old_snap.slot_uids[cl * 4 + (cl % 4)]
+               for cl in range(old_snap.n_clusters)]
+    for uid in dict.fromkeys(victims):
+        ov.leave(uid)
+    em.advance()
+
+    s_new = svc.open(now=1.0)
+    assert s_new.epoch.epoch == old_snap.epoch + 1
+    for slot in range(n):
+        s_new.contribute(slot, vals[slot])
+    svc.seal(s_new.sid, now=1.0)
+
+    svc.pump(force=True)
+    departed = set(em.departed_slots(old_snap))
+    assert departed, "victims should register as departures"
+    assert departed <= set(s_old.fault.crashed_slots)
+    want = vals.sum(0)
+    assert np.allclose(s_old.result, want, atol=1e-4)
+    assert np.allclose(s_new.result, want, atol=1e-4)
+
+
+def test_mid_session_byzantine_flip_is_out_voted():
+    _, _, svc = _service_on_overlay()
+    n = svc.default_params.n_nodes
+    vals = RNG.integers(0, 2, size=(n, 8)).astype(np.float32)
+    s = svc.open()
+    for slot in range(n):
+        s.contribute(slot, vals[slot])
+    s.inject_fault(SessionFaultPlan(byzantine_slots=(1,)))
+    svc.seal(s.sid)
+    svc.pump(force=True)
+    assert np.allclose(s.result, vals.sum(0), atol=1e-4)
+
+
+def test_fault_plan_merge_keeps_groups_disjoint():
+    a = SessionFaultPlan(byzantine_slots=(1, 2))
+    b = SessionFaultPlan(crashed_slots=(2, 3))
+    m = a.merge(b)
+    assert m.crashed_slots == (2, 3)       # crash wins over byzantine
+    assert m.byzantine_slots == (1,)
+    with pytest.raises(AssertionError):
+        SessionFaultPlan(crashed_slots=(1,), byzantine_slots=(1,))
