@@ -5,21 +5,36 @@
 # whose auto-selected engine is the jnp reference.
 PY := PYTHONPATH=src python
 
-.PHONY: test kernel-lane service-lane bench-service bench
+.PHONY: test kernel-lane service-lane mesh-lane bench-service \
+    bench-service-mesh bench
 
 test:
 	$(PY) -m pytest -x -q
 
 kernel-lane:
 	REPRO_KERNEL_IMPL=pallas_interpret $(PY) -m pytest \
-	    tests/test_secure_agg_kernels.py tests/test_service.py -q
+	    tests/test_secure_agg_kernels.py tests/test_service.py \
+	    tests/test_engine.py -q
 
 service-lane:
 	$(PY) -m pytest tests/test_service.py tests/test_overlay.py \
 	    tests/test_crypto.py -q
 
+# distributed lane: MeshTransport == SimTransport bit-equivalence and the
+# multi-device protocol paths (the tests spawn their own subprocesses
+# with XLA_FLAGS=--xla_force_host_platform_device_count forced)
+mesh-lane:
+	$(PY) -m pytest tests/test_engine.py tests/test_distributed.py -q
+
 bench-service:
 	$(PY) -m benchmarks.run --only service --json BENCH_service.json
+
+# distributed executor rows (service_executor_mesh_*) appended to the
+# same trajectory file; forces one host device per protocol node
+bench-service-mesh:
+	XLA_FLAGS=--xla_force_host_platform_device_count=16 \
+	    $(PY) -m benchmarks.run --only service --transport mesh \
+	    --json BENCH_service.json
 
 bench:
 	$(PY) -m benchmarks.run

@@ -52,11 +52,17 @@ def parse_rows(text: str) -> dict:
 
 
 def main() -> None:
+    import functools
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only")
     ap.add_argument("--json", dest="json_path",
-                    help="write {name: us_per_call} for all numeric rows")
+                    help="merge {name: us_per_call} for all numeric rows "
+                         "into this file (existing rows are kept)")
+    ap.add_argument("--transport", choices=("sim", "mesh"), default="sim",
+                    help="service bench executor transport (mesh needs "
+                         "one device per protocol node)")
     args = ap.parse_args()
 
     from benchmarks import (comm_cost, crypto_breakdown, kernels,
@@ -67,7 +73,8 @@ def main() -> None:
         "lower_bound": lower_bound.run,            # paper Thm 1
         "secure_allreduce": secure_allreduce.run,  # tensor-scale schedules
         "kernels": kernels.run,                    # pallas kernel microbench
-        "service": service.run,                    # multi-session load gen
+        "service": functools.partial(              # multi-session load gen
+            service.run, transport=args.transport),
     }
     names = [args.only] if args.only else list(table)
     tee = _Tee(sys.stdout)
@@ -81,8 +88,15 @@ def main() -> None:
                 ok = False
                 print(f"{n},ERROR,{e!r}")
     if args.json_path:
+        rows = {}
+        try:   # append/update semantics: earlier lanes' rows are kept
+            with open(args.json_path) as f:
+                rows = json.load(f)
+        except (OSError, ValueError):
+            pass
+        rows.update(parse_rows(tee.getvalue()))
         with open(args.json_path, "w") as f:
-            json.dump(parse_rows(tee.getvalue()), f, indent=2, sort_keys=True)
+            json.dump(rows, f, indent=2, sort_keys=True)
             f.write("\n")
     sys.exit(0 if ok else 1)
 

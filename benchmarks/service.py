@@ -33,7 +33,46 @@ def _cfg() -> AggConfig:
                      schedule="ring")
 
 
-def run(full: bool = False) -> None:
+def _run_mesh(full: bool) -> None:
+    """Distributed executor rows: the same AggPlan under MeshTransport
+    (shard_map + ppermute, one device per protocol node).  Needs
+    ``N_NODES`` devices — `make bench-service-mesh` forces host devices;
+    on a short host the rows are skipped (non-numeric, never enter the
+    JSON trajectory)."""
+    from repro.core.engine import MeshTransport
+    from repro.core.plan import SessionMeta, compile_plan
+    from repro.runtime import compat
+
+    if len(jax.devices()) < N_NODES:
+        print(f"service_executor_mesh,SKIP,need_{N_NODES}_devices;"
+              f"run_via_make_bench-service-mesh")
+        return
+    rng = np.random.default_rng(0)
+    cfg = _cfg()
+    plan = compile_plan(cfg)
+    mt = MeshTransport(compat.node_mesh(N_NODES), ("data",))
+
+    @jax.jit
+    def fn(x, s):
+        return mt.execute(plan, x, SessionMeta(
+            seeds=s, offsets=jnp.zeros_like(s)), reveal_only=True)
+
+    for S in S_SWEEP:
+        xs = jnp.asarray(
+            rng.normal(size=(S, N_NODES, T)).astype(np.float32) * 0.1)
+        seeds = jnp.arange(S, dtype=jnp.uint32) + 7
+        us = time_call(fn, xs, seeds, reps=max(5, (128 if full else 64) // S))
+        per_s = S * 1e6 / us
+        print(f"service_executor_mesh_S{S}_T{T},{us:.0f},"
+              f"sessions_per_s={per_s:.0f};shard_map_{N_NODES}dev")
+        print(f"service_throughput_mesh_S{S},{per_s:.0f},"
+              f"sessions_per_s;shard_map_{N_NODES}dev")
+
+
+def run(full: bool = False, transport: str = "sim") -> None:
+    if transport == "mesh":
+        _run_mesh(full)
+        return
     rng = np.random.default_rng(0)
     cfg = _cfg()
 

@@ -52,6 +52,59 @@ def digest(x: jax.Array, n_words: int = 16) -> jax.Array:
     return jnp.sum(mixed, axis=0, dtype=jnp.uint32)
 
 
+def digest_rows(x: jax.Array, n_words: int = 16) -> jax.Array:
+    """Row-wise digest: (B, T) uint32 -> (B, n_words) uint32 — one
+    independent checksum per batched session row (bit-identical to
+    ``digest`` per row)."""
+    return jax.vmap(lambda row: digest(row, n_words))(x)
+
+
+def digest_vote_combine(payload: jax.Array, dg_copies: Sequence[jax.Array],
+                        base: jax.Array, backup=None,
+                        n_words: int = 16) -> jax.Array:
+    """The digest transport's receive step as ONE fused pass per hop:
+    digest the (B, T) payload row-wise, equality-vote it against the r
+    received (B, n_words) digest copies, select, and accumulate.
+
+    The old path voted digests through the median network and compared
+    the payload digest against the median — conceptually stacking r
+    digest copies just to re-derive the honest value.  For digests the
+    vote can be an *equality count* instead: accept the payload iff a
+    strict majority of copies equal its own digest.  Under the protocol
+    contract (a majority of each vote's copies honest, honest copies
+    bitwise identical) the accept/reject decision is the same, and the
+    digest computation fuses into the same elementwise pass — no sort
+    network, no r-copy stack.  Without ``backup``, a rejected payload is
+    still consumed behind an ``optimization_barrier`` (the retransmission
+    round is modeled analytically; see AggConfig.digest_backup)."""
+    r = len(dg_copies)
+    assert r % 2 == 1, "vote redundancy must be odd"
+    dgp = digest_rows(payload, n_words)                      # (B, n_words)
+    votes = jnp.zeros((payload.shape[0],), jnp.uint32)
+    for d in dg_copies:
+        votes = votes + jnp.all(dgp == d, axis=-1).astype(jnp.uint32)
+    ok = votes > jnp.uint32(r // 2)
+    if backup is not None:
+        recv = jnp.where(ok[:, None], payload, backup)
+    else:
+        payload, ok = jax.lax.optimization_barrier((payload, ok))
+        recv = payload
+    return base + recv
+
+
+def corrupt_value(mode: str, x: jax.Array) -> jax.Array:
+    """What a corrupt member sends instead of ``x`` — the single
+    definition every fault-injection path (static specs, batched session
+    masks) shares, so transports cannot drift."""
+    if mode == "flip":
+        return x ^ jnp.uint32(0xFFFFFFFF)
+    if mode == "garbage":
+        return x * jnp.uint32(2654435761) + jnp.uint32(0xDEADBEEF)
+    if mode == "drop":
+        return jnp.zeros_like(x)
+    raise ValueError(f"unknown fault mode {mode!r}")
+
+
 @dataclasses.dataclass(frozen=True)
 class ByzantineSpec:
     """Static description of injected faults for tests/examples.
@@ -70,10 +123,4 @@ class ByzantineSpec:
         bad = jnp.zeros((), bool)
         for rk in self.corrupt_ranks:
             bad = bad | (node_id == rk)
-        if self.mode == "flip":
-            evil = x ^ jnp.uint32(0xFFFFFFFF)
-        elif self.mode == "garbage":
-            evil = x * jnp.uint32(2654435761) + jnp.uint32(0xDEADBEEF)
-        else:  # drop
-            evil = jnp.zeros_like(x)
-        return jnp.where(bad, evil, x)
+        return jnp.where(bad, corrupt_value(self.mode, x), x)

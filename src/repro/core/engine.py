@@ -1,0 +1,370 @@
+"""One protocol engine, pluggable transports.
+
+``execute_chunks`` runs a compiled :class:`~repro.core.plan.AggPlan`
+stage-by-stage — encrypt, intra-cluster aggregate, voted schedule
+rounds, threshold decrypt — against a :class:`Transport` that supplies
+the communication substrate.  The engine is the ONLY place the protocol
+control flow lives; the transports only move bits:
+
+  * :class:`SimTransport`    — single-device oracle with the node axis
+    explicit, including the batched S-session path (hops are static
+    gathers).  This is what tests pin everything else against.
+  * :class:`ManualTransport` — per-rank execution inside a ``shard_map``
+    that is manual over the dp axes (hops are ``lax.ppermute``, the
+    intra-cluster sum is a grouped ``lax.psum``).  The training step's
+    gradient allreduce runs here.
+  * :class:`MeshTransport`   — builds the ``shard_map`` itself over a
+    real dp mesh and runs :class:`ManualTransport` inside: the
+    distributed backend of the service's ``BatchedExecutor``.
+
+The value container is uniform: every chunk is a ``(rows, T)`` array
+where ``rows = S`` sessions times the transport's local node slots (all
+``n`` for the sim oracle, 1 per rank on a mesh).  All tensor compute
+goes through the batched kernel dispatch ops with per-row metadata, so
+every transport is bit-identical by construction — the acceptance tests
+pin ``MeshTransport == SimTransport`` exactly, crash + Byzantine
+sessions included.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.byzantine import (corrupt_value, digest_rows,
+                                  digest_vote_combine)
+from repro.core.plan import AggPlan, HopRound, SessionMeta
+from repro.kernels import backend
+from repro.kernels.secure_agg import (mask_encrypt_batch_fn,
+                                      unmask_decrypt_batch_fn,
+                                      vote_combine_batch_fn)
+from repro.runtime import compat
+
+_ENC_MODE = {"global": "mask", "pairwise": "pairwise", "none": "quantize"}
+
+
+def flat_node_id(dp_axes: Sequence[str]) -> jax.Array:
+    """Row-major flat rank over the dp mesh axes (inside shard_map)."""
+    nid = jnp.zeros((), jnp.int32)
+    for ax in dp_axes:
+        nid = nid * compat.axis_size(ax) + jax.lax.axis_index(ax)
+    return nid
+
+
+class Transport:
+    """Communication substrate an :class:`AggPlan` executes against.
+
+    ``S`` is the session count; values are ``(rows, T)`` uint32 arrays
+    with ``rows = S * local_nodes``.  Subclasses define who the local
+    rows belong to (``node_ids``) and how bits move between nodes."""
+
+    S: int
+    impl: str
+    plan: AggPlan
+
+    def node_ids(self) -> jax.Array:
+        """(rows,) uint32 protocol node id of every row."""
+        raise NotImplementedError
+
+    def expand(self, per_session: jax.Array) -> jax.Array:
+        """(S,) per-session metadata -> (rows,) per-row metadata."""
+        raise NotImplementedError
+
+    def cluster_sum(self, q: jax.Array) -> jax.Array:
+        """Intra-cluster modular sum, replicated to every member."""
+        raise NotImplementedError
+
+    def corrupt(self, meta: SessionMeta, acc: jax.Array) -> jax.Array:
+        """Fault model applied to SENT values: the plan's static specs
+        first, then the per-session runtime masks (each mode's evil
+        value derives from the original ``acc``)."""
+        raise NotImplementedError
+
+    def hop(self, rnd: HopRound, sent: jax.Array):
+        """Move one round's redundant copies; returns opaque in-flight
+        state consumed by :meth:`vote` (list of r copies for the full
+        transport)."""
+        raise NotImplementedError
+
+    def vote(self, rnd: HopRound, inflight, base: jax.Array) -> jax.Array:
+        """base + majority(inflight) — one fused pass."""
+        return vote_combine_batch_fn(inflight, base, impl=self.impl)
+
+    def select(self, rnd: HopRound, voted: jax.Array,
+               acc: jax.Array) -> jax.Array:
+        """Keep ``voted`` on nodes that participate this round."""
+        raise NotImplementedError
+
+    def reveal_rows(self, accs: list, meta: SessionMeta):
+        """Narrow to one revealed row per session (the service path) ->
+        (accs', row_seeds', row_offsets')."""
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+
+def _vote_base(rnd: HopRound, acc: jax.Array, local: jax.Array) -> jax.Array:
+    if rnd.combine == "add":
+        return acc
+    if rnd.combine == "local_plus":
+        return local
+    return jnp.zeros_like(acc)  # replace (tree broadcast-down)
+
+
+def execute_chunks(plan: AggPlan, tp: Transport, chunks: list,
+                   meta: SessionMeta, *, reveal_only: bool = False) -> list:
+    """Run the full protocol over equal-size float32 chunks.
+
+    ``chunks[k]`` is (rows, Tc) and covers pad-stream positions
+    ``[k*Tc, (k+1)*Tc)`` past each session's counter offset, so chunked
+    and monolithic payloads produce identical streams.  Per round, chunk
+    k+1's hop is issued before chunk k's vote (double-buffered software
+    pipeline — communication overlaps vote compute)."""
+    mcfg = plan.mask_cfg()
+    c = plan.cluster_size
+    node_ids = tp.node_ids()
+    row_seeds = tp.expand(meta.seeds)
+    row_offs = tp.expand(meta.offsets)
+    K = len(chunks)
+    Tc = chunks[0].shape[-1]
+
+    def off(k):
+        delta = plan.chunk_offset(k, Tc)
+        return row_offs if not delta else row_offs + jnp.uint32(delta)
+
+    # --- Step 1: encrypt (fused clip+quantize+pad, incl. pairwise) ---
+    qs = [mask_encrypt_batch_fn(ch, node_ids, row_seeds, mcfg.scale,
+                                mcfg.clip, mode=_ENC_MODE[mcfg.mode],
+                                offsets=off(k), cluster_size=c, impl=tp.impl)
+          for k, ch in enumerate(chunks)]
+
+    # --- Steps 1-2: intra-cluster modular sum (pairwise pads cancel) ---
+    accs = [tp.cluster_sum(q) for q in qs]
+
+    # --- Step 3: voted schedule; hops pipelined over chunks ---
+    locals_ = list(accs)
+    for rnd in plan.rounds:
+        sents = [tp.corrupt(meta, a) for a in accs]
+        inflight = tp.hop(rnd, sents[0])
+        new_accs = []
+        for k in range(K):
+            nxt = tp.hop(rnd, sents[k + 1]) if k + 1 < K else None
+            voted = tp.vote(rnd, inflight, _vote_base(rnd, accs[k],
+                                                      locals_[k]))
+            new_accs.append(tp.select(rnd, voted, accs[k]))
+            inflight = nxt
+        accs = new_accs
+
+    # --- Step 4: threshold decryption (fused unmask+dequantize) ---
+    if reveal_only:
+        # ``off`` closes over row_offs, so it now yields per-revealed-row
+        # offsets automatically
+        accs, row_seeds, row_offs = tp.reveal_rows(accs, meta)
+    umode = "mask" if mcfg.mode == "global" else "dequantize"
+    return [unmask_decrypt_batch_fn(a, mcfg.n_nodes, row_seeds, mcfg.scale,
+                                    mode=umode, offsets=off(k), impl=tp.impl)
+            for k, a in enumerate(accs)]
+
+
+# ---------------------------------------------------------------------------
+# Simulation transport: node axis explicit, hops are static gathers
+# ---------------------------------------------------------------------------
+
+
+class SimTransport(Transport):
+    """Single-device oracle over (S * n, T) rows, row = s * n + node."""
+
+    def __init__(self, plan: AggPlan, S: int = 1,
+                 impl: Optional[str] = None):
+        self.plan = plan
+        self.S = S
+        self.impl = backend.resolve(
+            impl if impl is not None else plan.cfg.kernel_impl)
+
+    def _3d(self, x: jax.Array) -> jax.Array:
+        return x.reshape(self.S, self.plan.n_nodes, x.shape[-1])
+
+    def node_ids(self) -> jax.Array:
+        return jnp.tile(jnp.arange(self.plan.n_nodes, dtype=jnp.uint32),
+                        self.S)
+
+    def expand(self, per_session: jax.Array) -> jax.Array:
+        return jnp.repeat(jnp.asarray(per_session).astype(jnp.uint32),
+                          self.plan.n_nodes)
+
+    def cluster_sum(self, q: jax.Array) -> jax.Array:
+        S, (g, c) = self.S, (self.plan.cfg.n_clusters, self.plan.cluster_size)
+        T = q.shape[-1]
+        acc = q.reshape(S, g, c, T).sum(axis=2, dtype=jnp.uint32)
+        return jnp.repeat(acc[:, :, None], c, axis=2).reshape(q.shape)
+
+    def corrupt(self, meta: SessionMeta, acc: jax.Array) -> jax.Array:
+        a3 = self._3d(acc)
+        sent = a3
+        n = self.plan.n_nodes
+        for spec in self.plan.faults:
+            m = np.zeros((n,), bool)
+            m[list(spec.corrupt_ranks)] = True
+            sent = jnp.where(jnp.asarray(m)[None, :, None],
+                             corrupt_value(spec.mode, a3), sent)
+        for mode, m in meta.fault_masks.items():
+            sent = jnp.where(jnp.asarray(m)[:, :, None],
+                             corrupt_value(mode, a3), sent)
+        return sent.reshape(acc.shape)
+
+    def hop(self, rnd: HopRound, sent: jax.Array):
+        s3 = self._3d(sent)
+        return [s3[:, np.asarray(rnd.src_idx[s]), :].reshape(sent.shape)
+                for s in range(self.plan.redundancy)]
+
+    def select(self, rnd: HopRound, voted: jax.Array,
+               acc: jax.Array) -> jax.Array:
+        part = jnp.asarray(np.asarray(rnd.participates))[None, :, None]
+        return jnp.where(part, self._3d(voted), self._3d(acc)
+                         ).reshape(acc.shape)
+
+    def reveal_rows(self, accs: list, meta: SessionMeta):
+        # every cluster member holds the identical aggregate: reveal
+        # member 0's copy per session
+        return ([self._3d(a)[:, 0] for a in accs],
+                jnp.asarray(meta.seeds).astype(jnp.uint32),
+                jnp.asarray(meta.offsets).astype(jnp.uint32))
+
+
+# ---------------------------------------------------------------------------
+# Manual transport: per-rank inside an existing shard_map over dp axes
+# ---------------------------------------------------------------------------
+
+
+class ManualTransport(Transport):
+    """Per-rank rows (S, T) inside a shard_map manual over ``dp_axes``:
+    hops are ``ppermute``, the intra-cluster sum a grouped ``psum``.
+    The traced program is O(1) in ``n_nodes`` (participation and fault
+    masks are constant-array lookups, the unmask loop lives in-kernel)."""
+
+    def __init__(self, plan: AggPlan, dp_axes: Sequence[str], S: int = 1,
+                 impl: Optional[str] = None):
+        self.plan = plan
+        self.dp_axes = tuple(dp_axes)
+        self.S = S
+        self.impl = backend.resolve(
+            impl if impl is not None else plan.cfg.kernel_impl)
+        self._nid = flat_node_id(self.dp_axes)
+
+    def node_ids(self) -> jax.Array:
+        return jnp.broadcast_to(self._nid.astype(jnp.uint32), (self.S,))
+
+    def expand(self, per_session: jax.Array) -> jax.Array:
+        return jnp.asarray(per_session).astype(jnp.uint32)
+
+    def cluster_sum(self, q: jax.Array) -> jax.Array:
+        if self.plan.cluster_size == 1:
+            return q
+        groups = [list(g) for g in self.plan.groups]
+        return jax.lax.psum(q, self.dp_axes, axis_index_groups=groups)
+
+    def corrupt(self, meta: SessionMeta, acc: jax.Array) -> jax.Array:
+        sent = acc
+        for spec in self.plan.faults:
+            sent = spec.corrupt(sent, self._nid)
+        for mode, m in meta.fault_masks.items():
+            col = jnp.asarray(m)[:, self._nid]          # (S,) this rank
+            sent = jnp.where(col[:, None], corrupt_value(mode, acc), sent)
+        return sent
+
+    def hop(self, rnd: HopRound, sent: jax.Array):
+        cfg = self.plan.cfg
+        r = self.plan.redundancy
+        if cfg.transport == "full":
+            return [jax.lax.ppermute(sent, self.dp_axes, list(rnd.perms[s]))
+                    for s in range(r)]
+        # digest transport: 1 full payload + r row-wise digests (+ an
+        # optional eager backup stream for a corrupt copy-0 sender)
+        payload = jax.lax.ppermute(sent, self.dp_axes, list(rnd.perms[0]))
+        dg = digest_rows(sent, cfg.digest_words)
+        dg_copies = [jax.lax.ppermute(dg, self.dp_axes, list(rnd.perms[s]))
+                     for s in range(r)]
+        backup = (jax.lax.ppermute(sent, self.dp_axes, list(rnd.backup_perm))
+                  if cfg.digest_backup else None)
+        return payload, dg_copies, backup
+
+    def vote(self, rnd: HopRound, inflight, base: jax.Array) -> jax.Array:
+        if self.plan.cfg.transport == "full":
+            return vote_combine_batch_fn(inflight, base, impl=self.impl)
+        payload, dg_copies, backup = inflight
+        return digest_vote_combine(payload, dg_copies, base, backup=backup,
+                                   n_words=self.plan.cfg.digest_words)
+
+    def select(self, rnd: HopRound, voted: jax.Array,
+               acc: jax.Array) -> jax.Array:
+        part = jnp.asarray(np.asarray(rnd.participates))[self._nid]
+        return jnp.where(part, voted, acc)
+
+    def reveal_rows(self, accs: list, meta: SessionMeta):
+        # SPMD: every rank decrypts its own (identical) copy
+        return accs, self.expand(meta.seeds), self.expand(meta.offsets)
+
+
+# ---------------------------------------------------------------------------
+# Mesh transport: shard_map over a real dp mesh, ManualTransport inside
+# ---------------------------------------------------------------------------
+
+
+class MeshTransport:
+    """Distributed plan execution: one device per protocol node.
+
+    ``execute`` shard_maps the engine over the mesh's dp axes — inside,
+    each rank runs :class:`ManualTransport` on its (S, T) slice, so a
+    sealed service batch runs the *same* engine code the oracle runs,
+    over real collectives.  Bit-identical to ``SimTransport`` for the
+    same plan (pinned by tests/test_engine.py on a forced-8-device
+    host)."""
+
+    def __init__(self, mesh: jax.sharding.Mesh,
+                 dp_axes: Sequence[str] = ("data",),
+                 impl: Optional[str] = None):
+        self.mesh = mesh
+        self.dp_axes = tuple(dp_axes)
+        self.impl = impl
+        n = 1
+        for ax in self.dp_axes:
+            n *= mesh.shape[ax]
+        self.n_devices = n
+
+    def execute(self, plan: AggPlan, xs: jax.Array, meta: SessionMeta,
+                *, reveal_only: bool = False) -> jax.Array:
+        """xs: (S, n_nodes, T) per-session/per-node payloads ->
+        (S, n_nodes, T) per-node results, or (S, T) with
+        ``reveal_only`` (one revealed copy per session)."""
+        S, n, T = xs.shape
+        assert n == plan.n_nodes == self.n_devices, \
+            (n, plan.n_nodes, self.n_devices)
+        mask_keys = tuple(meta.fault_masks)
+
+        def body(xl, seeds, offsets, masks):
+            tp = ManualTransport(plan, self.dp_axes, S=S, impl=self.impl)
+            m = SessionMeta(seeds=seeds, offsets=offsets,
+                            fault_masks=dict(masks))
+            (out,) = execute_chunks(plan, tp, [xl[:, 0, :]], m)
+            # reveal_only: every rank decrypted the identical aggregate
+            # with identical per-session keys, so the (S, T) output is
+            # replicated over the dp axes — return one copy instead of
+            # gathering all n
+            return out if reveal_only else out[:, None, :]
+
+        shard = P(None, self.dp_axes, None)
+        rep = P(None)
+        fn = compat.shard_map(
+            body, mesh=self.mesh,
+            in_specs=(shard, rep, rep, {k: P(None, None)
+                                        for k in mask_keys}),
+            out_specs=P(None, None) if reveal_only else shard,
+            check_vma=False)
+        return fn(xs.astype(jnp.float32), meta.seeds, meta.offsets,
+                  dict(meta.fault_masks))

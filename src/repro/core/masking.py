@@ -35,11 +35,13 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.secure_agg import secure_agg as _SA
 from repro.kernels.secure_agg.ref import ctr_stream, total_pad
 from repro.kernels.secure_agg.secure_agg import pad_stream
 
 # keys for pairwise pads live in a disjoint space from per-node keys
-PAIRWISE_KEY_BASE = 1 << 20
+# (single definition lives next to the kernels that fuse the pad)
+PAIRWISE_KEY_BASE = int(_SA.PAIRWISE_KEY_BASE)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,7 +84,13 @@ def _pad(cfg: MaskConfig, key_id, shape, offset=0) -> jax.Array:
 
 def pairwise_pad(cfg: MaskConfig, node_id, shape, offset=0) -> jax.Array:
     """Pairwise-cancelling pad for ``node_id`` within its cluster:
-    mask_i = sum_{j in cluster, j>i} PRF(ij) - sum_{j<i} PRF(ij)."""
+    mask_i = sum_{j in cluster, j>i} PRF(ij) - sum_{j<i} PRF(ij).
+
+    This unrolled per-pair form is the *oracle* the tests compare
+    against; the hot path fuses the same pad into ``mask_encrypt``'s
+    kernels as an in-kernel ``fori_loop`` over cluster members
+    (``kernels.secure_agg.pairwise_total``, mode="pairwise") —
+    bit-identical by construction."""
     c = cfg.cluster_size
     cluster = node_id // c
     member = node_id % c

@@ -1,0 +1,237 @@
+"""Plan compiler for the secure-allreduce protocol core.
+
+The paper's algorithm is one protocol, but the repo used to run it
+through four diverging code paths (manual/shard_map, chunked pytree,
+single-device oracle, batched oracle).  The plan/engine/transport split
+makes the committee logic independent of the communication substrate
+(the architectural point of Dani et al.'s quorum MPC line): everything
+*static* about a run is compiled here, once, into an :class:`AggPlan`
+that ``core/engine.py`` executes stage-by-stage against any
+``Transport``.
+
+A plan captures:
+
+  * the voted schedule as explicit :class:`HopRound`\\ s — for every
+    round, the r ``ppermute`` pair lists (mesh transports), the (r, n)
+    gather maps (simulation transport), and the per-node participation
+    mask;
+  * the intra-cluster ``psum`` groups;
+  * the static fault model (``AggConfig.byzantine`` plus an optional
+    ``SessionFaultPlan``, e.g. churn departures from an overlay epoch
+    snapshot);
+  * the per-chunk pad-stream offset rule (``chunk_offset``).
+
+Everything *per-session* (pad-stream keys, counter offsets, runtime
+fault masks) rides separately in :class:`SessionMeta`, so one compiled
+plan serves any number of batched sessions and fault patterns without
+retracing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import schedules as SCH
+from repro.core.byzantine import ByzantineSpec
+
+
+# ---------------------------------------------------------------------------
+# Static round layout
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HopRound:
+    """One voted schedule round, fully resolved to node granularity.
+
+    ``perms[s]`` are the ``ppermute`` (src, dst) pairs of redundant copy
+    stream s; ``src_idx[s][dst]`` is the same map as a gather (what the
+    simulation transport uses); ``participates[i]`` says whether node i
+    receives this round; ``backup_perm`` is the shift-1 stream used by
+    the digest transport's eager fallback."""
+    combine: str                                      # add|local_plus|replace
+    recv_from: tuple[Optional[int], ...]              # cluster-level round
+    perms: tuple[tuple[tuple[int, int], ...], ...]    # (r, pairs)
+    src_idx: tuple[tuple[int, ...], ...]              # (r, n)
+    participates: tuple[bool, ...]                    # (n,)
+    backup_perm: tuple[tuple[int, int], ...]          # digest fallback hops
+
+
+def _hop_perm(n_clusters: int, cluster_size: int,
+              recv_from: Sequence[Optional[int]],
+              shift: int) -> list[tuple[int, int]]:
+    """ppermute pairs for one redundant copy stream: receiver (cl, m)
+    receives from (recv_from[cl], (m + shift) % c)."""
+    c = cluster_size
+    perm = []
+    for cl in range(n_clusters):
+        src_cl = recv_from[cl]
+        if src_cl is None:
+            continue
+        for m in range(c):
+            perm.append((src_cl * c + (m + shift) % c, cl * c + m))
+    return perm
+
+
+# ---------------------------------------------------------------------------
+# Per-session runtime metadata
+# ---------------------------------------------------------------------------
+
+
+def fault_masks_of(faults: Sequence[Sequence[ByzantineSpec]],
+                   n_nodes: int) -> dict[str, np.ndarray]:
+    """Per-session fault specs -> {mode: (S, n) bool mask} (static numpy).
+
+    ``faults[s]`` is a sequence of ByzantineSpec for session s; a rank may
+    appear under at most one mode per session (disjointness keeps the
+    sequential application order-independent)."""
+    masks: dict[str, np.ndarray] = {}
+    for s_idx, specs in enumerate(faults):
+        for sp in specs:
+            if not sp.corrupt_ranks:
+                continue
+            m = masks.setdefault(
+                sp.mode, np.zeros((len(faults), n_nodes), bool))
+            m[s_idx, list(sp.corrupt_ranks)] = True
+    return masks
+
+
+@dataclasses.dataclass(frozen=True)
+class SessionMeta:
+    """Everything per-session a plan execution needs at runtime: pad
+    stream keys, counter offsets, and fault masks.  All fields may be
+    traced arrays — the compiled program is independent of the values
+    (the executor's compile-cache relies on that; only the *set* of
+    fault modes present changes the program)."""
+    seeds: jax.Array                       # (S,) uint32 pad-stream keys
+    offsets: jax.Array                     # (S,) uint32 counter offsets
+    fault_masks: dict[str, jax.Array] = dataclasses.field(
+        default_factory=dict)              # mode -> (S, n) bool
+
+    @property
+    def S(self) -> int:
+        return self.seeds.shape[0]
+
+    @classmethod
+    def build(cls, S: int, n_nodes: int, *, seed: int = 0, seeds=None,
+              offsets=None,
+              faults: Optional[Sequence[Sequence[ByzantineSpec]]] = None,
+              fault_masks=None) -> "SessionMeta":
+        """Normalize the historical entry-point kwargs: default seeds /
+        offsets, and either static per-session ``faults`` (lowered to
+        masks here) or already-traced ``fault_masks``."""
+        if seeds is None:
+            seeds = jnp.full((S,), seed, jnp.uint32)
+        seeds = jnp.asarray(seeds).astype(jnp.uint32)
+        if offsets is None:
+            offsets = jnp.zeros((S,), jnp.uint32)
+        offsets = jnp.asarray(offsets).astype(jnp.uint32)
+        if fault_masks is not None:
+            assert faults is None, "pass faults or fault_masks, not both"
+            masks = dict(fault_masks)
+        elif faults is not None:
+            assert len(faults) == S, (len(faults), S)
+            masks = fault_masks_of(faults, n_nodes)
+        else:
+            masks = {}
+        return cls(seeds=seeds, offsets=offsets, fault_masks=masks)
+
+    @classmethod
+    def single(cls, seed, offset=0) -> "SessionMeta":
+        return cls(seeds=jnp.asarray([seed]).astype(jnp.uint32),
+                   offsets=jnp.asarray([offset]).astype(jnp.uint32))
+
+
+# ---------------------------------------------------------------------------
+# The compiled plan
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AggPlan:
+    """Compiled, transport-independent form of one protocol run."""
+    cfg: "AggConfig"                          # noqa: F821 (core import cycle)
+    groups: tuple[tuple[int, ...], ...]       # intra-cluster psum groups
+    rounds: tuple[HopRound, ...]
+    faults: tuple[ByzantineSpec, ...]         # static per-run fault model
+
+    @property
+    def n_nodes(self) -> int:
+        return self.cfg.n_nodes
+
+    @property
+    def cluster_size(self) -> int:
+        return self.cfg.cluster_size
+
+    @property
+    def redundancy(self) -> int:
+        return self.cfg.redundancy
+
+    def mask_cfg(self):
+        return self.cfg.mask_cfg()
+
+    def chunk_offset(self, chunk_idx: int, chunk_elems: int) -> int:
+        """Pad-stream counter offset of chunk k relative to the session
+        offset — chunk k covers flat positions [k*size, (k+1)*size), so
+        chunked streams reproduce the monolithic stream exactly."""
+        return chunk_idx * chunk_elems
+
+
+def compile_plan(cfg, *, epoch=None, fault=None) -> AggPlan:
+    """AggConfig + overlay snapshot + fault plan -> executable AggPlan.
+
+    ``epoch`` (optional): an object with ``n_nodes`` / ``cluster_size``
+    (e.g. ``service.epochs.EpochSnapshot``) pinning the committee layout
+    this plan aggregates over — validated against ``cfg``.  ``fault``
+    (optional): a ``runtime.fault.SessionFaultPlan`` whose crash /
+    Byzantine slots are folded into the plan's static fault model (the
+    service instead passes *runtime* masks via :class:`SessionMeta`, so
+    fault-pattern churn never retraces)."""
+    n, c, g, r = cfg.n_nodes, cfg.cluster_size, cfg.n_clusters, cfg.redundancy
+    if epoch is not None:
+        assert epoch.n_nodes == n, (epoch.n_nodes, n)
+        assert epoch.cluster_size == c, (epoch.cluster_size, c)
+
+    rounds = []
+    for rnd in SCH.get_schedule(cfg.schedule, g):
+        perms = tuple(tuple(_hop_perm(g, c, rnd.recv_from, s))
+                      for s in range(r))
+        src_idx = np.arange(n)[None, :].repeat(r, axis=0)
+        participates = np.zeros((n,), bool)
+        for cl, src_cl in enumerate(rnd.recv_from):
+            if src_cl is None:
+                continue
+            for m in range(c):
+                dst = cl * c + m
+                participates[dst] = True
+                for s in range(r):
+                    src_idx[s, dst] = src_cl * c + (m + s) % c
+        if not participates.any():
+            continue
+        rounds.append(HopRound(
+            combine=rnd.combine, recv_from=tuple(rnd.recv_from), perms=perms,
+            src_idx=tuple(tuple(int(v) for v in row) for row in src_idx),
+            participates=tuple(bool(b) for b in participates),
+            backup_perm=tuple(_hop_perm(g, c, rnd.recv_from, 1))))
+
+    faults = []
+    if cfg.byzantine.corrupt_ranks:
+        faults.append(cfg.byzantine)
+    if fault is not None:
+        faults.extend(fault.specs())
+    # a rank may appear under at most one static spec: disjointness keeps
+    # the sequential spec application order-independent, so every
+    # transport corrupts identically (the bit-equality contract)
+    seen: set[int] = set()
+    for sp in faults:
+        overlap = seen & set(sp.corrupt_ranks)
+        assert not overlap, f"rank(s) {sorted(overlap)} in multiple specs"
+        seen |= set(sp.corrupt_ranks)
+
+    groups = tuple(tuple(range(cl * c, (cl + 1) * c)) for cl in range(g))
+    return AggPlan(cfg=cfg, groups=groups, rounds=tuple(rounds),
+                   faults=tuple(faults))

@@ -1,37 +1,32 @@
-"""Secure cluster-ring/tree aggregation over the data-parallel mesh axes —
-the paper's protocol (Steps 1-4) as a drop-in replacement for gradient
-``psum`` (DESIGN §2.2).
+"""Secure cluster-ring/tree aggregation — the paper's protocol (Steps
+1-4) as a drop-in replacement for gradient ``psum`` (DESIGN §2.2).
 
-Node = DP rank (flat index over the dp axes).  Cluster = ``c`` contiguous
-ranks.  Per aggregation:
+Since the plan/engine/transport refactor this module is the *thin
+compatibility surface* over the real protocol core:
 
-  1. fused quantize + mask                (Step 1: "encrypt")
+  * ``core/plan.py``   — compiles ``AggConfig`` (+ overlay snapshot +
+    fault plan) into an explicit :class:`~repro.core.plan.AggPlan`;
+  * ``core/engine.py`` — executes a plan against a ``Transport``
+    (``SimTransport`` oracle / ``ManualTransport`` inside shard_map /
+    ``MeshTransport`` over a real dp mesh).
+
+The historical ``secure_allreduce_*`` / ``simulate_secure_allreduce*``
+entry points below are kept as shims for one release (see README
+"Migration"); new code should compile a plan and pick a transport.
+Node = DP rank (flat index over the dp axes); cluster = ``c``
+contiguous ranks.  Per aggregation:
+
+  1. fused quantize + mask                (Step 1: "encrypt";
+                                           pairwise pads fused in-kernel)
   2. intra-cluster modular psum           (Steps 1-2: secure broadcast +
-                                           local aggregate — every member
-                                           holds the identical masked sum)
-  3. schedule rounds over clusters via ppermute, receiving r redundant
-     copies and taking the element-wise majority (Step 3)
+                                           local aggregate)
+  3. schedule rounds over clusters, r redundant copies per hop,
+     element-wise majority vote           (Step 3)
   4. fused unmask + dequantize            (Step 4: "threshold decryption")
 
-Every tensor stage runs on the kernel dispatch layer
-(``repro.kernels.secure_agg``): native Pallas on TPU, the bit-identical
-jnp reference elsewhere.  The hot path is one fused pass per stage —
-no (r, T) stacked vote buffer (copies are combined as separate operands)
-and no unrolled per-node pad chain (the n-way unmask is a single
-``fori_loop``), so the traced program size is independent of ``n_nodes``.
-
 Payloads are processed as fixed-size *chunks*: ``secure_allreduce_tree``
-packs the gradient pytree into equal chunks instead of one giant
-concatenated payload, and each round issues chunk k+1's ``ppermute``
-before voting chunk k (double-buffered software pipeline — XLA's latency
-hiding scheduler overlaps the hop with the vote).
-
-Two transports:
-  * full   — r full copies per hop (paper-faithful; r x bandwidth)
-  * digest — 1 full copy + r digests, vote on digests (beyond-paper)
-
-Must be called inside a ``shard_map`` that is *manual* over ``dp_axes``.
-``secure_allreduce_sharded`` wraps that for standalone use.
+packs the gradient pytree into equal chunks and the engine issues chunk
+k+1's hop before voting chunk k (double-buffered pipeline).
 """
 from __future__ import annotations
 
@@ -43,14 +38,14 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core import schedules as SCH
-from repro.core.byzantine import ByzantineSpec, digest, majority_vote_list
-from repro.core.masking import MaskConfig, pairwise_pad
-from repro.kernels.secure_agg import (mask_encrypt_batch_fn, mask_encrypt_fn,
-                                      unmask_decrypt_batch_fn,
-                                      unmask_decrypt_fn, vote_combine_batch_fn,
-                                      vote_combine_fn)
+from repro.core.byzantine import ByzantineSpec
+from repro.core.engine import ManualTransport, SimTransport, execute_chunks
+from repro.core.masking import MaskConfig
+from repro.core.plan import SessionMeta, compile_plan, fault_masks_of
 from repro.runtime import compat
+
+# re-exported shim: the mask builder moved to core/plan.py
+_fault_masks = fault_masks_of
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,185 +89,24 @@ class AggConfig:
 
 
 # ---------------------------------------------------------------------------
-# Permutation builders (flat node ids over the dp axes, row-major)
+# Manual-mode shims (inside shard_map over dp axes)
 # ---------------------------------------------------------------------------
-
-
-def _hop_perm(cfg: AggConfig, src_cluster_of: Sequence[Optional[int]],
-              shift: int) -> list[tuple[int, int]]:
-    """ppermute pairs for one redundant copy stream: receiver (cl, m)
-    receives from (src_cluster_of[cl], (m + shift) % c)."""
-    c = cfg.cluster_size
-    perm = []
-    for cl in range(cfg.n_clusters):
-        src_cl = src_cluster_of[cl]
-        if src_cl is None:
-            continue
-        for m in range(c):
-            src = src_cl * c + (m + shift) % c
-            dst = cl * c + m
-            perm.append((src, dst))
-    return perm
-
-
-def _intra_cluster_groups(cfg: AggConfig) -> list[list[int]]:
-    c = cfg.cluster_size
-    return [list(range(cl * c, (cl + 1) * c)) for cl in range(cfg.n_clusters)]
-
-
-# ---------------------------------------------------------------------------
-# Encrypt / decrypt stages (kernel dispatch layer)
-# ---------------------------------------------------------------------------
-
-
-def _encrypt_chunk(cfg: AggConfig, mcfg: MaskConfig, chunk: jax.Array,
-                   node_id, offset: int) -> jax.Array:
-    """Fused clip+quantize+pad of one flat float chunk -> uint32."""
-    if mcfg.mode == "global":
-        return mask_encrypt_fn(chunk, node_id, mcfg.seed, mcfg.scale,
-                               mcfg.clip, mode="mask", offset=offset,
-                               impl=cfg.kernel_impl)
-    q = mask_encrypt_fn(chunk, node_id, mcfg.seed, mcfg.scale, mcfg.clip,
-                        mode="quantize", offset=offset, impl=cfg.kernel_impl)
-    if mcfg.mode == "pairwise":
-        # pairwise pads cancel inside the cluster psum (no unmask pass);
-        # jnp-only for now — see ROADMAP "Hot path" for the kernel gap
-        q = q + pairwise_pad(mcfg, node_id, q.shape, offset=offset)
-    return q
-
-
-def _decrypt_chunk(cfg: AggConfig, mcfg: MaskConfig, acc: jax.Array,
-                   offset: int) -> jax.Array:
-    """Fused total-pad removal + dequantize of one uint32 chunk."""
-    mode = "mask" if mcfg.mode == "global" else "dequantize"
-    return unmask_decrypt_fn(acc, mcfg.n_nodes, mcfg.seed, mcfg.scale,
-                             mode=mode, offset=offset, impl=cfg.kernel_impl)
-
-
-# ---------------------------------------------------------------------------
-# Manual-mode core (inside shard_map over dp axes)
-# ---------------------------------------------------------------------------
-
-
-def _flat_node_id(dp_axes: Sequence[str]) -> jax.Array:
-    nid = jnp.zeros((), jnp.int32)
-    for ax in dp_axes:
-        nid = nid * compat.axis_size(ax) + jax.lax.axis_index(ax)
-    return nid
-
-
-def _vote_base(rnd: SCH.Round, acc: jax.Array, local: jax.Array) -> jax.Array:
-    if rnd.combine == "add":
-        return acc
-    if rnd.combine == "local_plus":
-        return local
-    return jnp.zeros_like(acc)  # replace (tree broadcast-down)
-
-
-def _run_schedule(cfg: AggConfig, dp_axes: tuple, node_id, accs: list):
-    """Voted cluster schedule over a list of equal-size uint32 chunks.
-
-    Per round, chunk k+1's hop collectives are issued before chunk k's
-    vote so communication overlaps vote compute (double buffering)."""
-    rounds = SCH.get_schedule(cfg.schedule, cfg.n_clusters)
-    r = cfg.redundancy
-    byz = cfg.byzantine
-    locals_ = list(accs)  # cluster-local aggregates, fixed for ring rotation
-    K = len(accs)
-
-    for rnd in rounds:
-        perms = [_hop_perm(cfg, rnd.recv_from, s) for s in range(r)]
-        participates = jnp.zeros((), bool)
-        for cl, src in enumerate(rnd.recv_from):
-            if src is not None:
-                in_cl = (node_id // cfg.cluster_size) == cl
-                participates = participates | in_cl
-        # fault injection happens on the SENT value (a corrupt member
-        # corrupts every copy it forwards)
-        sent = [byz.corrupt(a, node_id) for a in accs]
-
-        if cfg.transport == "full":
-            def hop(k):
-                return [jax.lax.ppermute(sent[k], dp_axes, perms[s])
-                        for s in range(r)]
-        else:
-            perm_backup = _hop_perm(cfg, rnd.recv_from, 1)
-
-            def hop(k):
-                payload = jax.lax.ppermute(sent[k], dp_axes, perms[0])
-                dg = digest(sent[k], cfg.digest_words)
-                dg_copies = [jax.lax.ppermute(dg, dp_axes, perms[s])
-                             for s in range(r)]
-                backup = (jax.lax.ppermute(sent[k], dp_axes, perm_backup)
-                          if cfg.digest_backup else None)
-                return payload, dg_copies, backup
-
-        inflight = hop(0)
-        new_accs = []
-        for k in range(K):
-            nxt = hop(k + 1) if k + 1 < K else None  # issue before voting
-            base = _vote_base(rnd, accs[k], locals_[k])
-            if cfg.transport == "full":
-                voted = vote_combine_fn(inflight, base, impl=cfg.kernel_impl)
-            else:  # digest transport: one full payload + r digest votes
-                payload, dg_copies, backup = inflight
-                dg_major = majority_vote_list(dg_copies)
-                ok = jnp.all(digest(payload, cfg.digest_words) == dg_major)
-                if cfg.digest_backup:
-                    # eager fallback stream for a corrupt copy-0 sender
-                    recv = jnp.where(ok, payload, backup)
-                else:
-                    # happy path: digest mismatch would trigger a
-                    # retransmission round (modeled analytically); the
-                    # barrier keeps the verification live in the program
-                    payload, ok = jax.lax.optimization_barrier((payload, ok))
-                    recv = payload
-                voted = base + recv
-            new_accs.append(jnp.where(participates, voted, accs[k]))
-            inflight = nxt
-        accs = new_accs
-    return accs
-
-
-def _secure_allreduce_chunks(chunks: list, cfg: AggConfig,
-                             dp_axes: tuple) -> list:
-    """The full protocol over a list of equal-size flat float32 chunks;
-    chunk k covers pad-stream offsets [k*size, (k+1)*size)."""
-    mcfg = cfg.mask_cfg()
-    node_id = _flat_node_id(dp_axes)
-    size = chunks[0].shape[0]
-    offsets = [k * size for k in range(len(chunks))]
-
-    # --- Step 1: encrypt (fused quantize+mask kernel) ---
-    qs = [_encrypt_chunk(cfg, mcfg, ch, node_id, off)
-          for ch, off in zip(chunks, offsets)]
-
-    # --- Steps 1-2: intra-cluster local aggregate (modular sum) ---
-    if cfg.cluster_size > 1:
-        groups = _intra_cluster_groups(cfg)
-        accs = [jax.lax.psum(q, dp_axes, axis_index_groups=groups)
-                for q in qs]
-    else:
-        accs = qs
-
-    # --- Step 3: cluster schedule with redundant voted hops ---
-    accs = _run_schedule(cfg, dp_axes, node_id, accs)
-
-    # --- Step 4: threshold decryption (fused unmask+dequantize kernel) ---
-    return [_decrypt_chunk(cfg, mcfg, a, off)
-            for a, off in zip(accs, offsets)]
 
 
 def secure_allreduce_manual(x: jax.Array, cfg: AggConfig,
                             dp_axes: Sequence[str]) -> jax.Array:
-    """Exact-sum allreduce of ``x`` over ``dp_axes`` via the paper schedule.
+    """Exact-sum allreduce of ``x`` over ``dp_axes`` via the paper
+    schedule.  Call inside shard_map manual over ``dp_axes``.
 
-    Call inside shard_map manual over ``dp_axes``. Returns float32 sum.
+    Shim over ``compile_plan`` + ``ManualTransport`` (kept one release).
     """
     dp_axes = tuple(dp_axes)
+    plan = compile_plan(cfg)
+    tp = ManualTransport(plan, dp_axes)
     flat = x.reshape(-1).astype(jnp.float32)
-    (out,) = _secure_allreduce_chunks([flat], cfg, dp_axes)
-    return out.reshape(x.shape)
+    (out,) = execute_chunks(plan, tp, [flat[None]],
+                            SessionMeta.single(cfg.seed))
+    return out[0].reshape(x.shape)
 
 
 # ---------------------------------------------------------------------------
@@ -329,15 +163,19 @@ def _unpack_chunks(chunks: list, leaves: list) -> list:
 def secure_allreduce_tree(tree, cfg: AggConfig, dp_axes: Sequence[str]):
     """Apply to a pytree.  Leaves are packed into fixed-size chunks
     (``cfg.chunk_elems``) and the voted hops are software-pipelined over
-    the chunks, so hop communication overlaps vote compute and no
-    gradient-sized payload is ever materialized."""
+    the chunks by the engine, so hop communication overlaps vote compute
+    and no gradient-sized payload is ever materialized."""
     dp_axes = tuple(dp_axes)
     leaves, treedef = jax.tree.flatten(tree)
     chunks = _pack_chunks(leaves, cfg.chunk_elems)
     if not chunks:  # every leaf zero-size: nothing to aggregate
         return tree
-    outs = _secure_allreduce_chunks(chunks, cfg, dp_axes)
-    return jax.tree.unflatten(treedef, _unpack_chunks(outs, leaves))
+    plan = compile_plan(cfg)
+    tp = ManualTransport(plan, dp_axes)
+    outs = execute_chunks(plan, tp, [ch[None] for ch in chunks],
+                          SessionMeta.single(cfg.seed))
+    return jax.tree.unflatten(treedef, _unpack_chunks([o[0] for o in outs],
+                                                      leaves))
 
 
 # ---------------------------------------------------------------------------
@@ -364,105 +202,24 @@ def secure_allreduce_sharded(x, mesh: jax.sharding.Mesh, cfg: AggConfig,
 
 
 # ---------------------------------------------------------------------------
-# Single-device simulation oracle (node axis explicit) — matches the
+# Single-device simulation oracle shims (SimTransport) — match the
 # distributed implementation bit-for-bit, including byzantine voting.
-# Runs the dispatch layer's jnp engine (vmap-safe by construction).
 # ---------------------------------------------------------------------------
 
 
 def simulate_secure_allreduce(xs: jax.Array, cfg: AggConfig) -> jax.Array:
     """xs: (n_nodes, ...) -> per-node results (n_nodes, ...), emulating the
-    full schedule with voting + injected corruption on a single device."""
-    from repro.kernels import backend
-    n, c, g, r = cfg.n_nodes, cfg.cluster_size, cfg.n_clusters, cfg.redundancy
-    mcfg = cfg.mask_cfg()
-    byz = cfg.byzantine
-    # honor an explicit engine (cfg or REPRO_KERNEL_IMPL); the whole oracle
-    # runs under vmap, where the interpreter and jnp paths are safe but
-    # native Mosaic batching is not — demote only "pallas" to "jnp"
-    impl = backend.resolve(cfg.kernel_impl)
-    jcfg = dataclasses.replace(
-        cfg, kernel_impl="jnp" if impl == "pallas" else impl)
-    ids = jnp.arange(n, dtype=jnp.int32)
+    full schedule with voting + injected corruption on a single device.
+
+    Shim over ``compile_plan`` + ``SimTransport`` with S=1."""
+    n = cfg.n_nodes
+    assert xs.shape[0] == n
+    plan = compile_plan(cfg)
+    tp = SimTransport(plan, S=1)
     item_shape = xs.shape[1:]
-    flat = xs.reshape(n, -1)
-    q = jax.vmap(lambda x, i: _encrypt_chunk(jcfg, mcfg, x, i, 0))(flat, ids)
-
-    # intra-cluster sums, replicated to members
-    acc = q.reshape(g, c, -1).sum(axis=1, dtype=jnp.uint32)
-    acc = jnp.repeat(acc[:, None], c, axis=1).reshape(n, -1)
-
-    rounds = SCH.get_schedule(cfg.schedule, g)
-    local = acc
-    for rnd in rounds:
-        sent = jax.vmap(lambda x, i: byz.corrupt(x, i))(acc, ids)
-        new_acc = acc
-        for cl, src_cl in enumerate(rnd.recv_from):
-            if src_cl is None:
-                continue
-            for m in range(c):
-                dst = cl * c + m
-                copies = [sent[src_cl * c + (m + s) % c] for s in range(r)]
-                recv = majority_vote_list(copies)
-                if rnd.combine == "add":
-                    val = acc[dst] + recv
-                elif rnd.combine == "local_plus":
-                    val = local[dst] + recv
-                else:
-                    val = recv
-                new_acc = new_acc.at[dst].set(val)
-        acc = new_acc
-
-    out = jax.vmap(lambda a: _decrypt_chunk(jcfg, mcfg, a, 0))(acc)
+    flat = xs.reshape(n, -1).astype(jnp.float32)
+    (out,) = execute_chunks(plan, tp, [flat], SessionMeta.single(cfg.seed))
     return out.reshape(n, *item_shape)
-
-
-# ---------------------------------------------------------------------------
-# Batched multi-session entry point — S concurrent aggregation sessions,
-# each with its own pad-stream key (seed) and counter offset, sharing one
-# static AggConfig.  Every protocol stage is ONE dispatch over the whole
-# (S, ...) batch via the *_batch kernel ops: encrypt is a single
-# (S*n, T) mask pass, each voted round is a single (S*n, T) vote pass
-# (destination gathers are static index maps), and decryption is a single
-# batched unmask pass.  Bit-identical to running each session through
-# ``simulate_secure_allreduce`` on its own — the service's batched
-# executor relies on exactly that equivalence.
-# ---------------------------------------------------------------------------
-
-
-def _fault_masks(faults, n_nodes: int):
-    """Per-session fault specs -> {mode: (S, n) bool mask} (static numpy).
-
-    ``faults[s]`` is a sequence of ByzantineSpec for session s; a rank may
-    appear under at most one mode per session (disjointness keeps the
-    sequential application order-independent)."""
-    masks: dict[str, np.ndarray] = {}
-    for s_idx, specs in enumerate(faults):
-        for sp in specs:
-            if not sp.corrupt_ranks:
-                continue
-            m = masks.setdefault(
-                sp.mode, np.zeros((len(faults), n_nodes), bool))
-            m[s_idx, list(sp.corrupt_ranks)] = True
-    return masks
-
-
-def _corrupt_batch(masks, acc: jax.Array) -> jax.Array:
-    """Apply grouped per-mode fault masks to (S, n, T) SENT values —
-    the batched mirror of ``ByzantineSpec.corrupt`` per session row.
-    ``masks`` maps mode -> (S, n) bool, static numpy or traced arrays
-    (an all-False mask is the identity, so callers may pass fixed-key
-    traced masks and keep the program structure fault-independent)."""
-    sent = acc
-    for mode, m in masks.items():
-        if mode == "flip":
-            evil = acc ^ jnp.uint32(0xFFFFFFFF)
-        elif mode == "garbage":
-            evil = acc * jnp.uint32(2654435761) + jnp.uint32(0xDEADBEEF)
-        else:  # drop
-            evil = jnp.zeros_like(acc)
-        sent = jnp.where(jnp.asarray(m)[:, :, None], evil, sent)
-    return sent
 
 
 def simulate_secure_allreduce_batch(
@@ -479,78 +236,21 @@ def simulate_secure_allreduce_batch(
     to keep the compiled program independent of the fault pattern (the
     executor's compile-cache path).  ``reveal_only`` decrypts just
     member 0's (identical) aggregate per session -> (S, ...) — the
-    service path, which never needs all n_nodes copies of the revealed
-    value."""
-    from repro.kernels import backend
-    S, n = xs.shape[0], xs.shape[1]
-    c, g, r = cfg.cluster_size, cfg.n_clusters, cfg.redundancy
-    assert n == cfg.n_nodes
-    assert cfg.masking in ("global", "none"), \
-        "batched sessions support global/none masking (pairwise is jnp-only)"
-    mcfg = cfg.mask_cfg()
-    impl = backend.resolve(cfg.kernel_impl)
-    if seeds is None:
-        seeds = jnp.full((S,), mcfg.seed, jnp.uint32)
-    seeds = jnp.asarray(seeds).astype(jnp.uint32)
-    if offsets is None:
-        offsets = jnp.zeros((S,), jnp.uint32)
-    offsets = jnp.asarray(offsets).astype(jnp.uint32)
-    if fault_masks is not None:
-        assert faults is None, "pass faults or fault_masks, not both"
-        masks = dict(fault_masks)
-    else:
-        if faults is None:
-            faults = [()] * S
-        assert len(faults) == S
-        masks = _fault_masks(faults, n)
+    service path.  All masking modes run batched, including the
+    in-kernel pairwise pads.
 
+    Shim over ``compile_plan`` + ``SimTransport``."""
+    S, n = xs.shape[0], xs.shape[1]
+    assert n == cfg.n_nodes
+    plan = compile_plan(cfg)
+    meta = SessionMeta.build(S, n, seed=cfg.seed, seeds=seeds,
+                             offsets=offsets, faults=faults,
+                             fault_masks=fault_masks)
+    tp = SimTransport(plan, S=S)
     item_shape = xs.shape[2:]
     T = int(np.prod(item_shape)) if item_shape else 1
-    flat = xs.reshape(S, n, T).astype(jnp.float32)
-
-    # --- Step 1: one batched encrypt over all (session, node) rows ---
-    node_ids = jnp.tile(jnp.arange(n, dtype=jnp.uint32), S)
-    row_seeds = jnp.repeat(seeds, n)
-    row_offs = jnp.repeat(offsets, n)
-    mode = "mask" if mcfg.mode == "global" else "quantize"
-    q = mask_encrypt_batch_fn(flat.reshape(S * n, T), node_ids, row_seeds,
-                              mcfg.scale, mcfg.clip, mode=mode,
-                              offsets=row_offs, impl=impl)
-
-    # --- Steps 1-2: intra-cluster sums, replicated to members ---
-    acc = q.reshape(S, g, c, T).sum(axis=2, dtype=jnp.uint32)
-    acc = jnp.repeat(acc[:, :, None], c, axis=2).reshape(S, n, T)
-
-    # --- Step 3: voted schedule; one batched vote per round ---
-    local = acc
-    for rnd in SCH.get_schedule(cfg.schedule, g):
-        participates = np.zeros((n,), bool)
-        src_idx = np.arange(n)[None, :].repeat(r, axis=0)  # (r, n)
-        for cl, src_cl in enumerate(rnd.recv_from):
-            if src_cl is None:
-                continue
-            for m in range(c):
-                dst = cl * c + m
-                participates[dst] = True
-                for s in range(r):
-                    src_idx[s, dst] = src_cl * c + (m + s) % c
-        if not participates.any():
-            continue
-        sent = _corrupt_batch(masks, acc)
-        copies = [sent[:, src_idx[s], :].reshape(S * n, T) for s in range(r)]
-        base = _vote_base(rnd, acc, local)
-        voted = vote_combine_batch_fn(copies, base.reshape(S * n, T),
-                                      impl=impl).reshape(S, n, T)
-        acc = jnp.where(jnp.asarray(participates)[None, :, None], voted, acc)
-
-    # --- Step 4: one batched unmask ---
-    umode = "mask" if mcfg.mode == "global" else "dequantize"
-    if reveal_only:   # service path: one revealed copy per session
-        out = unmask_decrypt_batch_fn(acc[:, 0], mcfg.n_nodes, seeds,
-                                      mcfg.scale, mode=umode,
-                                      offsets=offsets, impl=impl)
+    flat = xs.reshape(S * n, T).astype(jnp.float32)
+    (out,) = execute_chunks(plan, tp, [flat], meta, reveal_only=reveal_only)
+    if reveal_only:
         return out.reshape(S, *item_shape)
-    out = unmask_decrypt_batch_fn(acc.reshape(S * n, T), mcfg.n_nodes,
-                                  row_seeds, mcfg.scale, mode=umode,
-                                  offsets=row_offs, impl=impl)
     return out.reshape(S, n, *item_shape)

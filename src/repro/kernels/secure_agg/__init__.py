@@ -13,4 +13,6 @@ from repro.kernels.secure_agg.ref import (mask_encrypt_batch_ref,
                                           unmask_decrypt_batch_ref,
                                           unmask_decrypt_ref,
                                           vote_combine_ref)
-from repro.kernels.secure_agg.secure_agg import pad_stream, splitmix32
+from repro.kernels.secure_agg.secure_agg import (PAIRWISE_KEY_BASE,
+                                                 pad_stream, pairwise_total,
+                                                 splitmix32)

@@ -28,15 +28,18 @@ def _interp(impl: str) -> bool:
 
 
 def mask_encrypt_fn(x, node_id, seed, scale: float, clip: float,
-                    mode: str = "mask", offset=0,
+                    mode: str = "mask", offset=0, cluster_size: int = 0,
                     impl: Optional[str] = None) -> jax.Array:
-    """Fused clip+quantize(+pad) of a flat float payload -> uint32."""
+    """Fused clip+quantize(+pad) of a flat float payload -> uint32.
+    Mode "pairwise" fuses the cluster-cancelling pad (in-kernel loop
+    over ``cluster_size`` members) instead of the global pad."""
     impl = backend.resolve(impl)
     if impl == "jnp":
         return R.mask_encrypt_ref(x, node_id, seed, scale, clip, mode=mode,
-                                  offset=offset)
+                                  offset=offset, cluster_size=cluster_size)
     return mask_encrypt(x, node_id, seed, scale, clip, mode=mode,
-                        offset=offset, interpret=_interp(impl))
+                        offset=offset, cluster_size=cluster_size,
+                        interpret=_interp(impl))
 
 
 def unmask_decrypt_fn(agg, n_nodes: int, seed, scale: float,
@@ -70,15 +73,18 @@ def vote_combine_fn(copies: Union[jax.Array, Sequence[jax.Array]], acc,
 
 def mask_encrypt_batch_fn(x, node_ids, seeds, scale: float, clip: float,
                           mode: str = "mask", offsets=None,
+                          cluster_size: int = 0,
                           impl: Optional[str] = None) -> jax.Array:
     """(B, T) float rows -> (B, T) uint32, row b keyed by
     (seeds[b], node_ids[b]) at counter offset ``offsets[b]``."""
     impl = backend.resolve(impl)
     if impl == "jnp":
         return R.mask_encrypt_batch_ref(x, node_ids, seeds, scale, clip,
-                                        mode=mode, offsets=offsets)
+                                        mode=mode, offsets=offsets,
+                                        cluster_size=cluster_size)
     return mask_encrypt_batch(x, node_ids, seeds, scale, clip, mode=mode,
-                              offsets=offsets, interpret=_interp(impl))
+                              offsets=offsets, cluster_size=cluster_size,
+                              interpret=_interp(impl))
 
 
 def unmask_decrypt_batch_fn(agg, n_nodes: int, seeds, scale: float,
@@ -104,11 +110,14 @@ def vote_combine_batch_fn(copies: Sequence[jax.Array], acc,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("scale", "clip", "mode", "impl"))
+                   static_argnames=("scale", "clip", "mode", "cluster_size",
+                                    "impl"))
 def mask_encrypt_batch_op(x, node_ids, seeds, scale, clip, mode="mask",
-                          offsets=None, impl: Optional[str] = None):
+                          offsets=None, cluster_size: int = 0,
+                          impl: Optional[str] = None):
     return mask_encrypt_batch_fn(x, node_ids, seeds, scale, clip, mode=mode,
-                                 offsets=offsets, impl=impl)
+                                 offsets=offsets, cluster_size=cluster_size,
+                                 impl=impl)
 
 
 @functools.partial(jax.jit,
@@ -125,11 +134,13 @@ def vote_combine_batch_op(copies, acc, impl: Optional[str] = None):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("scale", "clip", "mode", "impl"))
+                   static_argnames=("scale", "clip", "mode", "cluster_size",
+                                    "impl"))
 def mask_encrypt_op(x, node_id, seed, scale, clip, mode="mask", offset=0,
-                    impl: Optional[str] = None):
+                    cluster_size: int = 0, impl: Optional[str] = None):
     return mask_encrypt_fn(x, node_id, seed, scale, clip, mode=mode,
-                           offset=offset, impl=impl)
+                           offset=offset, cluster_size=cluster_size,
+                           impl=impl)
 
 
 @functools.partial(jax.jit,

@@ -12,7 +12,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.secure_agg.secure_agg import (as_copy_list,
-                                                 median_network, pad_stream)
+                                                 median_network, pad_stream,
+                                                 pairwise_total)
 
 
 def ctr_stream(T: int, offset) -> jax.Array:
@@ -38,13 +39,19 @@ def total_pad(n_nodes: int, seed, T: int, offset=0) -> jax.Array:
 
 
 def mask_encrypt_ref(x: jax.Array, node_id, seed, scale: float, clip: float,
-                     mode: str = "mask", offset=0) -> jax.Array:
+                     mode: str = "mask", offset=0,
+                     cluster_size: int = 0) -> jax.Array:
     xq = jnp.clip(x.astype(jnp.float32), -clip, clip) * jnp.float32(scale)
     q = jnp.round(xq).astype(jnp.int32).astype(jnp.uint32)
     if mode == "mask":
         seed = jnp.asarray(seed).astype(jnp.uint32)
         node_id = jnp.asarray(node_id).astype(jnp.uint32)
         q = q + pad_stream(seed, node_id, ctr_stream(x.shape[0], offset))
+    elif mode == "pairwise":
+        assert cluster_size >= 1, "pairwise mode needs cluster_size"
+        seed = jnp.asarray(seed).astype(jnp.uint32)
+        q = q + pairwise_total(seed, node_id, ctr_stream(x.shape[0], offset),
+                               cluster_size)
     return q
 
 
@@ -76,13 +83,14 @@ def _row_meta(B: int, *vals):
 
 def mask_encrypt_batch_ref(x: jax.Array, node_ids, seeds, scale: float,
                            clip: float, mode: str = "mask",
-                           offsets=None) -> jax.Array:
+                           offsets=None, cluster_size: int = 0) -> jax.Array:
     B = x.shape[0]
     nids, sds, offs = _row_meta(
         B, node_ids, seeds, 0 if offsets is None else offsets)
     return jax.vmap(
         lambda xr, nid, sd, off: mask_encrypt_ref(
-            xr, nid, sd, scale, clip, mode=mode, offset=off)
+            xr, nid, sd, scale, clip, mode=mode, offset=off,
+            cluster_size=cluster_size)
     )(x, nids, sds, offs)
 
 

@@ -40,6 +40,10 @@ MIX2 = np.uint32(0xC2B2AE35)
 LANES = 128      # TPU lane count (last tile dim)
 SUBLANES = 8     # float32/uint32 sublane count (second-to-last tile dim)
 
+# keys for pairwise pads live in a disjoint space from per-node keys
+# (shared with core/masking.py, which re-exports it)
+PAIRWISE_KEY_BASE = np.uint32(1 << 20)
+
 
 def splitmix32(x: jax.Array) -> jax.Array:
     """Counter-based PRF core (uint32 -> uint32)."""
@@ -95,13 +99,43 @@ def _ctr_tile(meta_off, ib, tr: int) -> jax.Array:
     return base + row * jnp.uint32(LANES) + col
 
 
+def pairwise_total(seed, node_id, ctr: jax.Array,
+                   cluster_size: int) -> jax.Array:
+    """SecAgg-style pairwise-cancelling pad of ``node_id`` within its
+    cluster, evaluated at counter positions ``ctr`` — an in-kernel
+    ``fori_loop`` over the ``cluster_size`` members (O(1) program size in
+    the cluster size), shared by the Pallas kernels and the jnp
+    reference so both are bit-identical to ``core.masking.pairwise_pad``:
+
+        mask_i = sum_{j in cluster, j>i} PRF(ij) - sum_{j<i} PRF(ij)
+
+    so the pads cancel inside the intra-cluster modular sum."""
+    c = jnp.uint32(cluster_size)
+    node = jnp.asarray(node_id).astype(jnp.uint32)
+    cluster = node // c
+    member = node % c
+
+    def body(other, acc):
+        o = jnp.uint32(other)
+        lo = jnp.minimum(member, o)
+        hi = jnp.maximum(member, o)
+        pair_id = cluster * c * c + lo * c + hi + PAIRWISE_KEY_BASE
+        p = pad_stream(seed, pair_id, ctr)
+        contrib = jnp.where(member < o, p, jnp.uint32(0) - p)
+        contrib = jnp.where(member == o, jnp.uint32(0), contrib)
+        return acc + contrib
+
+    return jax.lax.fori_loop(0, cluster_size, body,
+                             jnp.zeros(ctr.shape, jnp.uint32))
+
+
 # ---------------------------------------------------------------------------
 # mask_encrypt: clip + quantize + pad-add
 # ---------------------------------------------------------------------------
 
 
 def _mask_kernel(x_ref, meta_ref, o_ref, *, tr: int, scale: float,
-                 clip: float, mode: str):
+                 clip: float, mode: str, cluster_size: int):
     ib = pl.program_id(0)
     x = x_ref[...].astype(jnp.float32)
     xq = jnp.clip(x, -jnp.float32(clip), jnp.float32(clip)) * jnp.float32(scale)
@@ -109,18 +143,26 @@ def _mask_kernel(x_ref, meta_ref, o_ref, *, tr: int, scale: float,
     if mode == "mask":
         ctr = _ctr_tile(meta_ref[2], ib, tr)
         q = q + pad_stream(meta_ref[0], meta_ref[1], ctr)
+    elif mode == "pairwise":
+        ctr = _ctr_tile(meta_ref[2], ib, tr)
+        q = q + pairwise_total(meta_ref[0], meta_ref[1], ctr, cluster_size)
     o_ref[...] = q
 
 
 def mask_encrypt(x: jax.Array, node_id, seed, scale: float, clip: float,
-                 *, mode: str = "mask", offset=0, block_rows: int = 256,
+                 *, mode: str = "mask", offset=0, cluster_size: int = 0,
+                 block_rows: int = 256,
                  interpret: Optional[bool] = None) -> jax.Array:
     """x: flat (T,) float -> quantized(+masked) uint32 (T,), any T.
 
     ``offset`` shifts the PRF counter so chunked calls reproduce the same
-    stream as one monolithic call over the concatenated payload.
+    stream as one monolithic call over the concatenated payload.  Mode
+    "pairwise" adds the in-kernel pairwise-cancelling pad instead of the
+    global pad (``cluster_size`` required).
     """
     (T,) = x.shape
+    if mode == "pairwise":
+        assert cluster_size >= 1, "pairwise mode needs cluster_size"
     tr, rows_p = _tile_rows(T, block_rows)
     x2 = _to_tiles(x.astype(jnp.float32), rows_p)
     meta = jnp.stack([jnp.asarray(seed).astype(jnp.uint32),
@@ -128,7 +170,7 @@ def mask_encrypt(x: jax.Array, node_id, seed, scale: float, clip: float,
                       jnp.asarray(offset).astype(jnp.uint32)])
     out = pl.pallas_call(
         functools.partial(_mask_kernel, tr=tr, scale=scale, clip=clip,
-                          mode=mode),
+                          mode=mode, cluster_size=cluster_size),
         grid=(rows_p // tr,),
         in_specs=[
             pl.BlockSpec((tr, LANES), lambda ib: (ib, 0)),
@@ -211,7 +253,7 @@ def _to_tiles_b(x: jax.Array, rows_p: int) -> jax.Array:
 
 
 def _mask_batch_kernel(x_ref, meta_ref, o_ref, *, tr: int, scale: float,
-                       clip: float, mode: str):
+                       clip: float, mode: str, cluster_size: int):
     ib = pl.program_id(0)   # session row
     it = pl.program_id(1)   # tile within the row
     x = x_ref[0].astype(jnp.float32)
@@ -220,17 +262,23 @@ def _mask_batch_kernel(x_ref, meta_ref, o_ref, *, tr: int, scale: float,
     if mode == "mask":
         ctr = _ctr_tile(meta_ref[2, ib], it, tr)
         q = q + pad_stream(meta_ref[0, ib], meta_ref[1, ib], ctr)
+    elif mode == "pairwise":
+        ctr = _ctr_tile(meta_ref[2, ib], it, tr)
+        q = q + pairwise_total(meta_ref[0, ib], meta_ref[1, ib], ctr,
+                               cluster_size)
     o_ref[0] = q
 
 
 def mask_encrypt_batch(x: jax.Array, node_ids, seeds, scale: float,
                        clip: float, *, mode: str = "mask", offsets=None,
-                       block_rows: int = 256,
+                       cluster_size: int = 0, block_rows: int = 256,
                        interpret: Optional[bool] = None) -> jax.Array:
     """x: (B, T) float -> quantized(+masked) uint32 (B, T); row b is padded
     with the stream keyed by (seeds[b], node_ids[b]) starting at counter
     ``offsets[b]`` — bit-identical to B separate ``mask_encrypt`` calls."""
     B, T = x.shape
+    if mode == "pairwise":
+        assert cluster_size >= 1, "pairwise mode needs cluster_size"
     tr, rows_p = _tile_rows(T, block_rows)
     x3 = _to_tiles_b(x.astype(jnp.float32), rows_p)
     if offsets is None:
@@ -242,7 +290,7 @@ def mask_encrypt_batch(x: jax.Array, node_ids, seeds, scale: float,
     ])
     out = pl.pallas_call(
         functools.partial(_mask_batch_kernel, tr=tr, scale=scale, clip=clip,
-                          mode=mode),
+                          mode=mode, cluster_size=cluster_size),
         grid=(B, rows_p // tr),
         in_specs=[
             pl.BlockSpec((1, tr, LANES), lambda ib, it: (ib, it, 0)),

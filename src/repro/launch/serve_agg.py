@@ -71,6 +71,11 @@ def main() -> None:
     ap.add_argument("--churn-every", type=int, default=0)
     ap.add_argument("--impl", default=None,
                     help="kernel engine override (pallas/pallas_interpret/jnp)")
+    ap.add_argument("--transport", choices=("sim", "mesh"), default="sim",
+                    help="executor backend: sim oracle or shard_map over "
+                         "a dp mesh (needs one device per protocol slot; "
+                         "force with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     ap.add_argument("--data", type=int, default=1)
     ap.add_argument("--model", type=int, default=1)
     args = ap.parse_args()
@@ -86,12 +91,17 @@ def main() -> None:
                            cluster_size=args.cluster_size,
                            redundancy=args.redundancy,
                            schedule=args.schedule)
+    agg_mesh = None
+    if args.transport == "mesh":
+        from repro.runtime import compat
+        agg_mesh = compat.node_mesh(snap.n_nodes)
     svc = AggregationService(
         params, epochs=em,
         batching=BatchingConfig(max_batch=args.batch, max_age=args.max_age),
-        kernel_impl=args.impl)
+        kernel_impl=args.impl, transport=args.transport, mesh=agg_mesh)
     print(f"service: g={snap.n_clusters} clusters x c={args.cluster_size} "
-          f"-> {snap.n_nodes} slots, T={args.elems}, r={args.redundancy}")
+          f"-> {snap.n_nodes} slots, T={args.elems}, r={args.redundancy}, "
+          f"transport={args.transport}")
 
     out = run_load(svc, em, sessions=args.sessions, elems=args.elems,
                    churn_every=args.churn_every)

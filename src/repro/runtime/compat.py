@@ -27,6 +27,18 @@ def host_mesh(data: int = 1, model: int = 1,
     return make_mesh(shape, axes)
 
 
+def node_mesh(n_nodes: int, axis: str = "data") -> jax.sharding.Mesh:
+    """One-device-per-protocol-node mesh over the first ``n_nodes`` host
+    devices — the shared bootstrap for ``MeshTransport`` drivers and
+    benches (keeps device ordering / axis naming in one place, like
+    :func:`host_mesh` does for the LM drivers)."""
+    import numpy as np
+    devs = jax.devices()
+    assert len(devs) >= n_nodes, \
+        f"mesh transport needs {n_nodes} devices (have {len(devs)})"
+    return jax.sharding.Mesh(np.array(devs[:n_nodes]), (axis,))
+
+
 def axis_size(axis_name):
     """``jax.lax.axis_size`` with a pre-0.5 fallback (a psum of the static
     constant 1 folds to the axis size at trace time)."""

@@ -46,7 +46,9 @@ class AggregationService:
                  epochs: Optional[EpochManager] = None,
                  batching: BatchingConfig = BatchingConfig(),
                  kernel_impl: Optional[str] = None,
-                 base_seed: int = 0x5EC0_A66):
+                 base_seed: int = 0x5EC0_A66,
+                 transport: str = "sim", mesh=None,
+                 dp_axes: Sequence[str] = ("data",)):
         if epochs is not None:
             snap = epochs.current()
             assert snap.n_nodes == default_params.n_nodes, \
@@ -54,7 +56,9 @@ class AggregationService:
         self.default_params = default_params
         self.epochs = epochs
         self.base_seed = base_seed
-        self.executor = BatchedExecutor(kernel_impl=kernel_impl)
+        self.executor = BatchedExecutor(kernel_impl=kernel_impl,
+                                        transport=transport, mesh=mesh,
+                                        dp_axes=dp_axes)
         self.queue = AdmissionQueue(self.executor, batching,
                                     pre_execute=self._merge_epoch_faults)
         self._sessions: dict[int, Session] = {}
@@ -135,6 +139,7 @@ class AggregationService:
             "batches_run": self.executor.batches_run,
             "pending": self.queue.depth(),
             "batch_sizes": tuple(self.queue.batch_sizes),
+            "queue": self.queue.metrics,
             "epoch": (self.epochs.current().epoch
                       if self.epochs is not None else None),
         }

@@ -1,20 +1,36 @@
 """Batched session executor + admission scheduler.
 
-The executor is where the service meets the PR-1 kernel dispatch layer:
-S concurrent sessions that share a :class:`BatchKey` are packed into one
-(S, n_nodes, T_chunk) batch and run through
-``simulate_secure_allreduce_batch`` — every protocol stage
-(``mask_encrypt`` / voted hops / ``unmask_decrypt``) is ONE batched
-kernel dispatch over all S sessions instead of S separate protocol runs,
-bit-identical to the monolithic per-session path by construction.
+The executor is where the service meets the protocol core: S concurrent
+sessions that share a :class:`BatchKey` are packed into one
+(S, n_nodes, T_row) batch, a plan is compiled once per shape
+(``core.plan.compile_plan``), and the engine executes it on the
+configured transport:
+
+  * ``transport="sim"``  — :class:`~repro.core.engine.SimTransport`,
+    the single-device oracle (default);
+  * ``transport="mesh"`` — :class:`~repro.core.engine.MeshTransport`,
+    the same plan under ``shard_map`` over a real dp mesh (one device
+    per protocol node) — bit-identical to the sim path by construction.
+
+Every protocol stage is ONE batched kernel dispatch over all S rows,
+and all masking modes run batched (pairwise pads are fused in-kernel).
+
+Long payloads chunk across batch *rows*: a session whose payload
+exceeds ``BatchingConfig.max_row_elems`` contributes several (n, T_row)
+rows whose pad-stream counter offsets continue where the previous row
+stopped, so the chunked session is bit-identical to a monolithic one.
 
 The admission queue coalesces sealed sessions per batch key and flushes
 on two watermarks:
 
-  * size — a full batch of ``max_batch`` sessions flushes immediately;
+  * size — a full batch of ``max_batch`` rows flushes immediately;
   * age  — a partial batch flushes once its oldest sealed session has
-    waited ``max_age`` (time units are whatever the caller passes as
-    ``now``: seconds from a wall clock, or integer ticks in tests).
+    waited ``max_age`` (``now`` defaults to ``time.monotonic()``; tests
+    pass explicit ticks).
+
+It also keeps fairness/starvation telemetry: per-key age watermarks
+(``oldest_ages``), the max observed queue age, and per-reason flush
+counters — see :attr:`AdmissionQueue.metrics`.
 
 Payload lengths are rounded up to ``pad_buckets`` so sessions with
 similar (not identical) T share a compiled executable; the pad tail is
@@ -23,24 +39,32 @@ zero-contribution elements that are sliced off at reveal.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.secure_allreduce import (_fault_masks,
-                                         simulate_secure_allreduce_batch)
+from repro.core.engine import MeshTransport, SimTransport, execute_chunks
+from repro.core.plan import SessionMeta, compile_plan, fault_masks_of
 from repro.service.session import Session, SessionState
 
 BatchKey = tuple
 
+_MASK32 = 0xFFFFFFFF
+
 
 @dataclasses.dataclass(frozen=True)
 class BatchingConfig:
-    max_batch: int = 8            # size watermark (S)
+    max_batch: int = 8            # size watermark, in batch ROWS (S)
     max_age: float = 0.05         # age watermark, in `now` units
     pad_buckets: tuple[int, ...] = (64, 256, 1024, 4096, 16384)
+    # payloads longer than this chunk across multiple batch rows (the
+    # per-session counter offsets keep chunked == monolithic); None
+    # keeps the historical behavior (one row, padded to a multiple of
+    # the top bucket)
+    max_row_elems: Optional[int] = None
 
     def padded_elems(self, elems: int) -> int:
         for b in self.pad_buckets:
@@ -49,17 +73,33 @@ class BatchingConfig:
         top = self.pad_buckets[-1]
         return ((elems + top - 1) // top) * top
 
+    def row_layout(self, elems: int) -> tuple[int, int]:
+        """(row_elems, n_rows) a payload of ``elems`` occupies."""
+        if self.max_row_elems is not None and elems > self.max_row_elems:
+            row = self.padded_elems(self.max_row_elems)
+            return row, -(-elems // row)
+        return self.padded_elems(elems), 1
+
 
 class BatchedExecutor:
-    """Runs batches of sealed sessions through one batched dispatch.
+    """Runs batches of sealed sessions through one engine execution.
 
-    Compiled executables are cached per (batch key, S, fault plan) — a
-    steady-state service replays a handful of shapes, so each shape
-    compiles once and every later batch is a single cached call.
+    Compiled executables are cached per (batch key, row count, fault
+    modes) — a steady-state service replays a handful of shapes, so each
+    shape compiles once and every later batch is a single cached call.
     """
 
-    def __init__(self, kernel_impl: Optional[str] = None):
+    def __init__(self, kernel_impl: Optional[str] = None,
+                 transport: str = "sim",
+                 mesh: Optional[jax.sharding.Mesh] = None,
+                 dp_axes: Sequence[str] = ("data",)):
+        assert transport in ("sim", "mesh"), transport
+        if transport == "mesh":
+            assert mesh is not None, "mesh transport needs a mesh"
         self.kernel_impl = kernel_impl
+        self.transport = transport
+        self.mesh = mesh
+        self.dp_axes = tuple(dp_axes)
         self._fns: dict = {}
         self.batches_run = 0
         self.sessions_run = 0
@@ -73,13 +113,27 @@ class BatchedExecutor:
         fn = self._fns.get(key)
         if fn is None:
             cfg = template.params.agg_config(self.kernel_impl)
+            plan = compile_plan(cfg)
+            if self.transport == "mesh":
+                mt = MeshTransport(self.mesh, self.dp_axes,
+                                   impl=self.kernel_impl)
 
-            @jax.jit
-            def fn(xs, seeds, offsets, fault_masks):
-                # every member holds the same aggregate; reveal one copy
-                return simulate_secure_allreduce_batch(
-                    xs, cfg, seeds=seeds, offsets=offsets,
-                    fault_masks=fault_masks, reveal_only=True)
+                @jax.jit
+                def fn(xs, seeds, offsets, fault_masks):
+                    meta = SessionMeta(seeds=seeds, offsets=offsets,
+                                       fault_masks=fault_masks)
+                    return mt.execute(plan, xs, meta, reveal_only=True)
+            else:
+                @jax.jit
+                def fn(xs, seeds, offsets, fault_masks):
+                    meta = SessionMeta(seeds=seeds, offsets=offsets,
+                                       fault_masks=fault_masks)
+                    S_, n, T = xs.shape
+                    tp = SimTransport(plan, S=S_)
+                    flat = xs.reshape(S_ * n, T).astype(jnp.float32)
+                    (out,) = execute_chunks(plan, tp, [flat], meta,
+                                            reveal_only=True)
+                    return out
 
             self._fns[key] = fn
         return fn
@@ -88,35 +142,46 @@ class BatchedExecutor:
                 padded_elems: Optional[int] = None) -> None:
         """Aggregate + reveal one batch (all sessions share a batch key).
 
-        On an executor error every session in the batch moves to FAILED
-        (never retried, never wedged in AGGREGATING) and the error
-        propagates to the pump caller."""
+        A session may span several batch rows (long payloads); row j of
+        a session reuses its pad key at counter offset ``pad_offset +
+        j * padded_elems``.  On an executor error every session in the
+        batch moves to FAILED (never retried, never wedged in
+        AGGREGATING) and the error propagates to the pump caller."""
         if not sessions:
             return
         padded = padded_elems or max(s.params.elems for s in sessions)
         key0 = sessions[0].params.batch_key(padded)
         assert all(s.params.batch_key(padded) == key0 for s in sessions), \
             "batch mixes incompatible sessions"
+        n_nodes = sessions[0].params.n_nodes
         for s in sessions:
             s.mark_aggregating()
         try:
-            xs = np.stack([s.payload_matrix(padded) for s in sessions])
-            seeds = jnp.asarray([s.seed for s in sessions], dtype=jnp.uint32)
-            offsets = jnp.asarray([s.pad_offset for s in sessions],
-                                  dtype=jnp.uint32)
-            masks = _fault_masks([s.fault.specs() for s in sessions],
-                                 sessions[0].params.n_nodes)
-            fn = self._compiled(sessions[0], padded, len(sessions),
+            rows, seeds, offsets, owner = [], [], [], []
+            for i, s in enumerate(sessions):
+                for j, mat in enumerate(s.payload_rows(padded)):
+                    rows.append(mat)
+                    seeds.append(s.seed)
+                    offsets.append((s.pad_offset + j * padded) & _MASK32)
+                    owner.append(i)
+            xs = np.stack(rows)                      # (R, n, padded)
+            owner = np.asarray(owner)
+            sess_masks = fault_masks_of(
+                [s.fault.specs() for s in sessions], n_nodes)
+            masks = {m: v[owner] for m, v in sess_masks.items()}  # per row
+            fn = self._compiled(sessions[0], padded, len(rows),
                                 frozenset(masks))
             revealed = np.asarray(fn(
-                jnp.asarray(xs), seeds, offsets,
+                jnp.asarray(xs),
+                jnp.asarray(seeds, dtype=jnp.uint32),
+                jnp.asarray(offsets, dtype=jnp.uint32),
                 {k: jnp.asarray(v) for k, v in masks.items()}))
         except Exception as e:
             for s in sessions:
                 s.fail(repr(e))
             raise
-        for s, row in zip(sessions, revealed):
-            s.reveal(row)
+        for i, s in enumerate(sessions):
+            s.reveal(revealed[owner == i].reshape(-1))
         self.batches_run += 1
         self.sessions_run += len(sessions)
 
@@ -132,18 +197,50 @@ class AdmissionQueue:
         self.pre_execute = pre_execute   # e.g. epoch-departure fault merge
         self._pending: dict[BatchKey, list[Session]] = {}
         self.batch_sizes: list[int] = []
+        # fairness/starvation telemetry (see ``metrics``)
+        self.flush_reasons = {"size": 0, "age": 0, "force": 0}
+        self.max_queue_age = 0.0
+        self.starved_sessions = 0     # flushed only after 2x the age mark
 
     def submit(self, session: Session) -> BatchKey:
         assert session.state is SessionState.SEALED, session
-        padded = self.batching.padded_elems(session.params.elems)
-        key = session.params.batch_key(padded)
+        row_elems, _ = self.batching.row_layout(session.params.elems)
+        key = session.params.batch_key(row_elems)
         self._pending.setdefault(key, []).append(session)
         return key
 
     def depth(self) -> int:
         return sum(len(q) for q in self._pending.values())
 
-    def _run(self, key: BatchKey, batch: list[Session]) -> None:
+    def oldest_ages(self, now: Optional[float] = None) -> dict:
+        """Per-key age watermark: how long each key's oldest sealed
+        session has been waiting."""
+        now = time.monotonic() if now is None else now
+        return {key: now - min(s.sealed_at for s in q)
+                for key, q in self._pending.items() if q}
+
+    @property
+    def metrics(self) -> dict:
+        return {
+            "flush_reasons": dict(self.flush_reasons),
+            "max_queue_age": self.max_queue_age,
+            "starved_sessions": self.starved_sessions,
+            "pending_sessions": self.depth(),
+        }
+
+    def _rows(self, key: BatchKey, sessions: Sequence[Session]) -> int:
+        row_elems = key[-1]
+        return sum(s.n_rows(row_elems) for s in sessions)
+
+    def _run(self, key: BatchKey, batch: list[Session], reason: str,
+             now: float, account_age: bool = True) -> None:
+        if account_age:
+            age = now - min(s.sealed_at for s in batch)
+            self.max_queue_age = max(self.max_queue_age, age)
+            self.starved_sessions += sum(
+                now - s.sealed_at >= 2 * self.batching.max_age
+                for s in batch)
+        self.flush_reasons[reason] += 1
         if self.pre_execute is not None:
             self.pre_execute(batch)
         self.executor.execute(batch, padded_elems=key[-1])
@@ -151,28 +248,48 @@ class AdmissionQueue:
         if len(self.batch_sizes) > 4096:   # bounded history
             del self.batch_sizes[:-2048]
 
-    def pump(self, now: float = 0.0, force: bool = False) -> int:
+    def pump(self, now: Optional[float] = None, force: bool = False) -> int:
         """Flush ready batches; returns the number of sessions executed.
 
-        Size watermark: every full ``max_batch`` group flushes.  Age
-        watermark: a partial group flushes when its oldest member sealed
-        more than ``max_age`` ago (or unconditionally with ``force``)."""
+        Size watermark: every group of ``max_batch`` ready rows flushes.
+        Age watermark: a partial group flushes when its oldest member
+        sealed more than ``max_age`` ago (or unconditionally with
+        ``force``).  ``now`` defaults to the monotonic clock.  A forced
+        pump (drain/shutdown) skips ALL age accounting — callers that
+        sealed with logical ticks would otherwise record bogus
+        monotonic-minus-tick ages."""
+        now = time.monotonic() if now is None else now
+        account_age = not force
         ran = 0
         for key in list(self._pending):
             q = self._pending[key]
-            while len(q) >= self.batching.max_batch:
-                batch, self._pending[key] = (q[: self.batching.max_batch],
-                                             q[self.batching.max_batch:])
-                q = self._pending[key]
-                self._run(key, batch)
-                ran += len(batch)
+            while self._rows(key, q) >= self.batching.max_batch:
+                # FIFO prefix that fits the row budget — never exceeds
+                # max_batch rows (keeping the compile-cache shape set
+                # small), except a single session wider than the budget,
+                # which flushes alone
+                take, rows = [], 0
+                row_elems = key[-1]
+                while q and rows + q[0].n_rows(row_elems) \
+                        <= self.batching.max_batch:
+                    s = q.pop(0)
+                    take.append(s)
+                    rows += s.n_rows(row_elems)
+                if not take:
+                    take.append(q.pop(0))
+                self._run(key, take, "size", now,
+                          account_age=account_age)
+                ran += len(take)
             if q and (force or
                       now - min(s.sealed_at for s in q)
                       >= self.batching.max_age):
                 batch, self._pending[key] = list(q), []
                 q = self._pending[key]
-                self._run(key, batch)   # batch already dequeued: a raising
-                ran += len(batch)       # executor FAILs it, never retries
+                # batch already dequeued: a raising executor FAILs it,
+                # never retries
+                self._run(key, batch, "force" if force else "age", now,
+                          account_age=account_age)
+                ran += len(batch)
             if not q:
                 del self._pending[key]
         return ran

@@ -67,7 +67,7 @@ class SessionParams:
     schedule: str = "ring"
     clip: float = 1.0
     guard_bits: int = 2
-    masking: str = "global"       # global | none
+    masking: str = "global"       # global | pairwise | none
 
     def __post_init__(self):
         assert self.elems >= 1
@@ -158,6 +158,20 @@ class Session:
         for slot, vec in self._contrib.items():
             out[slot, : self.params.elems] = vec
         return out
+
+    def n_rows(self, row_elems: int) -> int:
+        """Batch rows this session occupies at ``row_elems`` per row —
+        long payloads chunk across rows (the per-session counter offsets
+        keep the chunked pad streams identical to a monolithic run)."""
+        return max(1, -(-self.params.elems // row_elems))
+
+    def payload_rows(self, row_elems: int) -> list[np.ndarray]:
+        """Split the payload into ``n_rows`` (n_nodes, row_elems)
+        matrices; row j covers flat positions [j*row_elems, ...)."""
+        k = self.n_rows(row_elems)
+        full = self.payload_matrix(k * row_elems)
+        return [full[:, j * row_elems:(j + 1) * row_elems]
+                for j in range(k)]
 
     def mark_aggregating(self) -> None:
         self._require(SessionState.SEALED)

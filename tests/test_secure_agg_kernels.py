@@ -71,6 +71,59 @@ def test_vote_combine_kernel_matches_jnp(T, r):
                         == majority_vote(stacked)))
 
 
+# --- pairwise masking fused in-kernel (fori_loop over cluster members) ----
+
+
+@pytest.mark.parametrize("T", [1, 77, 1000])
+@pytest.mark.parametrize("c", [2, 4])
+def test_pairwise_mask_kernel_matches_oracle(T, c):
+    """mode="pairwise" (in-kernel loop over cluster members) ==
+    quantize + the unrolled ``masking.pairwise_pad`` oracle, bit for
+    bit, on both the Pallas kernel and the jnp reference — and the pads
+    still cancel within each cluster."""
+    from repro.core.masking import pairwise_pad, quantize
+    n = 4 * c
+    mcfg = MaskConfig(n_nodes=n, clip=2.0, mode="pairwise", cluster_size=c,
+                      seed=99)
+    x = jnp.asarray((RNG.normal(size=(T,)) * 0.4).astype(np.float32))
+    offset = 321
+    for nid in (0, 1, c, n - 1):
+        want = quantize(mcfg, x) + pairwise_pad(mcfg, nid, (T,),
+                                                offset=offset)
+        for impl in (PALLAS, "jnp"):
+            got = mask_encrypt_op(x, nid, mcfg.seed, mcfg.scale, mcfg.clip,
+                                  mode="pairwise", offset=offset,
+                                  cluster_size=c, impl=impl)
+            assert bool(jnp.all(got == want)), (impl, nid)
+    # cluster members' pads cancel: the modular sum is the plain
+    # quantized sum
+    rows = [mask_encrypt_op(x, i, mcfg.seed, mcfg.scale, mcfg.clip,
+                            mode="pairwise", offset=offset, cluster_size=c,
+                            impl=PALLAS) for i in range(c)]
+    total = rows[0]
+    for rw in rows[1:]:
+        total = total + rw
+    plain = quantize(mcfg, x) * jnp.uint32(c)
+    assert bool(jnp.all(total == plain))
+
+
+def test_pairwise_mask_batch_matches_per_row():
+    B, T, c = 6, 129, 4
+    x = jnp.asarray(RNG.normal(size=(B, T)).astype(np.float32) * 0.4)
+    nids = jnp.asarray(RNG.integers(0, 16, B).astype(np.uint32))
+    seeds = jnp.asarray(RNG.integers(0, 2 ** 32, B, dtype=np.uint32))
+    offs = jnp.asarray(RNG.integers(0, 9999, B).astype(np.uint32))
+    want = jnp.stack([
+        mask_encrypt_op(x[b], nids[b], seeds[b], 2.0 ** 20, 1.0,
+                        mode="pairwise", offset=offs[b], cluster_size=c,
+                        impl="jnp") for b in range(B)])
+    for impl in (PALLAS, "jnp"):
+        got = mask_encrypt_batch_op(x, nids, seeds, 2.0 ** 20, 1.0,
+                                    mode="pairwise", offsets=offs,
+                                    cluster_size=c, impl=impl)
+        assert bool(jnp.all(got == want)), impl
+
+
 # --- batched (multi-session) variants: leading S axis, per-row meta -------
 
 

@@ -344,6 +344,122 @@ def test_mid_session_byzantine_flip_is_out_voted():
     assert np.allclose(s.result, vals.sum(0), atol=1e-4)
 
 
+def test_pairwise_masking_runs_through_the_batched_service():
+    """Cluster-pairwise masking is no longer asserted away by the
+    batched path: a batch of pairwise sessions == the same sessions
+    executed one-by-one, bit for bit, and tallies stay exact (the
+    in-kernel pairwise pads cancel inside the cluster sums)."""
+    vals = RNG.normal(size=(6, 8, 16)).astype(np.float32) * 0.3
+    params = SessionParams(n_nodes=8, elems=16, cluster_size=4,
+                           redundancy=3, masking="pairwise", clip=2.0)
+
+    def run(max_batch):
+        svc = AggregationService(
+            params, batching=BatchingConfig(max_batch=max_batch,
+                                            max_age=1e9))
+        for i in range(6):
+            s = svc.open()
+            for slot in range(8):
+                if (i, slot) != (3, 2):      # one crash session
+                    s.contribute(slot, vals[i, slot])
+            svc.seal(s.sid)
+        svc.pump(force=True)
+        return np.stack([svc.result(sid) for sid in range(6)])
+
+    batched, seq = run(6), run(1)
+    assert np.array_equal(batched, seq)
+    want = vals.sum(1)
+    want[3] -= vals[3, 2]
+    assert np.abs(batched - want).max() < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# Long payloads: one session chunked across multiple batch rows
+# ---------------------------------------------------------------------------
+
+
+def test_long_payload_chunks_across_rows_pinned_to_monolithic():
+    """A session longer than ``max_row_elems`` splits into several batch
+    rows riding the per-session counter offsets — bit-identical to the
+    same session run as one monolithic padded row."""
+    elems, n = 1000, 8
+    vals = RNG.normal(size=(n, elems)).astype(np.float32) * 0.3
+    params = SessionParams(n_nodes=n, elems=elems, cluster_size=4,
+                           redundancy=3, clip=2.0)
+
+    def run(batching):
+        svc = AggregationService(params, batching=batching)
+        s = svc.open()
+        for slot in range(n):
+            s.contribute(slot, vals[slot])
+        svc.seal(s.sid)
+        assert svc.pump(force=True) == 1
+        return s, svc.result(s.sid)
+
+    s_chunk, chunked = run(BatchingConfig(max_batch=8, pad_buckets=(256,),
+                                          max_row_elems=256))
+    assert s_chunk.n_rows(256) == 4
+    s_mono, mono = run(BatchingConfig(max_batch=8, pad_buckets=(1024,)))
+    assert s_mono.n_rows(1024) == 1
+    assert chunked.shape == mono.shape == (elems,)
+    assert np.array_equal(chunked, mono)
+    assert np.abs(chunked - vals.sum(0)).max() < 1e-4
+
+
+def test_row_watermark_counts_rows_not_sessions():
+    """The size watermark fills batches by ROWS: two 4-row sessions
+    flush a max_batch=8 batch; a session wider than max_batch still
+    flushes whole."""
+    params = SessionParams(n_nodes=8, elems=1000, cluster_size=4,
+                           redundancy=3)
+    svc = AggregationService(
+        params, batching=BatchingConfig(max_batch=8, max_age=1e9,
+                                        pad_buckets=(256,),
+                                        max_row_elems=256))
+    sessions = [_fill(svc, elems=1000) for _ in range(3)]
+    assert svc.pump(now=0.0) == 2              # 2 sessions x 4 rows = 8
+    assert sessions[0].state is SessionState.REVEALED
+    assert sessions[2].state is SessionState.SEALED
+    assert svc.pump(force=True) == 1
+
+
+# ---------------------------------------------------------------------------
+# Admission telemetry: per-key watermarks, flush reasons, starvation
+# ---------------------------------------------------------------------------
+
+
+def test_queue_metrics_track_watermarks_and_flush_reasons():
+    svc = AggregationService(
+        _params(), batching=BatchingConfig(max_batch=2, max_age=5.0))
+    q = svc.queue
+    _fill(svc, now=0.0)
+    assert q.oldest_ages(now=3.0) == {next(iter(q._pending)): 3.0}
+    _fill(svc, now=1.0)
+    assert svc.pump(now=1.0) == 2              # size watermark
+    _fill(svc, now=2.0)
+    assert svc.pump(now=4.0) == 0              # young partial waits
+    assert svc.pump(now=20.0) == 1             # age watermark + starved
+    _fill(svc, now=21.0)
+    assert svc.pump(now=21.0, force=True) == 1
+    m = q.metrics
+    assert m["flush_reasons"] == {"size": 1, "age": 1, "force": 1}
+    assert m["max_queue_age"] == 18.0          # the starved session
+    assert m["starved_sessions"] == 1          # waited >= 2 * max_age
+    assert m["pending_sessions"] == 0
+    assert svc.stats["queue"] == m
+
+
+def test_pump_defaults_to_monotonic_clock():
+    """No ``now`` sentinel: sessions sealed via the service's default
+    clock age out against real time, so a plain ``pump()`` flushes a
+    partial batch once max_age has passed."""
+    svc = AggregationService(
+        _params(), batching=BatchingConfig(max_batch=64, max_age=0.0))
+    s = _fill(svc, now=None)                   # monotonic seal time
+    assert svc.pump() == 1                     # age 0.0 already reached
+    assert s.state is SessionState.REVEALED
+
+
 def test_fault_plan_merge_keeps_groups_disjoint():
     a = SessionFaultPlan(byzantine_slots=(1, 2))
     b = SessionFaultPlan(crashed_slots=(2, 3))
