@@ -5,8 +5,8 @@
 # whose auto-selected engine is the jnp reference.
 PY := PYTHONPATH=src python
 
-.PHONY: test kernel-lane service-lane mesh-lane bench-service \
-    bench-service-mesh bench
+.PHONY: test kernel-lane service-lane mesh-lane adversary-lane \
+    bench-service bench-service-mesh bench
 
 test:
 	$(PY) -m pytest -x -q
@@ -20,11 +20,20 @@ service-lane:
 	$(PY) -m pytest tests/test_service.py tests/test_overlay.py \
 	    tests/test_crypto.py -q
 
-# distributed lane: MeshTransport == SimTransport bit-equivalence and the
-# multi-device protocol paths (the tests spawn their own subprocesses
-# with XLA_FLAGS=--xla_force_host_platform_device_count forced)
+# distributed lane: MeshTransport == SimTransport bit-equivalence, the
+# mesh half of the conformance grid, and the multi-device protocol paths
+# (the tests spawn their own subprocesses with
+# XLA_FLAGS=--xla_force_host_platform_device_count forced)
 mesh-lane:
-	$(PY) -m pytest tests/test_engine.py tests/test_distributed.py -q
+	$(PY) -m pytest tests/test_engine.py tests/test_distributed.py \
+	    tests/test_conformance.py -q
+
+# adversarial conformance grid (tests/adversary.py strategies over
+# transport x masking) + vote/schedule property tests; the mesh cells
+# belong to mesh-lane, so they are filtered out here
+adversary-lane:
+	$(PY) -m pytest tests/test_conformance.py tests/test_vote_schedules.py \
+	    -m "not mesh" -q
 
 bench-service:
 	$(PY) -m benchmarks.run --only service --json BENCH_service.json

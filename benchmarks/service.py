@@ -3,7 +3,7 @@ sessions/sec vs batch size S.
 
 The *sequential per-session baseline* is what serving a query cost
 before the service subsystem existed: one monolithic run of the PR-1
-protocol oracle (``simulate_secure_allreduce``) per session.  The
+protocol oracle (``engine.sim_batch`` at S=1) per session.  The
 batched executor packs S sessions into one (S, n, T) dispatch and
 decrypts only the revealed copy (``reveal_only``), so its advantage is
 batching + no n-way replicated decryption — both are service-layer wins
@@ -21,8 +21,9 @@ import jax.numpy as jnp
 
 from benchmarks._timing import time_call
 
-from repro.core.secure_allreduce import (AggConfig, simulate_secure_allreduce,
-                                         simulate_secure_allreduce_batch)
+from repro.core.engine import sim_batch
+from repro.core.plan import SessionMeta, compile_plan
+from repro.core.secure_allreduce import AggConfig
 
 N_NODES, CLUSTER, R, T = 16, 4, 3, 1024
 S_SWEEP = (1, 8, 64)
@@ -40,7 +41,6 @@ def _run_mesh(full: bool) -> None:
     on a short host the rows are skipped (non-numeric, never enter the
     JSON trajectory)."""
     from repro.core.engine import MeshTransport
-    from repro.core.plan import SessionMeta, compile_plan
     from repro.runtime import compat
 
     if len(jax.devices()) < N_NODES:
@@ -75,10 +75,12 @@ def run(full: bool = False, transport: str = "sim") -> None:
         return
     rng = np.random.default_rng(0)
     cfg = _cfg()
+    plan = compile_plan(cfg)
 
     # --- sequential per-session baseline: the PR-1 monolithic path ---
     x1 = jnp.asarray(rng.normal(size=(N_NODES, T)).astype(np.float32) * 0.1)
-    seq_fn = jax.jit(lambda x: simulate_secure_allreduce(x, cfg))
+    seq_fn = jax.jit(lambda x: sim_batch(
+        plan, x[None], SessionMeta.single(cfg.seed))[0][0])
     us_seq = time_call(seq_fn, x1)
     seq_per_s = 1e6 / us_seq
     print(f"service_seq_monolithic_T{T},{us_seq:.0f},"
@@ -87,8 +89,9 @@ def run(full: bool = False, transport: str = "sim") -> None:
           f"sessions_per_s;baseline")
 
     # --- batched executor path at S in {1, 8, 64} ---
-    bat_fn = jax.jit(lambda x, s: simulate_secure_allreduce_batch(
-        x, cfg, seeds=s, reveal_only=True))
+    bat_fn = jax.jit(lambda x, s: sim_batch(
+        plan, x, SessionMeta(seeds=s, offsets=jnp.zeros_like(s)),
+        reveal_only=True)[0])
     for S in S_SWEEP:
         xs = jnp.asarray(
             rng.normal(size=(S, N_NODES, T)).astype(np.float32) * 0.1)

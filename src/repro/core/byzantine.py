@@ -74,9 +74,17 @@ def digest_vote_combine(payload: jax.Array, dg_copies: Sequence[jax.Array],
     contract (a majority of each vote's copies honest, honest copies
     bitwise identical) the accept/reject decision is the same, and the
     digest computation fuses into the same elementwise pass — no sort
-    network, no r-copy stack.  Without ``backup``, a rejected payload is
-    still consumed behind an ``optimization_barrier`` (the retransmission
-    round is modeled analytically; see AggConfig.digest_backup)."""
+    network, no r-copy stack.
+
+    ``backup`` is the plan-compiled fallback stream (the shift-1 member's
+    full payload, a second static ppermute — see ``HopRound.backup_perm``):
+    a rejected payload is replaced by it in the same pass, which recovers
+    the honest value whenever the shift-1 sender is honest (always true
+    for a vote-minority of colluders that does not occupy two adjacent
+    member shifts).  Without ``backup``, a rejected payload is still
+    consumed behind an ``optimization_barrier`` — corruption is detected
+    but the retransmission round is only modeled analytically
+    (``schedule_cost``; see AggConfig.digest_backup)."""
     r = len(dg_copies)
     assert r % 2 == 1, "vote redundancy must be odd"
     dgp = digest_rows(payload, n_words)                      # (B, n_words)
@@ -105,22 +113,75 @@ def corrupt_value(mode: str, x: jax.Array) -> jax.Array:
     raise ValueError(f"unknown fault mode {mode!r}")
 
 
+# ---------------------------------------------------------------------------
+# Adversary semantics: fault-mode strings -> per-wire sent values.
+#
+# A fault mode is ``base`` or ``base@k`` (apply from voted round k on —
+# the crash-at-hop-k adversary family).  ``base`` is one of the payload
+# corruptions above, or one of the digest-transport adversaries:
+#
+#   * "equivocate" — the node's payload is honest but the digest copies
+#     it ships differ *per copy stream* (each receiver sees a different
+#     wrong digest).  On the full transport the same adversary ships a
+#     different corrupt payload per copy stream.
+#   * "mismatch"   — the node's payload is corrupted but its digests are
+#     computed from the honest value: every digest copy vouches for a
+#     payload the node never sent (receivers detect via their own
+#     payload digest and fall back to the compiled backup stream).
+# ---------------------------------------------------------------------------
+
+_STREAM_SALT = 0x9E3779B9
+
+
+def parse_mode(mode: str) -> tuple[str, int]:
+    """``"garbage@2"`` -> ``("garbage", 2)``: base corruption plus the
+    first voted round it applies from (0 = from the first hop)."""
+    base, _, frm = mode.partition("@")
+    return base, int(frm) if frm else 0
+
+
+def _stream_salt(stream: int) -> jax.Array:
+    return jnp.uint32((_STREAM_SALT * (stream + 1)) & 0xFFFFFFFF)
+
+
+def sent_value(base: str, view: str, x: jax.Array) -> jax.Array:
+    """Value a corrupt node ships instead of honest ``x`` on one wire.
+
+    ``view`` is "payload" (full-payload bytes: every full-transport copy
+    stream, the digest transport's payload stream, and its backup
+    stream) or "digest" (the value the node's shipped digests are
+    computed from).  Per-stream variation (equivocation) is applied on
+    top by :func:`equivocate_digest` / :func:`equivocate_payload`."""
+    if base == "equivocate":
+        return x
+    if base == "mismatch":
+        return corrupt_value("garbage", x) if view == "payload" else x
+    return corrupt_value(base, x)
+
+
+def equivocate_digest(dg: jax.Array, stream: int) -> jax.Array:
+    """Per-copy digest equivocation: the digest this node ships on copy
+    stream ``stream`` — wrong, and different for every stream."""
+    return dg ^ _stream_salt(stream)
+
+
+def equivocate_payload(x: jax.Array, stream: int) -> jax.Array:
+    """Full-transport equivocation: a different corrupt payload per copy
+    stream (each receiver of this node sees a different value)."""
+    return corrupt_value("garbage", x) ^ _stream_salt(stream)
+
+
 @dataclasses.dataclass(frozen=True)
 class ByzantineSpec:
     """Static description of injected faults for tests/examples.
 
     ``corrupt_ranks``: flat DP-node ids whose *outgoing* ring messages are
-    corrupted.  The honest-majority requirement is per receiving vote:
-    fewer than r/2 of the r copies a receiver sees may come from corrupt
-    members.
+    corrupted.  ``mode`` is any fault-mode string the engine understands
+    (``parse_mode``/``sent_value`` above).  The honest-majority
+    requirement is per receiving vote: fewer than r/2 of the r copies a
+    receiver sees may come from corrupt members.  The engine lowers specs
+    to per-node masks and applies them per wire view — see
+    ``engine._fault_items``.
     """
     corrupt_ranks: tuple[int, ...] = ()
-    mode: str = "flip"  # flip | garbage | drop(-> zeros)
-
-    def corrupt(self, x: jax.Array, node_id) -> jax.Array:
-        if not self.corrupt_ranks:
-            return x
-        bad = jnp.zeros((), bool)
-        for rk in self.corrupt_ranks:
-            bad = bad | (node_id == rk)
-        return jnp.where(bad, corrupt_value(self.mode, x), x)
+    mode: str = "flip"  # flip | garbage | drop | equivocate | mismatch | m@k

@@ -17,13 +17,26 @@ control flow lives; the transports only move bits:
     real dp mesh and runs :class:`ManualTransport` inside: the
     distributed backend of the service's ``BatchedExecutor``.
 
+Both wire *transports* of ``AggConfig.transport`` run on every
+substrate: "full" ships r redundant payload copies per hop and
+median-votes them; "digest" ships ONE payload plus r short digests
+(the paper's O(n log^3 n) bandwidth mechanism) with the plan-compiled
+backup stream (``HopRound.backup_perm``) as the static fallback for a
+rejected payload.  The fault model is applied inside :meth:`Transport.hop`
+per *wire view* — payload bytes, digest source, per-copy-stream
+equivocation — so digest-specific adversaries (equivocation,
+digest/payload mismatch, crash-at-hop-k) are modeled identically by the
+oracle and the mesh.  Every hop also feeds ``Transport.bytes_sent``, a
+trace-time bandwidth account the conformance tests pin against
+``schedules.schedule_cost``.
+
 The value container is uniform: every chunk is a ``(rows, T)`` array
 where ``rows = S`` sessions times the transport's local node slots (all
 ``n`` for the sim oracle, 1 per rank on a mesh).  All tensor compute
 goes through the batched kernel dispatch ops with per-row metadata, so
 every transport is bit-identical by construction — the acceptance tests
-pin ``MeshTransport == SimTransport`` exactly, crash + Byzantine
-sessions included.
+pin ``MeshTransport == SimTransport`` exactly, crash + Byzantine +
+digest-adversary sessions included.
 """
 from __future__ import annotations
 
@@ -34,9 +47,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core.byzantine import (corrupt_value, digest_rows,
-                                  digest_vote_combine)
-from repro.core.plan import AggPlan, HopRound, SessionMeta
+from repro.core.byzantine import (digest_rows, digest_vote_combine,
+                                  equivocate_digest, equivocate_payload,
+                                  parse_mode, sent_value)
+from repro.core.plan import AggPlan, HopRound, SessionMeta, compile_plan
 from repro.kernels import backend
 from repro.kernels.secure_agg import (mask_encrypt_batch_fn,
                                       unmask_decrypt_batch_fn,
@@ -54,6 +68,16 @@ def flat_node_id(dp_axes: Sequence[str]) -> jax.Array:
     return nid
 
 
+def _active_bases(items, rnd_idx: int) -> set:
+    """Base fault modes in effect at voted round ``rnd_idx``."""
+    out = set()
+    for mode, _ in items:
+        base, frm = parse_mode(mode)
+        if rnd_idx >= frm:
+            out.add(base)
+    return out
+
+
 class Transport:
     """Communication substrate an :class:`AggPlan` executes against.
 
@@ -64,6 +88,26 @@ class Transport:
     S: int
     impl: str
     plan: AggPlan
+    # bytes this transport instance has shipped across hops (trace-time
+    # account over the plan's static pair lists; see ``_account``)
+    bytes_sent: int = 0
+    _static_faults: Optional[list] = None
+
+    def _fault_items(self, meta: SessionMeta) -> list:
+        """Ordered fault sources shared by every transport (the
+        bit-equality contract): the plan's static specs first, lowered
+        ONCE per transport to constant (n,) numpy masks, then the
+        per-session runtime masks ((S, n), possibly traced), in
+        ``meta.fault_masks`` insertion order."""
+        if self._static_faults is None:
+            items = []
+            n = self.plan.n_nodes
+            for spec in self.plan.faults:
+                m = np.zeros((n,), bool)
+                m[list(spec.corrupt_ranks)] = True
+                items.append((spec.mode, m))
+            self._static_faults = items
+        return self._static_faults + list(meta.fault_masks.items())
 
     def node_ids(self) -> jax.Array:
         """(rows,) uint32 protocol node id of every row."""
@@ -77,21 +121,97 @@ class Transport:
         """Intra-cluster modular sum, replicated to every member."""
         raise NotImplementedError
 
-    def corrupt(self, meta: SessionMeta, acc: jax.Array) -> jax.Array:
-        """Fault model applied to SENT values: the plan's static specs
-        first, then the per-session runtime masks (each mode's evil
-        value derives from the original ``acc``)."""
+    # -- per-transport primitives the shared hop/fault logic runs on ----
+    def _wire(self, acc: jax.Array) -> jax.Array:
+        """Row array -> the transport's fault-model view (the sim oracle
+        exposes the node axis; per-rank transports are identity)."""
+        return acc
+
+    def _sel(self, m) -> jax.Array:
+        """(n,) static or (S, n) runtime fault mask -> a bool selector
+        broadcastable over the wire view."""
         raise NotImplementedError
 
-    def hop(self, rnd: HopRound, sent: jax.Array):
-        """Move one round's redundant copies; returns opaque in-flight
-        state consumed by :meth:`vote` (list of r copies for the full
-        transport)."""
+    def _digest(self, x: jax.Array) -> jax.Array:
+        """Row-wise digests of a wire-view array."""
         raise NotImplementedError
+
+    def _move(self, rnd: HopRound, stream: int, x: jax.Array) -> jax.Array:
+        """Ship ``x`` (wire view) along copy stream ``stream``; returns
+        the received rows."""
+        raise NotImplementedError
+
+    def _move_backup(self, rnd: HopRound, x: jax.Array) -> jax.Array:
+        """Ship ``x`` along the compiled shift-1 backup stream."""
+        raise NotImplementedError
+
+    # -- shared fault application + hop assembly (bit-equality contract:
+    # every transport runs EXACTLY this code against its primitives) ----
+    def _sent(self, items, rnd_idx: int, honest: jax.Array, view: str,
+              stream: Optional[int] = None) -> jax.Array:
+        """Apply the fault model to the honest wire view for one wire
+        (``stream`` set = full-transport per-stream equivocation)."""
+        sent = honest
+        for mode, m in items:
+            base, frm = parse_mode(mode)
+            if rnd_idx < frm:
+                continue
+            if base == "equivocate" and stream is not None:
+                bad = equivocate_payload(honest, stream)
+            else:
+                bad = sent_value(base, view, honest)
+            sent = jnp.where(self._sel(m), bad, sent)
+        return sent
+
+    def _equiv_sel(self, items, rnd_idx: int):
+        """Union selector of active equivocating nodes, or None."""
+        sel = None
+        for mode, m in items:
+            base, frm = parse_mode(mode)
+            if base != "equivocate" or rnd_idx < frm:
+                continue
+            sel = self._sel(m) if sel is None else sel | self._sel(m)
+        return sel
+
+    def hop(self, rnd: HopRound, rnd_idx: int, meta: SessionMeta,
+            acc: jax.Array):
+        """Apply the fault model to the SENT wire views and move one
+        round's redundant copies; returns opaque in-flight state consumed
+        by :meth:`vote` — a list of r payload copies for the full
+        transport, ``(payload, digest_copies, backup)`` for digest."""
+        self._account(rnd, acc.shape[-1])
+        cfg = self.plan.cfg
+        r = self.plan.redundancy
+        items = self._fault_items(meta)
+        w = self._wire(acc)
+        if cfg.transport == "full":
+            if "equivocate" not in _active_bases(items, rnd_idx):
+                sent = self._sent(items, rnd_idx, w, "payload")
+                return [self._move(rnd, s, sent) for s in range(r)]
+            return [self._move(rnd, s,
+                               self._sent(items, rnd_idx, w, "payload",
+                                          stream=s)) for s in range(r)]
+        # digest transport: 1 full payload + r row-wise digests + the
+        # compiled backup stream — each wire view faulted independently
+        pay = self._sent(items, rnd_idx, w, "payload")
+        dg = self._digest(self._sent(items, rnd_idx, w, "digest"))
+        em = self._equiv_sel(items, rnd_idx)
+        payload = self._move(rnd, 0, pay)
+        dg_copies = [
+            self._move(rnd, s, dg if em is None
+                       else jnp.where(em, equivocate_digest(dg, s), dg))
+            for s in range(r)]
+        backup = (self._move_backup(rnd, pay)
+                  if cfg.digest_backup else None)
+        return payload, dg_copies, backup
 
     def vote(self, rnd: HopRound, inflight, base: jax.Array) -> jax.Array:
-        """base + majority(inflight) — one fused pass."""
-        return vote_combine_batch_fn(inflight, base, impl=self.impl)
+        """base + majority(inflight) — one fused pass per transport."""
+        if self.plan.cfg.transport == "full":
+            return vote_combine_batch_fn(inflight, base, impl=self.impl)
+        payload, dg_copies, backup = inflight
+        return digest_vote_combine(payload, dg_copies, base, backup=backup,
+                                   n_words=self.plan.cfg.digest_words)
 
     def select(self, rnd: HopRound, voted: jax.Array,
                acc: jax.Array) -> jax.Array:
@@ -102,6 +222,22 @@ class Transport:
         """Narrow to one revealed row per session (the service path) ->
         (accs', row_seeds', row_offsets')."""
         raise NotImplementedError
+
+    def _account(self, rnd: HopRound, T: int) -> None:
+        """Bandwidth account for one hop of one chunk, per the plan's
+        static pair lists: full ships r payload copies; digest ships one
+        payload + r digests (+ the backup payload when compiled in).
+        Accumulated at trace time — the conformance suite pins this
+        against the analytic ``schedules.schedule_cost``."""
+        cfg = self.plan.cfg
+        if cfg.transport == "full":
+            words = sum(len(p) for p in rnd.perms) * T
+        else:
+            words = len(rnd.perms[0]) * T
+            words += sum(len(p) for p in rnd.perms) * cfg.digest_words
+            if cfg.digest_backup:
+                words += len(rnd.backup_perm) * T
+        self.bytes_sent += 4 * words * self.S
 
 
 # ---------------------------------------------------------------------------
@@ -149,12 +285,11 @@ def execute_chunks(plan: AggPlan, tp: Transport, chunks: list,
 
     # --- Step 3: voted schedule; hops pipelined over chunks ---
     locals_ = list(accs)
-    for rnd in plan.rounds:
-        sents = [tp.corrupt(meta, a) for a in accs]
-        inflight = tp.hop(rnd, sents[0])
+    for ri, rnd in enumerate(plan.rounds):
+        inflight = tp.hop(rnd, ri, meta, accs[0])
         new_accs = []
         for k in range(K):
-            nxt = tp.hop(rnd, sents[k + 1]) if k + 1 < K else None
+            nxt = tp.hop(rnd, ri, meta, accs[k + 1]) if k + 1 < K else None
             voted = tp.vote(rnd, inflight, _vote_base(rnd, accs[k],
                                                       locals_[k]))
             new_accs.append(tp.select(rnd, voted, accs[k]))
@@ -173,6 +308,106 @@ def execute_chunks(plan: AggPlan, tp: Transport, chunks: list,
 
 
 # ---------------------------------------------------------------------------
+# Pytree payloads: pack leaves into fixed-size chunks (no giant concat)
+# ---------------------------------------------------------------------------
+
+
+def pack_chunks(leaves: list, chunk_elems: int) -> list:
+    """Flatten leaves into equal chunks of ``chunk_elems`` float32 elements
+    (last chunk zero-padded).  The max live buffer is one chunk — the
+    whole gradient is never concatenated into a single payload."""
+    pieces = [l.reshape(-1).astype(jnp.float32) for l in leaves
+              if l.size > 0]
+    total = sum(p.shape[0] for p in pieces)
+    chunk_elems = min(chunk_elems, total)
+    chunks, cur, cur_n = [], [], 0
+    for p in pieces:
+        pos = 0
+        while pos < p.shape[0]:
+            take = min(chunk_elems - cur_n, p.shape[0] - pos)
+            cur.append(p[pos:pos + take])
+            cur_n += take
+            pos += take
+            if cur_n == chunk_elems:
+                chunks.append(cur[0] if len(cur) == 1
+                              else jnp.concatenate(cur))
+                cur, cur_n = [], 0
+    if cur_n:
+        cur.append(jnp.zeros((chunk_elems - cur_n,), jnp.float32))
+        chunks.append(jnp.concatenate(cur))
+    return chunks
+
+
+def unpack_chunks(chunks: list, leaves: list) -> list:
+    """Inverse of ``pack_chunks``: re-slice summed chunks into leaves."""
+    size = chunks[0].shape[0]
+    outs, off = [], 0
+    for l in leaves:
+        if l.size == 0:
+            outs.append(jnp.zeros(l.shape, l.dtype))
+            continue
+        need, parts = l.size, []
+        while need:
+            k, j = divmod(off, size)
+            take = min(need, size - j)
+            parts.append(chunks[k][j:j + take])
+            off += take
+            need -= take
+        flat = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+        outs.append(flat.reshape(l.shape).astype(l.dtype))
+    return outs
+
+
+def sim_batch(plan: AggPlan, xs: jax.Array, meta: SessionMeta, *,
+              reveal_only: bool = False, impl: Optional[str] = None):
+    """Engine-native single-device oracle run: (S, n_nodes, T) per-
+    session/per-node payloads -> ((S, n_nodes, T) per-node results — or
+    (S, T) with ``reveal_only`` — , the SimTransport, whose
+    ``bytes_sent`` carries the hop bandwidth account).  The one sim
+    invocation recipe the conformance harness, selftest and benchmarks
+    all share (the historical ``simulate_secure_allreduce*`` shims wrap
+    it)."""
+    S, n, T = xs.shape
+    assert n == plan.n_nodes, (n, plan.n_nodes)
+    tp = SimTransport(plan, S=S, impl=impl)
+    flat = jnp.asarray(xs).reshape(S * n, T).astype(jnp.float32)
+    (out,) = execute_chunks(plan, tp, [flat], meta, reveal_only=reveal_only)
+    return out.reshape((S, T) if reveal_only else (S, n, T)), tp
+
+
+def manual_allreduce(x: jax.Array, cfg, dp_axes: Sequence[str]) -> jax.Array:
+    """Exact-sum allreduce of ``x`` over ``dp_axes`` via the paper
+    schedule; call inside a shard_map manual over ``dp_axes``.  The
+    engine-native entry the training step uses (the historical
+    ``secure_allreduce_manual`` shim wraps this)."""
+    dp_axes = tuple(dp_axes)
+    plan = compile_plan(cfg)
+    tp = ManualTransport(plan, dp_axes)
+    flat = x.reshape(-1).astype(jnp.float32)
+    (out,) = execute_chunks(plan, tp, [flat[None]],
+                            SessionMeta.single(cfg.seed))
+    return out[0].reshape(x.shape)
+
+
+def tree_allreduce(tree, cfg, dp_axes: Sequence[str]):
+    """Apply to a pytree.  Leaves are packed into fixed-size chunks
+    (``cfg.chunk_elems``) and the voted hops are software-pipelined over
+    the chunks, so hop communication overlaps vote compute and no
+    gradient-sized payload is ever materialized."""
+    dp_axes = tuple(dp_axes)
+    leaves, treedef = jax.tree.flatten(tree)
+    chunks = pack_chunks(leaves, cfg.chunk_elems)
+    if not chunks:  # every leaf zero-size: nothing to aggregate
+        return tree
+    plan = compile_plan(cfg)
+    tp = ManualTransport(plan, dp_axes)
+    outs = execute_chunks(plan, tp, [ch[None] for ch in chunks],
+                          SessionMeta.single(cfg.seed))
+    return jax.tree.unflatten(treedef, unpack_chunks([o[0] for o in outs],
+                                                     leaves))
+
+
+# ---------------------------------------------------------------------------
 # Simulation transport: node axis explicit, hops are static gathers
 # ---------------------------------------------------------------------------
 
@@ -184,6 +419,7 @@ class SimTransport(Transport):
                  impl: Optional[str] = None):
         self.plan = plan
         self.S = S
+        self.bytes_sent = 0
         self.impl = backend.resolve(
             impl if impl is not None else plan.cfg.kernel_impl)
 
@@ -204,24 +440,30 @@ class SimTransport(Transport):
         acc = q.reshape(S, g, c, T).sum(axis=2, dtype=jnp.uint32)
         return jnp.repeat(acc[:, :, None], c, axis=2).reshape(q.shape)
 
-    def corrupt(self, meta: SessionMeta, acc: jax.Array) -> jax.Array:
-        a3 = self._3d(acc)
-        sent = a3
-        n = self.plan.n_nodes
-        for spec in self.plan.faults:
-            m = np.zeros((n,), bool)
-            m[list(spec.corrupt_ranks)] = True
-            sent = jnp.where(jnp.asarray(m)[None, :, None],
-                             corrupt_value(spec.mode, a3), sent)
-        for mode, m in meta.fault_masks.items():
-            sent = jnp.where(jnp.asarray(m)[:, :, None],
-                             corrupt_value(mode, a3), sent)
-        return sent.reshape(acc.shape)
+    # wire view: (S, n, T) with the node axis explicit; hops are gathers
+    def _wire(self, acc: jax.Array) -> jax.Array:
+        return self._3d(acc)
 
-    def hop(self, rnd: HopRound, sent: jax.Array):
-        s3 = self._3d(sent)
-        return [s3[:, np.asarray(rnd.src_idx[s]), :].reshape(sent.shape)
-                for s in range(self.plan.redundancy)]
+    def _sel(self, m) -> jax.Array:
+        m = jnp.asarray(m)
+        if m.ndim == 1:
+            m = m[None]
+        return m[:, :, None]                    # (·, n, 1)
+
+    def _digest(self, x3: jax.Array) -> jax.Array:
+        S, n = self.S, self.plan.n_nodes
+        dg = digest_rows(x3.reshape(S * n, -1), self.plan.cfg.digest_words)
+        return dg.reshape(S, n, -1)
+
+    def _gather(self, x3: jax.Array, src) -> jax.Array:
+        out = x3[:, np.asarray(src), :]
+        return out.reshape(out.shape[0] * out.shape[1], out.shape[2])
+
+    def _move(self, rnd: HopRound, stream: int, x: jax.Array) -> jax.Array:
+        return self._gather(x, rnd.src_idx[stream])
+
+    def _move_backup(self, rnd: HopRound, x: jax.Array) -> jax.Array:
+        return self._gather(x, rnd.backup_src)
 
     def select(self, rnd: HopRound, voted: jax.Array,
                acc: jax.Array) -> jax.Array:
@@ -253,6 +495,7 @@ class ManualTransport(Transport):
         self.plan = plan
         self.dp_axes = tuple(dp_axes)
         self.S = S
+        self.bytes_sent = 0
         self.impl = backend.resolve(
             impl if impl is not None else plan.cfg.kernel_impl)
         self._nid = flat_node_id(self.dp_axes)
@@ -269,37 +512,21 @@ class ManualTransport(Transport):
         groups = [list(g) for g in self.plan.groups]
         return jax.lax.psum(q, self.dp_axes, axis_index_groups=groups)
 
-    def corrupt(self, meta: SessionMeta, acc: jax.Array) -> jax.Array:
-        sent = acc
-        for spec in self.plan.faults:
-            sent = spec.corrupt(sent, self._nid)
-        for mode, m in meta.fault_masks.items():
-            col = jnp.asarray(m)[:, self._nid]          # (S,) this rank
-            sent = jnp.where(col[:, None], corrupt_value(mode, acc), sent)
-        return sent
+    # wire view: this rank's (S, T) rows; hops are ppermute
+    def _sel(self, m) -> jax.Array:
+        m = jnp.asarray(m)
+        if m.ndim == 1:
+            return jnp.broadcast_to(m[self._nid], (self.S,))[:, None]
+        return m[:, self._nid][:, None]         # (S, 1) this-rank column
 
-    def hop(self, rnd: HopRound, sent: jax.Array):
-        cfg = self.plan.cfg
-        r = self.plan.redundancy
-        if cfg.transport == "full":
-            return [jax.lax.ppermute(sent, self.dp_axes, list(rnd.perms[s]))
-                    for s in range(r)]
-        # digest transport: 1 full payload + r row-wise digests (+ an
-        # optional eager backup stream for a corrupt copy-0 sender)
-        payload = jax.lax.ppermute(sent, self.dp_axes, list(rnd.perms[0]))
-        dg = digest_rows(sent, cfg.digest_words)
-        dg_copies = [jax.lax.ppermute(dg, self.dp_axes, list(rnd.perms[s]))
-                     for s in range(r)]
-        backup = (jax.lax.ppermute(sent, self.dp_axes, list(rnd.backup_perm))
-                  if cfg.digest_backup else None)
-        return payload, dg_copies, backup
+    def _digest(self, x: jax.Array) -> jax.Array:
+        return digest_rows(x, self.plan.cfg.digest_words)
 
-    def vote(self, rnd: HopRound, inflight, base: jax.Array) -> jax.Array:
-        if self.plan.cfg.transport == "full":
-            return vote_combine_batch_fn(inflight, base, impl=self.impl)
-        payload, dg_copies, backup = inflight
-        return digest_vote_combine(payload, dg_copies, base, backup=backup,
-                                   n_words=self.plan.cfg.digest_words)
+    def _move(self, rnd: HopRound, stream: int, x: jax.Array) -> jax.Array:
+        return jax.lax.ppermute(x, self.dp_axes, list(rnd.perms[stream]))
+
+    def _move_backup(self, rnd: HopRound, x: jax.Array) -> jax.Array:
+        return jax.lax.ppermute(x, self.dp_axes, list(rnd.backup_perm))
 
     def select(self, rnd: HopRound, voted: jax.Array,
                acc: jax.Array) -> jax.Array:
@@ -323,8 +550,9 @@ class MeshTransport:
     each rank runs :class:`ManualTransport` on its (S, T) slice, so a
     sealed service batch runs the *same* engine code the oracle runs,
     over real collectives.  Bit-identical to ``SimTransport`` for the
-    same plan (pinned by tests/test_engine.py on a forced-8-device
-    host)."""
+    same plan (pinned by tests/test_engine.py and the conformance grid
+    on a forced-8-device host).  ``last_bytes`` holds the inner
+    transport's bandwidth account after a (re)traced ``execute``."""
 
     def __init__(self, mesh: jax.sharding.Mesh,
                  dp_axes: Sequence[str] = ("data",),
@@ -332,6 +560,7 @@ class MeshTransport:
         self.mesh = mesh
         self.dp_axes = tuple(dp_axes)
         self.impl = impl
+        self.last_bytes: Optional[int] = None
         n = 1
         for ax in self.dp_axes:
             n *= mesh.shape[ax]
@@ -346,9 +575,11 @@ class MeshTransport:
         assert n == plan.n_nodes == self.n_devices, \
             (n, plan.n_nodes, self.n_devices)
         mask_keys = tuple(meta.fault_masks)
+        inner: list = []
 
         def body(xl, seeds, offsets, masks):
             tp = ManualTransport(plan, self.dp_axes, S=S, impl=self.impl)
+            inner.append(tp)
             m = SessionMeta(seeds=seeds, offsets=offsets,
                             fault_masks=dict(masks))
             (out,) = execute_chunks(plan, tp, [xl[:, 0, :]], m)
@@ -366,5 +597,8 @@ class MeshTransport:
                                         for k in mask_keys}),
             out_specs=P(None, None) if reveal_only else shard,
             check_vma=False)
-        return fn(xs.astype(jnp.float32), meta.seeds, meta.offsets,
-                  dict(meta.fault_masks))
+        out = fn(xs.astype(jnp.float32), meta.seeds, meta.offsets,
+                 dict(meta.fault_masks))
+        if inner:
+            self.last_bytes = inner[-1].bytes_sent
+        return out

@@ -51,14 +51,17 @@ class HopRound:
     ``perms[s]`` are the ``ppermute`` (src, dst) pairs of redundant copy
     stream s; ``src_idx[s][dst]`` is the same map as a gather (what the
     simulation transport uses); ``participates[i]`` says whether node i
-    receives this round; ``backup_perm`` is the shift-1 stream used by
-    the digest transport's eager fallback."""
+    receives this round; ``backup_perm`` is the shift-1 full-payload
+    stream the digest transport's compiled fallback rides (a rejected
+    payload is replaced by it in the same vote pass) and ``backup_src``
+    is its gather dual."""
     combine: str                                      # add|local_plus|replace
     recv_from: tuple[Optional[int], ...]              # cluster-level round
     perms: tuple[tuple[tuple[int, int], ...], ...]    # (r, pairs)
     src_idx: tuple[tuple[int, ...], ...]              # (r, n)
     participates: tuple[bool, ...]                    # (n,)
     backup_perm: tuple[tuple[int, int], ...]          # digest fallback hops
+    backup_src: tuple[int, ...]                       # (n,) gather dual
 
 
 def _hop_perm(n_clusters: int, cluster_size: int,
@@ -201,6 +204,7 @@ def compile_plan(cfg, *, epoch=None, fault=None) -> AggPlan:
         perms = tuple(tuple(_hop_perm(g, c, rnd.recv_from, s))
                       for s in range(r))
         src_idx = np.arange(n)[None, :].repeat(r, axis=0)
+        backup_src = np.arange(n)
         participates = np.zeros((n,), bool)
         for cl, src_cl in enumerate(rnd.recv_from):
             if src_cl is None:
@@ -210,13 +214,15 @@ def compile_plan(cfg, *, epoch=None, fault=None) -> AggPlan:
                 participates[dst] = True
                 for s in range(r):
                     src_idx[s, dst] = src_cl * c + (m + s) % c
+                backup_src[dst] = src_cl * c + (m + 1) % c
         if not participates.any():
             continue
         rounds.append(HopRound(
             combine=rnd.combine, recv_from=tuple(rnd.recv_from), perms=perms,
             src_idx=tuple(tuple(int(v) for v in row) for row in src_idx),
             participates=tuple(bool(b) for b in participates),
-            backup_perm=tuple(_hop_perm(g, c, rnd.recv_from, 1))))
+            backup_perm=tuple(_hop_perm(g, c, rnd.recv_from, 1)),
+            backup_src=tuple(int(v) for v in backup_src)))
 
     faults = []
     if cfg.byzantine.corrupt_ranks:

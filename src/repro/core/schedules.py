@@ -80,15 +80,29 @@ def get_schedule(name: str, g: int) -> list[Round]:
 
 
 def schedule_cost(name: str, g: int, c: int, r: int, payload_bytes: int,
-                  digest: bool = False, digest_ratio: int = 1024) -> dict:
+                  digest: bool = False, digest_ratio: int = 1024,
+                  digest_bytes: Optional[int] = None,
+                  digest_backup: bool = False) -> dict:
     """Analytic per-step communication cost of the cluster phase (per node
-    and total), used by benchmarks and napkin math in EXPERIMENTS §Perf."""
+    and total), used by benchmarks and napkin math in EXPERIMENTS §Perf.
+
+    ``digest_bytes`` pins the exact digest size (``digest_words * 4``)
+    instead of the ``digest_ratio`` approximation; ``digest_backup`` adds
+    the compiled shift-1 backup payload each receiving member fetches
+    eagerly (``AggConfig.digest_backup``).  With both set, the analytic
+    total equals ``Transport.bytes_sent`` of the executed plan bit for
+    bit — the conformance suite pins that equality."""
     rounds = get_schedule(name, g)
     active_recv = sum(sum(1 for s in rnd.recv_from if s is not None)
                       for rnd in rounds)  # cluster-level receives
     if digest:
-        # each receiving member: 1 full payload + r digest copies to vote on
-        per_member = payload_bytes + r * (payload_bytes // digest_ratio)
+        # each receiving member: 1 full payload + r digest copies to vote
+        # on (+ the eager backup payload when compiled in)
+        d = (payload_bytes // digest_ratio if digest_bytes is None
+             else digest_bytes)
+        per_member = payload_bytes + r * d
+        if digest_backup:
+            per_member += payload_bytes
     else:
         # each receiving member: r full redundant copies
         per_member = r * payload_bytes

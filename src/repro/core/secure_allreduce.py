@@ -12,16 +12,20 @@ compatibility surface* over the real protocol core:
 
 The historical ``secure_allreduce_*`` / ``simulate_secure_allreduce*``
 entry points below are kept as shims for one release (see README
-"Migration"); new code should compile a plan and pick a transport.
-Node = DP rank (flat index over the dp axes); cluster = ``c``
-contiguous ranks.  Per aggregation:
+"Migration"); each call emits a ``DeprecationWarning`` and they are
+scheduled for removal next release — new code should compile a plan and
+pick a transport (internal callers already do).  Node = DP rank (flat
+index over the dp axes); cluster = ``c`` contiguous ranks.  Per
+aggregation:
 
   1. fused quantize + mask                (Step 1: "encrypt";
                                            pairwise pads fused in-kernel)
   2. intra-cluster modular psum           (Steps 1-2: secure broadcast +
                                            local aggregate)
   3. schedule rounds over clusters, r redundant copies per hop,
-     element-wise majority vote           (Step 3)
+     element-wise majority vote           (Step 3; transport "digest"
+                                           ships 1 payload + r digests
+                                           + the compiled backup stream)
   4. fused unmask + dequantize            (Step 4: "threshold decryption")
 
 Payloads are processed as fixed-size *chunks*: ``secure_allreduce_tree``
@@ -31,21 +35,33 @@ k+1's hop before voting chunk k (double-buffered pipeline).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional, Sequence
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.byzantine import ByzantineSpec
-from repro.core.engine import ManualTransport, SimTransport, execute_chunks
+from repro.core.engine import (manual_allreduce, pack_chunks, sim_batch,
+                               tree_allreduce, unpack_chunks)
 from repro.core.masking import MaskConfig
 from repro.core.plan import SessionMeta, compile_plan, fault_masks_of
 from repro.runtime import compat
 
-# re-exported shim: the mask builder moved to core/plan.py
+# re-exported shims: the mask builder moved to core/plan.py, the chunk
+# packers to core/engine.py (tests import the underscore names)
 _fault_masks = fault_masks_of
+_pack_chunks = pack_chunks
+_unpack_chunks = unpack_chunks
+
+
+def _warn_shim(name: str) -> None:
+    warnings.warn(
+        f"repro.core.secure_allreduce.{name} is a one-release shim over "
+        "the plan/engine core and will be removed next release; compile "
+        "an AggPlan and pick a Transport (README 'Migration').",
+        DeprecationWarning, stacklevel=3)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,12 +72,15 @@ class AggConfig:
     schedule: str = "ring"        # ring | tree | butterfly
     transport: str = "full"       # full | digest
     digest_words: int = 16
-    # digest transport: eagerly fetch a second full payload as the fallback
-    # for a corrupt-sender-0 (SPMD cannot fetch lazily).  Off by default:
-    # the honest-path bandwidth is 1 payload + r digests, and the unhappy
-    # path costs one retransmission round (accounted analytically in
-    # EXPERIMENTS §Perf).
-    digest_backup: bool = False
+    # digest transport: the plan compiles a shift-1 full-payload backup
+    # stream (``HopRound.backup_perm``) shipped eagerly as a second
+    # static ppermute, so a digest-rejected payload is replaced in-band
+    # (SPMD cannot fetch lazily).  On by default — it is what lets the
+    # digest cells absorb payload corruption in the conformance grid.
+    # Set False for the honest-path bandwidth (1 payload + r digests);
+    # the unhappy path then costs one retransmission round, accounted
+    # analytically in ``schedules.schedule_cost``.
+    digest_backup: bool = True
     masking: str = "global"       # global | pairwise | none
     clip: float = 1.0
     guard_bits: int = 2
@@ -77,6 +96,7 @@ class AggConfig:
         assert self.n_nodes % self.cluster_size == 0
         assert self.redundancy % 2 == 1
         assert self.redundancy <= self.cluster_size
+        assert self.transport in ("full", "digest"), self.transport
 
     @property
     def n_clusters(self) -> int:
@@ -98,84 +118,18 @@ def secure_allreduce_manual(x: jax.Array, cfg: AggConfig,
     """Exact-sum allreduce of ``x`` over ``dp_axes`` via the paper
     schedule.  Call inside shard_map manual over ``dp_axes``.
 
-    Shim over ``compile_plan`` + ``ManualTransport`` (kept one release).
+    Shim over ``engine.manual_allreduce`` (kept one release).
     """
-    dp_axes = tuple(dp_axes)
-    plan = compile_plan(cfg)
-    tp = ManualTransport(plan, dp_axes)
-    flat = x.reshape(-1).astype(jnp.float32)
-    (out,) = execute_chunks(plan, tp, [flat[None]],
-                            SessionMeta.single(cfg.seed))
-    return out[0].reshape(x.shape)
-
-
-# ---------------------------------------------------------------------------
-# Pytree payloads: pack leaves into fixed-size chunks (no giant concat)
-# ---------------------------------------------------------------------------
-
-
-def _pack_chunks(leaves: list, chunk_elems: int) -> list:
-    """Flatten leaves into equal chunks of ``chunk_elems`` float32 elements
-    (last chunk zero-padded).  The max live buffer is one chunk — the
-    whole gradient is never concatenated into a single payload."""
-    pieces = [l.reshape(-1).astype(jnp.float32) for l in leaves
-              if l.size > 0]
-    total = sum(p.shape[0] for p in pieces)
-    chunk_elems = min(chunk_elems, total)
-    chunks, cur, cur_n = [], [], 0
-    for p in pieces:
-        pos = 0
-        while pos < p.shape[0]:
-            take = min(chunk_elems - cur_n, p.shape[0] - pos)
-            cur.append(p[pos:pos + take])
-            cur_n += take
-            pos += take
-            if cur_n == chunk_elems:
-                chunks.append(cur[0] if len(cur) == 1
-                              else jnp.concatenate(cur))
-                cur, cur_n = [], 0
-    if cur_n:
-        cur.append(jnp.zeros((chunk_elems - cur_n,), jnp.float32))
-        chunks.append(jnp.concatenate(cur))
-    return chunks
-
-
-def _unpack_chunks(chunks: list, leaves: list) -> list:
-    """Inverse of ``_pack_chunks``: re-slice summed chunks into leaves."""
-    size = chunks[0].shape[0]
-    outs, off = [], 0
-    for l in leaves:
-        if l.size == 0:
-            outs.append(jnp.zeros(l.shape, l.dtype))
-            continue
-        need, parts = l.size, []
-        while need:
-            k, j = divmod(off, size)
-            take = min(need, size - j)
-            parts.append(chunks[k][j:j + take])
-            off += take
-            need -= take
-        flat = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
-        outs.append(flat.reshape(l.shape).astype(l.dtype))
-    return outs
+    _warn_shim("secure_allreduce_manual")
+    return manual_allreduce(x, cfg, dp_axes)
 
 
 def secure_allreduce_tree(tree, cfg: AggConfig, dp_axes: Sequence[str]):
-    """Apply to a pytree.  Leaves are packed into fixed-size chunks
-    (``cfg.chunk_elems``) and the voted hops are software-pipelined over
-    the chunks by the engine, so hop communication overlaps vote compute
-    and no gradient-sized payload is ever materialized."""
-    dp_axes = tuple(dp_axes)
-    leaves, treedef = jax.tree.flatten(tree)
-    chunks = _pack_chunks(leaves, cfg.chunk_elems)
-    if not chunks:  # every leaf zero-size: nothing to aggregate
-        return tree
-    plan = compile_plan(cfg)
-    tp = ManualTransport(plan, dp_axes)
-    outs = execute_chunks(plan, tp, [ch[None] for ch in chunks],
-                          SessionMeta.single(cfg.seed))
-    return jax.tree.unflatten(treedef, _unpack_chunks([o[0] for o in outs],
-                                                      leaves))
+    """Apply to a pytree with chunk-pipelined hops.
+
+    Shim over ``engine.tree_allreduce`` (kept one release)."""
+    _warn_shim("secure_allreduce_tree")
+    return tree_allreduce(tree, cfg, dp_axes)
 
 
 # ---------------------------------------------------------------------------
@@ -187,13 +141,16 @@ def secure_allreduce_sharded(x, mesh: jax.sharding.Mesh, cfg: AggConfig,
                              dp_axes: Sequence[str] = ("data",),
                              in_spec: Optional[P] = None):
     """x is sharded over dp_axes on its leading dim; returns the summed
-    value (fully replicated over dp_axes)."""
+    value (fully replicated over dp_axes).
+
+    Shim (kept one release); use ``engine.MeshTransport`` instead."""
+    _warn_shim("secure_allreduce_sharded")
     dp_axes = tuple(dp_axes)
     in_spec = in_spec if in_spec is not None else P(dp_axes)
 
     def body(xs):
         local = xs.reshape(xs.shape[1:]) if xs.shape[0] == 1 else xs[0]
-        return secure_allreduce_manual(local, cfg, dp_axes)[None]
+        return manual_allreduce(local, cfg, dp_axes)[None]
 
     fn = compat.shard_map(body, mesh=mesh, in_specs=(in_spec,),
                           out_specs=in_spec,
@@ -211,14 +168,14 @@ def simulate_secure_allreduce(xs: jax.Array, cfg: AggConfig) -> jax.Array:
     """xs: (n_nodes, ...) -> per-node results (n_nodes, ...), emulating the
     full schedule with voting + injected corruption on a single device.
 
-    Shim over ``compile_plan`` + ``SimTransport`` with S=1."""
+    Shim over ``compile_plan`` + ``engine.sim_batch`` with S=1 (kept one
+    release)."""
+    _warn_shim("simulate_secure_allreduce")
     n = cfg.n_nodes
     assert xs.shape[0] == n
-    plan = compile_plan(cfg)
-    tp = SimTransport(plan, S=1)
     item_shape = xs.shape[1:]
-    flat = xs.reshape(n, -1).astype(jnp.float32)
-    (out,) = execute_chunks(plan, tp, [flat], SessionMeta.single(cfg.seed))
+    out, _ = sim_batch(compile_plan(cfg), xs.reshape(1, n, -1),
+                       SessionMeta.single(cfg.seed))
     return out.reshape(n, *item_shape)
 
 
@@ -239,18 +196,18 @@ def simulate_secure_allreduce_batch(
     service path.  All masking modes run batched, including the
     in-kernel pairwise pads.
 
-    Shim over ``compile_plan`` + ``SimTransport``."""
+    Shim over ``compile_plan`` + ``engine.sim_batch`` (kept one
+    release)."""
+    _warn_shim("simulate_secure_allreduce_batch")
     S, n = xs.shape[0], xs.shape[1]
     assert n == cfg.n_nodes
-    plan = compile_plan(cfg)
     meta = SessionMeta.build(S, n, seed=cfg.seed, seeds=seeds,
                              offsets=offsets, faults=faults,
                              fault_masks=fault_masks)
-    tp = SimTransport(plan, S=S)
     item_shape = xs.shape[2:]
     T = int(np.prod(item_shape)) if item_shape else 1
-    flat = xs.reshape(S * n, T).astype(jnp.float32)
-    (out,) = execute_chunks(plan, tp, [flat], meta, reveal_only=reveal_only)
+    out, _ = sim_batch(compile_plan(cfg), xs.reshape(S, n, T), meta,
+                       reveal_only=reveal_only)
     if reveal_only:
         return out.reshape(S, *item_shape)
     return out.reshape(S, n, *item_shape)

@@ -5,7 +5,9 @@ Runs with forced host devices (set BEFORE jax import):
     REPRO_SELFTEST_DEVICES=16 python -m repro.launch.selftest
 
 Verifies, for every (schedule x transport x masking) combination:
-  * distributed shard_map result == single-device simulation oracle
+  * distributed MeshTransport result == single-device SimTransport oracle
+    bit-for-bit — including the digest transport, whose hops the oracle
+    models faithfully (1 payload + r digests + compiled backup stream)
   * result == plain fp32 sum within the quantization error bound
   * byzantine corruption of a vote-minority is fully corrected
 Exit code 0 on success (used as a subprocess test by tests/test_distributed.py).
@@ -23,10 +25,10 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro.core.byzantine import ByzantineSpec  # noqa: E402
+from repro.core.engine import MeshTransport, sim_batch  # noqa: E402
 from repro.core.masking import quantization_error_bound  # noqa: E402
-from repro.core.secure_allreduce import (AggConfig,  # noqa: E402
-                                         secure_allreduce_sharded,
-                                         simulate_secure_allreduce)
+from repro.core.plan import SessionMeta, compile_plan  # noqa: E402
+from repro.core.secure_allreduce import AggConfig  # noqa: E402
 
 
 def check(name: str, ok: bool, detail: str = ""):
@@ -34,6 +36,21 @@ def check(name: str, ok: bool, detail: str = ""):
     print(f"[{status}] {name} {detail}")
     if not ok:
         sys.exit(1)
+
+
+def run_sim(cfg: AggConfig, xs) -> np.ndarray:
+    """Single-device oracle: (n, T) payloads -> (n, T) per-node results."""
+    out, _ = sim_batch(compile_plan(cfg), jnp.asarray(xs)[None],
+                       SessionMeta.single(cfg.seed))
+    return np.asarray(out[0])
+
+
+def run_mesh(cfg: AggConfig, mesh, axes, xs) -> np.ndarray:
+    """Distributed: the same plan under shard_map over a real dp mesh."""
+    plan = compile_plan(cfg)
+    mt = MeshTransport(mesh, axes)
+    return np.asarray(mt.execute(plan, jnp.asarray(xs)[None],
+                                 SessionMeta.single(cfg.seed))[0])
 
 
 def main():
@@ -51,40 +68,36 @@ def main():
 
     for mesh_shape, axes in mesh_shapes:
         mesh = jax.make_mesh(mesh_shape, axes)
-        from jax.sharding import PartitionSpec as P
-        in_spec = P(axes)
         for schedule in ("ring", "tree", "butterfly"):
             for transport in ("full", "digest"):
                 for masking in ("global", "pairwise", "none"):
                     cfg = AggConfig(n_nodes=n, cluster_size=4, redundancy=3,
                                     schedule=schedule, transport=transport,
                                     masking=masking, clip=2.0)
-                    got = np.asarray(secure_allreduce_sharded(
-                        xs, mesh, cfg, axes, in_spec))
+                    got = run_mesh(cfg, mesh, axes, xs)
                     bound = quantization_error_bound(cfg.mask_cfg()) * 4
                     err = np.abs(got - true_sum[None]).max()
                     check(f"{axes} {schedule}/{transport}/{masking}",
                           err < bound, f"err={err:.2e} bound={bound:.2e}")
-                    sim = np.asarray(simulate_secure_allreduce(xs, cfg))
-                    if transport == "full":
-                        dd = np.abs(sim - got).max()
-                        check(f"  sim-match {schedule}/{masking}", dd == 0.0,
-                              f"max|sim-dist|={dd:.2e}")
+                    sim = run_sim(cfg, xs)
+                    dd = np.abs(sim - got).max()
+                    check(f"  sim-match {schedule}/{transport}/{masking}",
+                          dd == 0.0, f"max|sim-dist|={dd:.2e}")
 
         # byzantine: corrupt one member per cluster (minority of r=3 votes)
         corrupt = tuple(range(0, n, 4))  # member 0 of each cluster of 4
         for schedule in ("ring", "tree", "butterfly"):
-            cfg = AggConfig(n_nodes=n, cluster_size=4, redundancy=3,
-                            schedule=schedule, transport="full",
-                            masking="global", clip=2.0,
-                            byzantine=ByzantineSpec(corrupt_ranks=corrupt,
-                                                    mode="flip"))
-            got = np.asarray(secure_allreduce_sharded(xs, mesh, cfg, axes,
-                                                      in_spec))
-            bound = quantization_error_bound(cfg.mask_cfg()) * 4
-            err = np.abs(got - true_sum[None]).max()
-            check(f"{axes} byzantine {schedule}", err < bound,
-                  f"err={err:.2e} (vote corrected {len(corrupt)} corrupt ranks)")
+            for transport in ("full", "digest"):
+                cfg = AggConfig(n_nodes=n, cluster_size=4, redundancy=3,
+                                schedule=schedule, transport=transport,
+                                masking="global", clip=2.0,
+                                byzantine=ByzantineSpec(corrupt_ranks=corrupt,
+                                                        mode="flip"))
+                got = run_mesh(cfg, mesh, axes, xs)
+                bound = quantization_error_bound(cfg.mask_cfg()) * 4
+                err = np.abs(got - true_sum[None]).max()
+                check(f"{axes} byzantine {schedule}/{transport}", err < bound,
+                      f"err={err:.2e} (vote corrected {len(corrupt)} ranks)")
 
     print("selftest OK")
 

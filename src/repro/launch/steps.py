@@ -18,8 +18,8 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
-from repro.core.secure_allreduce import (AggConfig, secure_allreduce_manual,
-                                         secure_allreduce_tree)
+from repro.core.engine import tree_allreduce
+from repro.core.secure_allreduce import AggConfig
 from repro.launch import sharding as SH
 from repro.launch.mesh import dp_axes_of
 from repro.models import model as M
@@ -197,7 +197,7 @@ def build_secure_train_step(cfg: ModelConfig, mesh: jax.sharding.Mesh,
                     redundancy=min(agg.redundancy,
                                    min(agg.cluster_size, n_ax) | 1),
                 )
-                summed = secure_allreduce_tree(sub, agg_ax, ax)
+                summed = tree_allreduce(sub, agg_ax, ax)
                 for i in idxs:
                     out[i] = summed[str(i)]
             grads = jax.tree.unflatten(treedef, out)

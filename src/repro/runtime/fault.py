@@ -59,12 +59,14 @@ class SessionFaultPlan:
     ``crashed_slots``: members that die mid-session — they stop forwarding
     (mode "drop"; the epoch layer also adds slots whose overlay node left
     after the session's epoch snapshot).  ``byzantine_slots``: members
-    whose outgoing copies are corrupted (``byzantine_mode``).  Slots must
-    be disjoint across the two groups; the batched executor applies each
+    whose outgoing copies are corrupted (``byzantine_mode`` — any engine
+    fault mode, including the digest adversaries "equivocate"/"mismatch"
+    and round-gated "<mode>@k" crash-at-hop-k forms).  Slots must be
+    disjoint across the two groups; the batched executor applies each
     group as one masked pass."""
     crashed_slots: tuple[int, ...] = ()
     byzantine_slots: tuple[int, ...] = ()
-    byzantine_mode: str = "flip"   # flip | garbage
+    byzantine_mode: str = "flip"   # flip | garbage | equivocate | ... | m@k
 
     def __post_init__(self):
         overlap = set(self.crashed_slots) & set(self.byzantine_slots)

@@ -12,6 +12,11 @@ configured transport:
     the same plan under ``shard_map`` over a real dp mesh (one device
     per protocol node) — bit-identical to the sim path by construction.
 
+(The *wire* transport of the voted hops — "full" r-copy voting vs the
+paper's "digest" 1-payload + r-digest hops with the compiled backup
+stream — is a protocol parameter and rides in ``SessionParams.transport``
+/ the batch key; both executor backends run both.)
+
 Every protocol stage is ONE batched kernel dispatch over all S rows,
 and all masking modes run batched (pairwise pads are fused in-kernel).
 

@@ -68,16 +68,27 @@ class SessionParams:
     clip: float = 1.0
     guard_bits: int = 2
     masking: str = "global"       # global | pairwise | none
+    # wire transport of the voted hops: "full" ships r payload copies,
+    # "digest" ships 1 payload + r digests + the compiled backup stream
+    # (the paper's bandwidth mechanism) — part of the batch key, so
+    # sessions on different transports never share an executor batch
+    transport: str = "full"       # full | digest
+    digest_words: int = 16
+    digest_backup: bool = True
 
     def __post_init__(self):
         assert self.elems >= 1
         AggConfig(n_nodes=self.n_nodes, cluster_size=self.cluster_size,
-                  redundancy=self.redundancy, schedule=self.schedule)
+                  redundancy=self.redundancy, schedule=self.schedule,
+                  transport=self.transport)
 
     def agg_config(self, kernel_impl: Optional[str] = None) -> AggConfig:
         return AggConfig(n_nodes=self.n_nodes,
                          cluster_size=self.cluster_size,
                          redundancy=self.redundancy, schedule=self.schedule,
+                         transport=self.transport,
+                         digest_words=self.digest_words,
+                         digest_backup=self.digest_backup,
                          masking=self.masking, clip=self.clip,
                          guard_bits=self.guard_bits,
                          kernel_impl=kernel_impl)
@@ -85,6 +96,7 @@ class SessionParams:
     def batch_key(self, padded_elems: int) -> tuple:
         return (self.n_nodes, self.cluster_size, self.redundancy,
                 self.schedule, self.clip, self.guard_bits, self.masking,
+                self.transport, self.digest_words, self.digest_backup,
                 padded_elems)
 
 

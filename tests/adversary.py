@@ -1,0 +1,103 @@
+"""Adversary-strategy harness for the conformance grid.
+
+Single source of truth for WHICH adversaries the protocol is pinned
+against and WHAT each transport is expected to survive — consumed by
+``tests/test_conformance.py`` (the grid itself and the mesh-executor
+subprocess) and cross-checked against the README "Adversary model"
+table, so the documented guarantees cannot drift from the executed
+suite.
+
+An adversary is a named fault-mode string (see ``core.byzantine``:
+``flip``/``garbage``/``drop`` payload corruption, ``equivocate`` /
+``mismatch`` digest adversaries, round-gated ``mode@k`` crash-at-hop-k
+forms) plus a colluder-placement rule.  Placement keeps every receiving
+vote inside the paper's honest-majority bound — fewer than r/2 of the r
+copies a receiver sees are corrupt — and colluders within a cluster sit
+two member shifts apart, so the digest transport's single compiled
+backup stream (the shift-1 sender) is always honest when the payload
+sender is not.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.byzantine import ByzantineSpec
+from repro.core.engine import sim_batch
+from repro.core.plan import SessionMeta, compile_plan
+
+
+@dataclasses.dataclass(frozen=True)
+class Adversary:
+    """One conformance-grid strategy.
+
+    ``survives_*`` is the expected outcome per wire-transport column
+    (exact aggregate recovered, bit-identical to the honest run): the
+    full r-copy transport, the digest transport with its compiled
+    backup stream (the default), and the digest transport without it
+    (detection only — a rejected payload cannot be replaced in-band)."""
+    name: str
+    mode: str | None                   # engine fault mode; None = honest
+    colluders_per_cluster: int = 1
+    phase: int = 0                     # member-position offset per cluster
+    survives_full: bool = True
+    survives_digest: bool = True
+    survives_digest_nobackup: bool = True
+
+    def ranks(self, n: int, c: int, r: int) -> tuple[int, ...]:
+        """Colluder ranks: ``colluders_per_cluster`` members per cluster
+        at positions (cl + phase + 2j) % c — position varies per cluster,
+        colluders within a cluster are non-adjacent (see module doc)."""
+        k = self.colluders_per_cluster
+        assert k <= (r - 1) // 2, "placement must stay a vote minority"
+        assert 2 * k <= c
+        return tuple(cl * c + (cl + self.phase + 2 * j) % c
+                     for cl in range(n // c) for j in range(k))
+
+    def specs(self, n: int, c: int, r: int) -> tuple[ByzantineSpec, ...]:
+        if self.mode is None:
+            return ()
+        return (ByzantineSpec(corrupt_ranks=self.ranks(n, c, r),
+                              mode=self.mode),)
+
+
+# The grid's strategy set (>= 6 non-trivial adversaries + the honest
+# baseline).  ``colluders_per_cluster`` scales with the vote redundancy
+# for the colluding strategy: (r-1)//2 is the (1/2 - eps) minority bound
+# per receiving vote.
+def colluding_minority(r: int) -> "Adversary":
+    return Adversary("colluding-minority", "flip",
+                     colluders_per_cluster=(r - 1) // 2, phase=1,
+                     survives_digest_nobackup=False)
+
+
+ADVERSARIES: tuple[Adversary, ...] = (
+    Adversary("honest", None),
+    Adversary("crash-at-hop-k", "drop@1",
+              survives_digest_nobackup=False),
+    Adversary("payload-corruption", "garbage",
+              survives_digest_nobackup=False),
+    Adversary("payload-flip", "flip", phase=2,
+              survives_digest_nobackup=False),
+    Adversary("digest-equivocation", "equivocate"),
+    Adversary("digest-payload-mismatch", "mismatch",
+              survives_digest_nobackup=False),
+    colluding_minority(3),
+)
+
+
+def session_faults(n: int, c: int, r: int,
+                   adversaries=ADVERSARIES) -> list:
+    """Per-session fault-spec lists: session s runs adversaries[s] — the
+    grid's "per-session mixes in a batch" dimension is built in."""
+    return [adv.specs(n, c, r) for adv in adversaries]
+
+
+def run_sim_batch(cfg, xs, seeds=None, faults=None, reveal_only=False):
+    """Engine-native batched oracle run (no deprecation shims):
+    (S, n, T) payloads -> (np result, bytes_sent)."""
+    S, n = xs.shape[:2]
+    meta = SessionMeta.build(S, n, seed=cfg.seed, seeds=seeds, faults=faults)
+    out, tp = sim_batch(compile_plan(cfg), xs, meta, reveal_only=reveal_only)
+    return np.asarray(out), tp.bytes_sent

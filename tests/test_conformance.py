@@ -1,0 +1,452 @@
+"""Adversarial conformance grid — the tier-1 safety net every later
+refactor leans on.
+
+Sweeps wire transport {full, digest} x masking {global, pairwise, none}
+x executor {sim, mesh} against the strategy set in ``tests/adversary.py``
+(crash-at-hop-k, payload corruption, per-copy digest equivocation,
+digest/payload mismatch, colluding cluster minority, per-session mixes
+in one batch) and pins:
+
+  * exact-output-with-high-probability: every in-bound adversary is
+    absorbed BIT-IDENTICALLY to the honest run (the vote/median/backup
+    machinery recovers the exact aggregate, which itself matches the
+    plain fp32 sum within the quantization bound);
+  * MeshTransport == SimTransport bit-exact in every digest and full
+    cell (forced multi-device subprocess);
+  * the analytic bandwidth model (``schedules.schedule_cost``) equals
+    the bytes the engine's compiled plan actually moves;
+  * the one-release ``secure_allreduce_*`` shims warn and stay
+    bit-identical to the engine path;
+  * the README "Adversary model" table matches the executed grid.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from adversary import (ADVERSARIES, colluding_minority, run_sim_batch,
+                       session_faults)
+from repro.core.byzantine import ByzantineSpec
+from repro.core.engine import manual_allreduce, tree_allreduce
+from repro.core.masking import quantization_error_bound
+from repro.core.plan import SessionMeta, compile_plan
+from repro.core.schedules import schedule_cost
+from repro.core.secure_allreduce import (AggConfig, secure_allreduce_manual,
+                                         secure_allreduce_sharded,
+                                         secure_allreduce_tree,
+                                         simulate_secure_allreduce,
+                                         simulate_secure_allreduce_batch)
+from repro.runtime import compat
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+RNG = np.random.default_rng(0xC0FFEE)
+
+# grid committee: g=4 clusters -> 3 voted ring rounds, so the
+# crash-at-hop-k family has hops to crash at
+GRID_N, GRID_C, GRID_R, GRID_T = 16, 4, 3, 96
+
+
+def _grid_cfg(transport: str, masking: str, **kw) -> AggConfig:
+    return AggConfig(n_nodes=GRID_N, cluster_size=GRID_C,
+                     redundancy=GRID_R, schedule="ring",
+                     transport=transport, masking=masking, clip=2.0, **kw)
+
+
+def _payloads(S: int, n: int = GRID_N, T: int = GRID_T) -> np.ndarray:
+    return (RNG.normal(size=(S, n, T)) * 0.2).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Sim-executor cells: transport x masking, every adversary as one
+# session of a single batch (the per-session-mix dimension is built in)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("masking", ["global", "pairwise", "none"])
+@pytest.mark.parametrize("transport", ["full", "digest"])
+def test_sim_cell_absorbs_every_adversary(transport, masking):
+    """One batch, one session per adversary strategy: the faulty batch is
+    BIT-IDENTICAL to the honest batch (every strategy absorbed), every
+    node row agrees, and the aggregate is the exact sum within the
+    quantization bound."""
+    S = len(ADVERSARIES)
+    cfg = _grid_cfg(transport, masking)
+    xs = _payloads(S)
+    seeds = jnp.arange(S, dtype=jnp.uint32) + 3
+    got, _ = run_sim_batch(cfg, xs, seeds=seeds,
+                           faults=session_faults(GRID_N, GRID_C, GRID_R))
+    honest, _ = run_sim_batch(cfg, xs, seeds=seeds)
+    assert np.array_equal(got, honest)
+    assert (honest == honest[:, :1]).all()     # replicated on every node
+    bound = quantization_error_bound(cfg.mask_cfg()) * 4
+    assert np.abs(honest - xs.sum(1, keepdims=True)).max() < bound
+
+
+@pytest.mark.parametrize("transport", ["full", "digest"])
+def test_crash_at_every_hop_k(transport):
+    """The ``drop@k`` family across all 3 ring rounds: a crash at any
+    hop is vote-absorbed (the crashed node's contribution was already
+    merged at the intra-cluster sum)."""
+    cfg = _grid_cfg(transport, "global")
+    xs = _payloads(1)
+    honest, _ = run_sim_batch(cfg, xs)
+    ranks = tuple(cl * GRID_C + cl % GRID_C for cl in range(GRID_N // GRID_C))
+    for k in range(3):
+        specs = (ByzantineSpec(corrupt_ranks=ranks, mode=f"drop@{k}"),)
+        got, _ = run_sim_batch(cfg, xs, faults=[specs])
+        assert np.array_equal(got, honest), k
+
+
+@pytest.mark.parametrize("transport", ["full", "digest"])
+def test_colluding_minority_r5_bound(transport):
+    """Two colluders per cluster at r=5 — the (1/2 - eps) per-vote bound
+    with non-adjacent members, so the digest backup sender stays honest
+    whenever the payload sender is corrupt."""
+    n, c, r = 16, 8, 5
+    cfg = AggConfig(n_nodes=n, cluster_size=c, redundancy=r,
+                    transport=transport, clip=2.0)
+    adv = colluding_minority(r)
+    assert len(adv.ranks(n, c, r)) == (n // c) * 2
+    xs = _payloads(1, n=n, T=64)
+    honest, _ = run_sim_batch(cfg, xs)
+    got, _ = run_sim_batch(cfg, xs, faults=[adv.specs(n, c, r)])
+    assert np.array_equal(got, honest)
+
+
+def test_static_spec_equals_runtime_masks():
+    """The plan's static fault model (``AggConfig.byzantine`` ->
+    ``plan.faults``) and the per-session runtime masks corrupt
+    identically — both absorbed, bit-identical to each other and to the
+    honest run (digest cell, the mismatch adversary)."""
+    adv = next(a for a in ADVERSARIES if a.mode == "mismatch")
+    specs = adv.specs(GRID_N, GRID_C, GRID_R)
+    cfg = _grid_cfg("digest", "global")
+    xs = _payloads(1)
+    honest, _ = run_sim_batch(cfg, xs)
+    runtime, _ = run_sim_batch(cfg, xs, faults=[specs])
+    static, _ = run_sim_batch(
+        dataclasses.replace(cfg, byzantine=specs[0]), xs)
+    assert np.array_equal(runtime, static)
+    assert np.array_equal(runtime, honest)
+
+
+def test_digest_without_backup_detects_but_cannot_recover():
+    """``digest_backup=False`` (the analytic-retransmission model): a
+    rejected payload is detected but consumed, so only the adversaries
+    that never get a payload rejected stay absorbed — exactly the README
+    table's no-backup column."""
+    cfg = _grid_cfg("digest", "global", digest_backup=False)
+    xs = _payloads(1)
+    honest, _ = run_sim_batch(cfg, xs)
+    for adv in ADVERSARIES:
+        if adv.mode is None:
+            continue
+        got, _ = run_sim_batch(cfg, xs,
+                               faults=[adv.specs(GRID_N, GRID_C, GRID_R)])
+        if adv.survives_digest_nobackup:
+            assert np.array_equal(got, honest), adv.name
+        else:
+            assert not np.array_equal(got, honest), adv.name
+
+
+# ---------------------------------------------------------------------------
+# Bandwidth accounting: analytic cost model == bytes the compiled plan
+# actually moves (catches drift between schedules.py and the engine)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("transport,backup", [("full", False),
+                                              ("digest", True),
+                                              ("digest", False)])
+@pytest.mark.parametrize("schedule", ["ring", "tree", "butterfly"])
+def test_bandwidth_accounting_matches_engine(schedule, transport, backup):
+    cfg = AggConfig(n_nodes=GRID_N, cluster_size=GRID_C, redundancy=GRID_R,
+                    schedule=schedule, transport=transport,
+                    digest_backup=backup, clip=2.0)
+    T = 256
+    xs = _payloads(1, T=T)
+    _, got_bytes = run_sim_batch(cfg, xs)
+    k = schedule_cost(schedule, GRID_N // GRID_C, GRID_C, GRID_R,
+                      payload_bytes=4 * T,
+                      digest=(transport == "digest"),
+                      digest_bytes=4 * cfg.digest_words,
+                      digest_backup=backup)
+    assert got_bytes == k["bytes_total"]
+    if transport == "digest":
+        full = schedule_cost(schedule, GRID_N // GRID_C, GRID_C, GRID_R,
+                             payload_bytes=4 * T)
+        assert got_bytes < full["bytes_total"]   # the paper's point
+
+
+def test_bandwidth_accounting_chunked_and_batched():
+    """Batching S sessions moves S times the single-session bytes.
+    Chunking over K hops preserves the payload bytes exactly; on the
+    digest transport every chunk hop is independently digest-checked, so
+    K chunks ship K digest sets — the account must show exactly the
+    (K-1) extra sets and nothing else."""
+    from repro.core.engine import SimTransport, execute_chunks
+
+    def run_chunked(cfg, x, K):
+        plan = compile_plan(cfg)
+        tp = SimTransport(plan, S=1)
+        flat = jnp.asarray(x).astype(jnp.float32)
+        Tc = flat.shape[-1] // K
+        execute_chunks(plan, tp, [flat[:, k * Tc:(k + 1) * Tc]
+                                  for k in range(K)],
+                       SessionMeta.single(cfg.seed))
+        return tp.bytes_sent
+
+    T, S = 256, 3
+    xs = _payloads(S, T=T)
+    for transport in ("full", "digest"):
+        cfg = _grid_cfg(transport, "global")
+        _, one = run_sim_batch(cfg, xs[:1])
+        _, batched = run_sim_batch(cfg, xs)
+        assert batched == S * one
+        chunked = run_chunked(cfg, xs[0], K=2)
+        if transport == "full":
+            assert chunked == one
+        else:
+            digest_set = sum(
+                len(p) for rnd in compile_plan(cfg).rounds
+                for p in rnd.perms) * cfg.digest_words * 4
+            assert chunked == one + digest_set
+
+
+# ---------------------------------------------------------------------------
+# Service executor: the digest transport through the batched service
+# path (sim executor in-process; mesh executor in the subprocess below)
+# ---------------------------------------------------------------------------
+
+
+def test_service_digest_transport_sim_executor():
+    from repro.runtime.fault import SessionFaultPlan
+    from repro.service import (AggregationService, BatchingConfig,
+                               SessionParams)
+    n, elems, S = 8, 50, 4
+    vals = (RNG.normal(size=(S, n, elems)) * 0.3).astype(np.float32)
+    params = SessionParams(n_nodes=n, elems=elems, cluster_size=4,
+                           redundancy=3, masking="pairwise",
+                           transport="digest", clip=2.0)
+    # transports never share a batch: the wire transport is in the key
+    assert params.batch_key(64) != dataclasses.replace(
+        params, transport="full").batch_key(64)
+    svc = AggregationService(params,
+                             batching=BatchingConfig(max_batch=S,
+                                                     max_age=1e9))
+    for i in range(S):
+        s = svc.open(now=0.0)
+        for slot in range(n):
+            if (i, slot) != (1, 2):          # one missing slot -> crash
+                s.contribute(slot, vals[i, slot])
+        if i == 2:
+            s.inject_fault(SessionFaultPlan(byzantine_slots=(5,),
+                                            byzantine_mode="equivocate"))
+        if i == 3:
+            s.inject_fault(SessionFaultPlan(byzantine_slots=(0,),
+                                            byzantine_mode="mismatch"))
+        svc.seal(s.sid, now=0.0)
+    assert svc.pump(force=True) == S
+    got = np.stack([svc.result(sid) for sid in range(S)])
+    want = vals.sum(1)
+    want[1] -= vals[1, 2]
+    assert np.abs(got - want).max() < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# Mesh-executor cells (forced multi-device subprocesses)
+# ---------------------------------------------------------------------------
+
+
+_MESH_GRID = """
+import numpy as np, jax.numpy as jnp
+from adversary import ADVERSARIES, run_sim_batch, session_faults
+from repro.core.engine import MeshTransport
+from repro.core.plan import SessionMeta, compile_plan
+from repro.core.secure_allreduce import AggConfig
+from repro.runtime import compat
+
+n, c, r, T = 16, 4, 3, 64
+S = len(ADVERSARIES)
+rng = np.random.default_rng(13)
+xs = (rng.normal(size=(S, n, T)) * 0.2).astype(np.float32)
+seeds = jnp.arange(S, dtype=jnp.uint32) + 3
+faults = session_faults(n, c, r)
+mesh = compat.make_mesh((n,), ("data",))
+for transport in ("full", "digest"):
+    for masking in ("global", "pairwise", "none"):
+        cfg = AggConfig(n_nodes=n, cluster_size=c, redundancy=r,
+                        schedule="ring", transport=transport,
+                        masking=masking, clip=2.0)
+        plan = compile_plan(cfg)
+        meta = SessionMeta.build(S, n, seed=cfg.seed, seeds=seeds,
+                                 faults=faults)
+        mt = MeshTransport(mesh, ("data",))
+        got = np.asarray(mt.execute(plan, jnp.asarray(xs), meta))
+        want, sim_bytes = run_sim_batch(cfg, xs, seeds=seeds, faults=faults)
+        assert np.array_equal(got, want), (transport, masking)
+        assert mt.last_bytes == sim_bytes, (transport, masking)
+        honest, _ = run_sim_batch(cfg, xs, seeds=seeds)
+        assert np.array_equal(got, honest), (transport, masking)
+        assert np.abs(got[:, 0] - xs.sum(1)).max() < 1e-3, (transport,
+                                                            masking)
+print("MESH GRID OK")
+"""
+
+
+_SERVICE_DIGEST_MESH = """
+import numpy as np
+from repro.runtime import compat
+from repro.runtime.fault import SessionFaultPlan
+from repro.service import AggregationService, BatchingConfig, SessionParams
+
+n, elems, S = 8, 100, 4
+rng = np.random.default_rng(21)
+vals = (rng.normal(size=(S, n, elems)) * 0.3).astype(np.float32)
+params = SessionParams(n_nodes=n, elems=elems, cluster_size=4, redundancy=3,
+                       masking="pairwise", transport="digest", clip=2.0)
+
+def run(transport):
+    mesh = compat.make_mesh((n,), ("data",)) if transport == "mesh" else None
+    svc = AggregationService(
+        params, batching=BatchingConfig(max_batch=S, max_age=1e9),
+        transport=transport, mesh=mesh)
+    for i in range(S):
+        s = svc.open(now=0.0)
+        for slot in range(n):
+            if (i, slot) != (1, 2):          # one missing slot -> crash
+                s.contribute(slot, vals[i, slot])
+        if i == 2:
+            s.inject_fault(SessionFaultPlan(byzantine_slots=(5,),
+                                            byzantine_mode="equivocate"))
+        if i == 3:
+            s.inject_fault(SessionFaultPlan(byzantine_slots=(0,),
+                                            byzantine_mode="mismatch"))
+        svc.seal(s.sid, now=0.0)
+    assert svc.pump(force=True) == S
+    return np.stack([svc.result(sid) for sid in range(S)])
+
+sim, mesh = run("sim"), run("mesh")
+assert np.array_equal(sim, mesh)
+want = vals.sum(1); want[1] -= vals[1, 2]
+assert np.abs(sim - want).max() < 1e-3
+print("SERVICE DIGEST MESH==SIM")
+"""
+
+
+def _run_sub(code: str, devices: int, timeout: int = 900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [SRC, os.path.dirname(__file__), env.get("PYTHONPATH", "")])
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    return subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+@pytest.mark.mesh
+@pytest.mark.slow
+def test_mesh_cells_bit_identical_to_sim_16dev():
+    """The mesh half of the grid: every transport x masking cell with
+    the full adversary batch — MeshTransport == SimTransport bit-exact,
+    adversaries absorbed, bandwidth accounts equal."""
+    r = _run_sub(_MESH_GRID, devices=16)
+    assert r.returncode == 0, r.stdout[-4000:] + r.stderr[-4000:]
+    assert "MESH GRID OK" in r.stdout
+
+
+@pytest.mark.mesh
+@pytest.mark.slow
+def test_service_digest_batch_on_mesh_matches_sim_8dev():
+    """A sealed digest-transport service batch (pairwise masking,
+    missing contributor, equivocate + mismatch slots) through
+    BatchedExecutor(transport="mesh") == the sim executor, bit for bit."""
+    r = _run_sub(_SERVICE_DIGEST_MESH, devices=8)
+    assert r.returncode == 0, r.stdout[-4000:] + r.stderr[-4000:]
+    assert "SERVICE DIGEST MESH==SIM" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims: warn + bit-identical to the engine path
+# ---------------------------------------------------------------------------
+
+
+def test_simulate_shims_warn_and_match_engine():
+    cfg = AggConfig(n_nodes=8, cluster_size=4, redundancy=3, clip=2.0)
+    xs = _payloads(1, n=8, T=65)
+    want, _ = run_sim_batch(cfg, xs)
+    with pytest.warns(DeprecationWarning):
+        got = simulate_secure_allreduce(jnp.asarray(xs[0]), cfg)
+    assert np.array_equal(np.asarray(got), want[0])
+    with pytest.warns(DeprecationWarning):
+        got_b = simulate_secure_allreduce_batch(jnp.asarray(xs), cfg)
+    assert np.array_equal(np.asarray(got_b), want)
+
+
+def test_manual_shims_warn_and_match_engine():
+    """manual/tree/sharded shims on a 1-device mesh: DeprecationWarning
+    emitted, outputs bit-identical to the engine-native entries the
+    internal callers migrated to."""
+    cfg = AggConfig(n_nodes=1, cluster_size=1, redundancy=1, clip=2.0)
+    mesh = compat.make_mesh((1,), ("data",))
+    x = jnp.asarray((RNG.normal(size=(33,)) * 0.2).astype(np.float32))
+
+    def run_flat(fn):
+        sm = compat.shard_map(lambda v: fn(v[0])[None], mesh=mesh,
+                              in_specs=(P("data"),), out_specs=P("data"),
+                              check_vma=False)
+        return np.asarray(sm(x[None]))[0]
+
+    def run_tree(fn):
+        def body(v):
+            t = {"a": v[0][:20], "b": v[0][20:]}
+            out = fn(t, cfg, ("data",))
+            return jnp.concatenate([out["a"], out["b"]])[None]
+        sm = compat.shard_map(body, mesh=mesh, in_specs=(P("data"),),
+                              out_specs=P("data"), check_vma=False)
+        return np.asarray(sm(x[None]))[0]
+
+    want = run_flat(lambda v: manual_allreduce(v, cfg, ("data",)))
+    with pytest.warns(DeprecationWarning):
+        got_m = run_flat(
+            lambda v: secure_allreduce_manual(v, cfg, ("data",)))
+    assert np.array_equal(got_m, want)
+    with pytest.warns(DeprecationWarning):
+        got_s = secure_allreduce_sharded(x[None], mesh, cfg)
+    assert np.array_equal(np.asarray(got_s)[0], want)
+    want_t = run_tree(tree_allreduce)
+    with pytest.warns(DeprecationWarning):
+        got_t = run_tree(secure_allreduce_tree)
+    assert np.array_equal(got_t, want_t)
+
+
+# ---------------------------------------------------------------------------
+# README "Adversary model" table == the executed grid
+# ---------------------------------------------------------------------------
+
+
+def test_readme_adversary_table_matches_grid():
+    """Every non-trivial grid adversary has a README table row whose
+    survive cells (full / digest / digest-no-backup) equal the harness's
+    expectations — the documented guarantees cannot drift from the
+    suite."""
+    readme = os.path.join(os.path.dirname(__file__), "..", "README.md")
+    with open(readme, encoding="utf-8") as f:
+        text = f.read()
+    assert "## Adversary model" in text
+    section = text.split("## Adversary model", 1)[1].split("\n## ", 1)[0]
+    rows = [l for l in section.splitlines() if l.strip().startswith("|")]
+    for adv in ADVERSARIES:
+        if adv.mode is None:
+            continue
+        row = [l for l in rows if adv.name in l]
+        assert len(row) == 1, (adv.name, row)
+        cells = [c.strip() for c in row[0].strip().strip("|").split("|")]
+        got = tuple("✓" in c for c in cells[-3:])
+        want = (adv.survives_full, adv.survives_digest,
+                adv.survives_digest_nobackup)
+        assert got == want, (adv.name, got, want)

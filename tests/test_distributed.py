@@ -17,6 +17,7 @@ def run_sub(code: str, devices: int = 8, timeout: int = 900):
                           capture_output=True, text=True, timeout=timeout)
 
 
+@pytest.mark.mesh
 @pytest.mark.slow
 def test_secure_allreduce_selftest_16dev():
     env = dict(os.environ)
@@ -28,6 +29,7 @@ def test_secure_allreduce_selftest_16dev():
     assert "selftest OK" in r.stdout
 
 
+@pytest.mark.mesh
 @pytest.mark.slow
 def test_secure_training_matches_baseline_4dev():
     """4-way DP: secure aggregation (2 clusters x 2, vote r=1) training must
@@ -57,6 +59,7 @@ print('MATCH', base['losses'][-1], sec['losses'][-1])
     assert "MATCH" in r.stdout
 
 
+@pytest.mark.mesh
 @pytest.mark.slow
 def test_moe_distributed_matches_local_2dev():
     """EP all_to_all MoE on 2 devices == single-device local MoE."""

@@ -162,6 +162,8 @@ def _run_sub(code: str, devices: int = 8, timeout: int = 900):
                           capture_output=True, text=True, timeout=timeout)
 
 
+@pytest.mark.mesh
+@pytest.mark.slow
 def test_mesh_transport_bit_identical_to_sim_8dev():
     """The acceptance pin: MeshTransport (shard_map + ppermute over a dp
     mesh) == SimTransport oracle bit-for-bit for the same AggPlan, with

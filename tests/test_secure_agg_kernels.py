@@ -107,6 +107,45 @@ def test_pairwise_mask_kernel_matches_oracle(T, c):
     assert bool(jnp.all(total == plain))
 
 
+@pytest.mark.parametrize("T", [1, 8 * 128, 8 * 128 + 1])
+@pytest.mark.parametrize("c", [1, 2])
+def test_pairwise_mask_kernel_edge_shapes(T, c):
+    """Edge shapes PR 3's round-number sweeps missed: cluster size 1 (a
+    degenerate pairwise group — the pad must vanish, leaving pure
+    quantization), and lengths at/over the (8, 128) tile boundary.
+    Pallas-interpret == jnp == the unrolled masking oracle, bit-exact."""
+    from repro.core.masking import pairwise_pad, quantize
+    mcfg = MaskConfig(n_nodes=4 * c, clip=2.0, mode="pairwise",
+                      cluster_size=c, seed=55)
+    x = jnp.asarray((RNG.normal(size=(T,)) * 0.4).astype(np.float32))
+    for nid in (0, c - 1):
+        want = quantize(mcfg, x) + pairwise_pad(mcfg, nid, (T,))
+        for impl in (PALLAS, "jnp"):
+            got = mask_encrypt_op(x, nid, mcfg.seed, mcfg.scale, mcfg.clip,
+                                  mode="pairwise", cluster_size=c, impl=impl)
+            assert bool(jnp.all(got == want)), (impl, nid)
+        if c == 1:   # no pairs: the pad is identically zero
+            assert bool(jnp.all(want == quantize(mcfg, x)))
+
+
+@pytest.mark.parametrize("T", [1, 8 * 128 + 1])
+def test_pairwise_mask_batch_edge_shapes(T):
+    """S=1 batches (a single-session service flush) and tile-boundary
+    lengths through the batched pairwise kernel: one (1, T) dispatch ==
+    the single-row kernel, Pallas-interpret == jnp bit-exact."""
+    c = 4
+    x = jnp.asarray((RNG.normal(size=(1, T)) * 0.4).astype(np.float32))
+    want = mask_encrypt_op(x[0], 2, 77, 2.0 ** 20, 1.0, mode="pairwise",
+                           offset=13, cluster_size=c, impl="jnp")[None]
+    for impl in (PALLAS, "jnp"):
+        got = mask_encrypt_batch_op(
+            x, jnp.asarray([2], jnp.uint32), jnp.asarray([77], jnp.uint32),
+            2.0 ** 20, 1.0, mode="pairwise",
+            offsets=jnp.asarray([13], jnp.uint32), cluster_size=c, impl=impl)
+        assert got.shape == (1, T)
+        assert bool(jnp.all(got == want)), impl
+
+
 def test_pairwise_mask_batch_matches_per_row():
     B, T, c = 6, 129, 4
     x = jnp.asarray(RNG.normal(size=(B, T)).astype(np.float32) * 0.4)
