@@ -5,11 +5,21 @@
 # whose auto-selected engine is the jnp reference.
 PY := PYTHONPATH=src python
 
-.PHONY: test kernel-lane service-lane mesh-lane adversary-lane \
+.PHONY: test api-lane kernel-lane service-lane mesh-lane adversary-lane \
     bench-service bench-service-mesh bench
 
 test:
 	$(PY) -m pytest -x -q
+
+# public-surface lane: the repro.api pins (snapshot __all__/signatures,
+# ConfigError negatives, facade == engine bit-identity) plus a
+# warnings-as-errors sweep over tier-1 proving nothing in-repo still
+# touches a deprecated path (the mesh/slow subprocess cells have their
+# own lane)
+api-lane:
+	$(PY) -m pytest tests/test_api.py -q
+	PYTHONPATH=src python -W error::DeprecationWarning -m pytest -q \
+	    -m "not mesh and not slow"
 
 kernel-lane:
 	REPRO_KERNEL_IMPL=pallas_interpret $(PY) -m pytest \

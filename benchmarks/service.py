@@ -22,8 +22,7 @@ import jax.numpy as jnp
 from benchmarks._timing import time_call
 
 from repro.core.engine import sim_batch
-from repro.core.plan import SessionMeta, compile_plan
-from repro.core.secure_allreduce import AggConfig
+from repro.core.plan import AggConfig, SessionMeta, compile_plan
 
 N_NODES, CLUSTER, R, T = 16, 4, 3, 1024
 S_SWEEP = (1, 8, 64)

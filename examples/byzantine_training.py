@@ -20,10 +20,10 @@ import dataclasses
 
 import numpy as np
 
+from repro.api import AggConfig, Security, Topology
 from repro.configs import get_smoke_config
 from repro.configs.base import ShapeConfig
 from repro.core.byzantine import ByzantineSpec
-from repro.core.secure_allreduce import AggConfig
 from repro.launch.mesh import make_host_mesh
 from repro.launch.train import train_loop
 from repro.optim import adamw
@@ -42,9 +42,11 @@ def main():
 
     # 2 clusters of 4; one corrupt member per cluster (< r/2 of r=3 votes)
     corrupt = (1, 5)
-    agg = AggConfig(n_nodes=8, cluster_size=4, redundancy=3, clip=8.0,
-                    byzantine=ByzantineSpec(corrupt_ranks=corrupt,
-                                            mode="garbage"))
+    agg = AggConfig.compose(
+        Topology(n_nodes=8, cluster_size=4),
+        Security(redundancy=3, clip=8.0,
+                 byzantine=ByzantineSpec(corrupt_ranks=corrupt,
+                                         mode="garbage")))
     print(f"== secure aggregation with byzantine ranks {corrupt} ==")
     sec = train_loop(cfg, mesh, steps=steps, shape=shape, opt_cfg=opt,
                      secure=True, agg=agg, log_every=4)
@@ -56,7 +58,7 @@ def main():
     print("majority vote fully corrected the corrupted ring traffic ✓")
 
     print("== control: same corruption WITHOUT enough redundancy (r=1) ==")
-    agg_bad = dataclasses.replace(agg, redundancy=1)
+    agg_bad = agg.replace(redundancy=1)
     bad = train_loop(cfg, mesh, steps=steps, shape=shape, opt_cfg=opt,
                      secure=True, agg=agg_bad, log_every=4)
     diff_bad = np.max(np.abs(np.asarray(base["losses"])

@@ -1,5 +1,6 @@
-"""Quickstart: train a tiny LM with the paper's secure aggregation as the
-gradient-sync layer, then decode from it.
+"""Quickstart: the ``repro.api`` front door in three verbs (allreduce /
+cost / sessions), then train a tiny LM with the paper's secure
+aggregation as the gradient-sync layer and decode from it.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -8,6 +9,9 @@ import sys
 
 sys.path.insert(0, "src")
 
+import numpy as np
+
+from repro.api import SecureAggregator, Topology
 from repro.configs import get_smoke_config
 from repro.configs.base import ShapeConfig
 from repro.launch.mesh import make_host_mesh
@@ -16,7 +20,24 @@ from repro.launch.train import train_loop
 from repro.optim import adamw
 
 
+def facade_demo():
+    """One front door: aggregate 16 nodes' vectors, ask what it costs."""
+    agg = SecureAggregator(topology=Topology(n_nodes=16, cluster_size=4))
+    xs = np.random.default_rng(0).normal(size=(16, 512)).astype(np.float32)
+    xs *= 0.05
+    out = agg.allreduce(xs)                   # (16, 512) per-node results
+    err = float(np.abs(np.asarray(out)[0] - xs.sum(0)).max())
+    k = agg.cost(512)
+    print(f"secure allreduce of (16, 512): max|err|={err:.1e}, "
+          f"{k['rounds']} voted rounds, "
+          f"{k['bytes_per_node'] / 1e3:.1f} kB/node "
+          f"(caches: {agg.stats()['fn_cache']})")
+
+
 def main():
+    print("== repro.api facade ==")
+    facade_demo()
+
     cfg = get_smoke_config("olmo-1b")
     mesh = make_host_mesh()  # 1 device; scales to any (data, model) mesh
     shape = ShapeConfig("quickstart", seq_len=128, global_batch=8,

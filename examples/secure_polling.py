@@ -1,5 +1,6 @@
-"""The paper's own application — distributed polling — rewritten on the
-multi-session aggregation service: many concurrent polls run as sessions
+"""The paper's own application — distributed polling — driven through
+the ``repro.api.SecureAggregator`` facade over the multi-session
+aggregation service: many concurrent polls run as sessions
 (open -> contribute -> seal -> aggregate -> reveal), batched into single
 kernel dispatches by the admission scheduler, surviving overlay churn
 mid-flight via epoch pinning.  A one-shot run of the node-scale DA
@@ -16,11 +17,11 @@ sys.path.insert(0, "src")
 
 import numpy as np
 
+from repro.api import SecureAggregator, Security, Topology
 from repro.core.overlay import build_overlay
 from repro.core.protocol import Adversary, DAProtocol
 from repro.runtime.fault import SessionFaultPlan
-from repro.service import (AggregationService, BatchingConfig, EpochManager,
-                           SessionParams)
+from repro.service import BatchingConfig, EpochManager
 
 
 def main():
@@ -44,49 +45,50 @@ def main():
           f"{args.questions} yes/no questions each ==")
     em = EpochManager(ov, cluster_size=4)
     snap = em.current()
-    params = SessionParams(n_nodes=snap.n_nodes, elems=args.questions,
-                           cluster_size=4, redundancy=3)
-    svc = AggregationService(
-        params, epochs=em,
+    # one facade, one config: every poll derives its SessionParams from it
+    agg = SecureAggregator(
+        topology=Topology(n_nodes=snap.n_nodes, cluster_size=4),
+        security=Security(redundancy=3), epochs=em,
         batching=BatchingConfig(max_batch=args.batch, max_age=1e9))
+    n_slots = snap.n_nodes
     print(f"committees: {snap.n_clusters} clusters x 4 -> "
-          f"{snap.n_nodes} protocol slots/poll")
+          f"{n_slots} protocol slots/poll")
 
     rng = np.random.default_rng(7)
     expected = {}
     for i in range(args.polls):
-        s = svc.open(now=float(i))
+        s = agg.open_session(args.questions, now=float(i))
         votes = rng.integers(0, 2,
-                             size=(params.n_nodes, args.questions)
+                             size=(n_slots, args.questions)
                              ).astype(np.float32)
-        for slot in range(params.n_nodes):
+        for slot in range(n_slots):
             s.contribute(slot, votes[slot])
         expected[s.sid] = votes.sum(0)
         # one poll suffers a mid-session Byzantine member: its forwarded
         # ring copies are flipped and out-voted by the r=3 majority
         if i == 1:
             s.inject_fault(SessionFaultPlan(byzantine_slots=(2,)))
-        svc.seal(s.sid, now=float(i))
+        agg.seal(s.sid, now=float(i))
         if i == args.polls // 2:
             # churn strikes mid-flight: sealed polls stay pinned to their
             # epoch's committees; departures become vote-absorbed crashes
             em.churn(joins=8, leaves=8, honest_join_frac=1.0)
             print(f"  churn after poll {i}: epoch -> "
                   f"{em.current().epoch}, overlay n={len(ov.nodes)}")
-        svc.pump(now=float(i))
-    svc.drain()
+        agg.pump(now=float(i))
+    agg.drain()
 
     exact = 0
     for sid, want in expected.items():
-        got = svc.result(sid)
+        got = agg.result(sid)
         exact += bool(np.allclose(got, want, atol=1e-3))
-    st = svc.stats
+    st = agg.stats()["service"]
     print(f"polls revealed: {st['sessions_run']}, exact tallies: "
           f"{exact}/{args.polls}")
     print(f"batches: {st['batches_run']} (sizes {st['batch_sizes']}), "
           f"final epoch: {st['epoch']}")
-    sample = svc.result(0).astype(int)
-    print(f"poll 0 tally: {sample.tolist()} yes of {params.n_nodes} voters")
+    sample = agg.result(0).astype(int)
+    print(f"poll 0 tally: {sample.tolist()} yes of {n_slots} voters")
     assert exact == args.polls
 
     if not args.skip_paillier:

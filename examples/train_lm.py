@@ -11,6 +11,7 @@ sys.path.insert(0, "src")
 
 import dataclasses
 
+from repro.api import AggConfig, SecureAggregator
 from repro.configs.base import LayerSpec, ModelConfig, ShapeConfig
 from repro.launch.mesh import make_host_mesh
 from repro.launch.train import train_loop
@@ -48,8 +49,21 @@ def main():
     shape = ShapeConfig("lm", seq_len=256, global_batch=8, kind="train")
     opt = adamw.OptConfig(lr=1e-3, warmup_steps=20,
                           total_steps=args.steps, grad_clip=1.0)
+    agg = None
+    if args.secure:
+        # the gradient-sync committee, derived from one shared config
+        # (reclamps cluster/redundancy to however many dp ranks exist)
+        dp_n = 1
+        for a in ("pod", "data"):
+            if a in mesh.axis_names:
+                dp_n *= mesh.shape[a]
+        agg = AggConfig(n_nodes=4, clip=8.0).derive(n_nodes=dp_n)
+        k = SecureAggregator(agg).cost(agg.chunk_elems)
+        print(f"secure sync: n={agg.n_nodes} c={agg.cluster_size} "
+              f"r={agg.redundancy}, {k['rounds']} voted rounds, "
+              f"{k['bytes_per_node'] / 1e6:.2f} MB/node/chunk")
     out = train_loop(cfg, mesh, steps=args.steps, shape=shape,
-                     secure=args.secure, opt_cfg=opt,
+                     secure=args.secure, agg=agg, opt_cfg=opt,
                      ckpt_dir=args.ckpt_dir, ckpt_every=50, log_every=10)
     l0 = sum(out["losses"][:10]) / 10
     l1 = sum(out["losses"][-10:]) / 10

@@ -1,0 +1,17 @@
+"""Reproduction of *Scalable and Secure Aggregation in Distributed
+Networks* grown into a jax/Pallas system.
+
+``repro.api`` is the public front door: the :class:`SecureAggregator`
+facade over the composable ``Topology`` / ``Security`` / ``Wire`` /
+``Runtime`` config model (see README "Quickstart").  Subpackages hold
+the internals: ``core`` (plan compiler, engine, transports, overlay,
+masking, schedules), ``kernels`` (Pallas + jnp dispatch), ``service``
+(multi-session aggregation), ``launch`` (drivers), ``crypto``
+(threshold Paillier), plus the LM stack the secure training path
+drives.
+"""
+from repro.api import (AggConfig, ConfigError, Runtime, SecureAggregator,
+                       Security, Topology, Wire)
+
+__all__ = ["AggConfig", "ConfigError", "Runtime", "SecureAggregator",
+           "Security", "Topology", "Wire"]

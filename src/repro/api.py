@@ -1,0 +1,297 @@
+"""The one front door of the secure-aggregation system.
+
+Every scenario the repo serves — a one-shot tensor allreduce, the
+gradient-sync layer of a training step, a stream of concurrent
+aggregation queries — used to pick its own entry point (engine
+functions, hand-assembled ``SessionParams`` + ``BatchedExecutor``, the
+deleted ``secure_allreduce_*`` shims) and re-learn which of three config
+objects owned which knob.  :class:`SecureAggregator` replaces all of
+that with one facade over one composable config
+(:class:`~repro.core.plan.Topology` / ``Security`` / ``Wire`` /
+``Runtime`` -> :class:`~repro.core.plan.AggConfig`) and three verbs:
+
+  * :meth:`SecureAggregator.allreduce`    — one-shot aggregation of
+    per-node payloads (pytree or array), executed on the backend the
+    ``Runtime`` section picks: the sim oracle, manual-in-``shard_map``
+    (training steps), or a real device mesh;
+  * :meth:`SecureAggregator.open_session` — a query of the multi-session
+    service: the facade derives ``SessionParams`` from the *same* shared
+    config (no duplicated knobs) and owns the service lifecycle
+    (``seal`` / ``pump`` / ``drain`` / ``result`` delegate);
+  * :meth:`SecureAggregator.cost`         — the analytic bandwidth/round
+    account (``schedules.schedule_cost``) for this config at a given
+    payload length, exact to the engine's wire-byte account.
+
+Plans compile once per config (the shared ``compile_plan`` memo) and
+the facade keeps a keyed cache of jitted executables per payload shape,
+so repeated shapes never recompile — :meth:`SecureAggregator.stats`
+exposes both cache accounts plus the modeled wire bytes.
+
+    from repro.api import SecureAggregator, Topology
+
+    agg = SecureAggregator(topology=Topology(n_nodes=16))
+    per_node = agg.allreduce(xs)          # xs: (16, T) payloads
+    print(agg.cost(xs.shape[-1])["bytes_per_node"], agg.stats())
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine as _engine
+from repro.core.plan import (AggConfig, AggPlan, ConfigError, Runtime,
+                             Security, SessionMeta, Topology, Wire,
+                             compile_plan, plan_cache_stats)
+from repro.core.schedules import schedule_cost
+
+__all__ = ["AggConfig", "ConfigError", "Runtime", "SecureAggregator",
+           "Security", "SessionMeta", "Topology", "Wire", "compile_plan",
+           "plan_cache_stats"]
+
+
+class SecureAggregator:
+    """Facade over the plan/engine/transport core and the session
+    service, constructed from the composable config model.
+
+    Pass either a ready :class:`AggConfig` or the sections
+    (``topology`` required, ``security``/``wire`` optional); ``runtime``
+    picks the execution backend and kernel engine.  ``batching`` /
+    ``epochs`` configure the session service behind
+    :meth:`open_session` (ignored by the one-shot verbs)."""
+
+    def __init__(self, cfg: Optional[AggConfig] = None, *,
+                 topology: Optional[Topology] = None,
+                 security: Optional[Security] = None,
+                 wire: Optional[Wire] = None,
+                 runtime: Optional[Runtime] = None,
+                 batching=None, epochs=None):
+        if cfg is None:
+            if topology is None:
+                raise ConfigError(
+                    "SecureAggregator needs a config: pass cfg=AggConfig"
+                    "(...) or topology=Topology(n_nodes=...)")
+            cfg = AggConfig.compose(topology, security or Security(),
+                                    wire or Wire(), runtime)
+        elif topology is not None or security is not None \
+                or wire is not None:
+            raise ConfigError(
+                "pass either cfg= or the topology/security/wire "
+                "sections, not both (use cfg.replace(...) to override)")
+        elif runtime is not None and runtime.kernel_impl is not None:
+            cfg = cfg.replace(kernel_impl=runtime.kernel_impl)
+        self.cfg = cfg
+        self.runtime = runtime or Runtime()
+        self._plan: Optional[AggPlan] = None
+        self._mesh_tp = None
+        self._fns: dict = {}            # (backend, S, T, reveal) -> jitted
+        self._fn_hits = 0
+        self._fn_misses = 0
+        self._bytes_sent = 0            # modeled wire bytes, cumulative
+        self._batching = batching
+        self._epochs = epochs
+        self._svc = None
+
+    # -- config / plan ------------------------------------------------------
+    @property
+    def backend(self) -> str:
+        """Effective execution backend (``Runtime.backend`` resolved)."""
+        return self.runtime.resolve()
+
+    def plan(self) -> AggPlan:
+        """The compiled :class:`AggPlan` of this config (shared memo)."""
+        if self._plan is None:
+            self._plan = compile_plan(self.cfg)
+        return self._plan
+
+    def derive(self, **kw) -> "SecureAggregator":
+        """A sibling facade over ``cfg.derive(**kw)`` — same runtime and
+        service knobs, reclamped committee (caches start empty)."""
+        return SecureAggregator(self.cfg.derive(**kw), runtime=self.runtime,
+                                batching=self._batching, epochs=self._epochs)
+
+    # -- one-shot aggregation ----------------------------------------------
+    def allreduce(self, tree):
+        """One-shot secure allreduce of per-node payloads.
+
+        ``sim`` / ``mesh`` backends: ``tree`` is an array or pytree of
+        arrays whose leading axis is ``n_nodes`` (per-node payloads);
+        returns the same structure of per-node aggregated results —
+        bit-identical across backends and to a direct engine call.
+
+        ``manual`` backend: call INSIDE a ``shard_map`` manual over
+        ``Runtime.dp_axes`` with the rank-local pytree; chunk-pipelined
+        over ``Wire.chunk_elems`` (the training step's gradient path).
+        """
+        backend = self.backend
+        if backend == "manual":
+            return _engine.tree_allreduce(tree, self.cfg,
+                                          self.runtime.dp_axes)
+        leaves, treedef = jax.tree.flatten(tree)
+        if not leaves:
+            return tree
+        n = self.cfg.n_nodes
+        shapes = []
+        for leaf in leaves:
+            shape = jnp.shape(leaf)
+            if len(shape) < 1 or shape[0] != n:
+                raise ConfigError(
+                    f"allreduce payload leaves must have leading axis "
+                    f"n_nodes={n} (per-node values), got shape {shape}; "
+                    "for rank-local values use Runtime(backend='manual') "
+                    "inside shard_map")
+            shapes.append((shape, str(jnp.result_type(leaf))))
+        T = sum(int(np.prod(s[1:], dtype=np.int64)) for s, _ in shapes)
+        if T == 0:
+            return tree          # every leaf zero-size: nothing moves
+        fn = self._executable(backend, treedef, tuple(shapes))
+        self._bytes_sent += self.plan().wire_bytes(T)
+        return jax.tree.unflatten(treedef, fn(leaves))
+
+    def _executable(self, backend: str, treedef, shapes):
+        """One jitted executable per (backend, payload structure): pack,
+        engine run and unpack all trace into one cached call, so a
+        repeated shape costs a dict lookup plus the jit dispatch — the
+        facade's plan-cache-hit overhead the benchmark row tracks."""
+        key = (backend, treedef, shapes)
+        fn = self._fns.get(key)
+        if fn is not None:
+            self._fn_hits += 1
+            return fn
+        self._fn_misses += 1
+        plan = self.plan()
+        n = self.cfg.n_nodes
+        seed = self.cfg.seed
+        mt = None
+        if backend == "mesh":
+            if self._mesh_tp is None:
+                self._mesh_tp = _engine.MeshTransport(
+                    self.runtime.mesh, self.runtime.dp_axes,
+                    impl=self.cfg.kernel_impl)
+            mt = self._mesh_tp
+
+        @jax.jit
+        def fn(leaves):
+            flat = [jnp.reshape(leaf, (n, -1)).astype(jnp.float32)
+                    for leaf in leaves]
+            xs = (flat[0] if len(flat) == 1
+                  else jnp.concatenate(flat, axis=1))[None]
+            meta = SessionMeta.single(seed)
+            if mt is not None:
+                out = mt.execute(plan, xs, meta)[0]
+            else:
+                out, _ = _engine.sim_batch(plan, xs, meta)
+                out = out[0]
+            outs, off = [], 0
+            for leaf in leaves:
+                size = int(np.prod(leaf.shape[1:], dtype=np.int64))
+                outs.append(jnp.reshape(out[:, off:off + size], leaf.shape)
+                            .astype(jnp.result_type(leaf)))
+                off += size
+            return outs
+
+        self._fns[key] = fn
+        return fn
+
+    # -- session service ----------------------------------------------------
+    @property
+    def service(self):
+        """The lazily-built :class:`~repro.service.AggregationService`
+        behind :meth:`open_session` (None until the first session)."""
+        return self._svc
+
+    def open_session(self, elems: int, *, params=None, now=None):
+        """Open one aggregation query of ``elems`` elements per node.
+
+        ``params`` (a ``SessionParams``) overrides the defaults derived
+        from the shared config via ``SessionParams.from_config`` —
+        callers never re-specify n_nodes/cluster/redundancy/wire knobs.
+        A static ``Security.byzantine`` fault model is injected into the
+        session (as a ``SessionFaultPlan``), so both facade verbs honor
+        the same shared config.  Returns the
+        :class:`~repro.service.Session`; drive it with
+        ``contribute(...)`` then :meth:`seal` / :meth:`pump` /
+        :meth:`result` (or the service object directly)."""
+        from repro.service import SessionParams
+        if params is None:
+            params = SessionParams.from_config(self.cfg, elems)
+        session = self._service(params).open(params=params, now=now)
+        byz = self.cfg.byzantine
+        if byz.corrupt_ranks:
+            from repro.runtime.fault import SessionFaultPlan
+            session.inject_fault(SessionFaultPlan(
+                byzantine_slots=tuple(byz.corrupt_ranks),
+                byzantine_mode=byz.mode))
+        return session
+
+    def _service(self, default_params):
+        if self._svc is None:
+            from repro.service import AggregationService, BatchingConfig
+            backend = self.backend
+            if backend == "manual":
+                raise ConfigError(
+                    "sessions run on the batched executor, which has no "
+                    "'manual' backend — use Runtime(backend='sim') or "
+                    "Runtime(backend='mesh', mesh=...) for open_session "
+                    "(manual is the inside-shard_map allreduce path)")
+            self._svc = AggregationService(
+                default_params,
+                epochs=self._epochs,
+                batching=self._batching or BatchingConfig(),
+                kernel_impl=self.cfg.kernel_impl,
+                base_seed=self.cfg.seed,
+                transport="mesh" if backend == "mesh" else "sim",
+                mesh=self.runtime.mesh, dp_axes=self.runtime.dp_axes)
+        return self._svc
+
+    def seal(self, sid: int, now=None) -> None:
+        self._require_service().seal(sid, now=now)
+
+    def pump(self, now=None, force: bool = False) -> int:
+        return self._require_service().pump(now=now, force=force)
+
+    def drain(self) -> int:
+        return self._require_service().drain()
+
+    def result(self, sid: int, evict: bool = False):
+        return self._require_service().result(sid, evict=evict)
+
+    def _require_service(self):
+        if self._svc is None:
+            raise ConfigError("no session opened yet — call "
+                              "open_session(elems) first")
+        return self._svc
+
+    # -- accounting ---------------------------------------------------------
+    def cost(self, elems: int) -> dict:
+        """Analytic per-run communication account of this config at
+        ``elems`` float32 payload elements (rounds, total bytes, bytes
+        per node) — ``schedules.schedule_cost`` with the exact digest
+        parameters, equal to the engine's executed wire bytes."""
+        cfg = self.cfg
+        return schedule_cost(cfg.schedule, cfg.n_clusters, cfg.cluster_size,
+                             cfg.redundancy, payload_bytes=4 * elems,
+                             digest=cfg.transport == "digest",
+                             digest_bytes=4 * cfg.digest_words,
+                             digest_backup=cfg.digest_backup)
+
+    def stats(self) -> dict:
+        """Cache + bandwidth accounts: the shared plan-cache counters,
+        this facade's jitted-executable cache, cumulative modeled wire
+        bytes of the one-shot sim/mesh verbs (``AggPlan.wire_bytes``;
+        manual-backend calls run inside the caller's ``shard_map`` and
+        are accounted at trace time by the engine's
+        ``Transport.bytes_sent`` instead), and the service stats once a
+        session has been opened."""
+        out = {
+            "backend": self.backend,
+            "plan_cache": plan_cache_stats(),
+            "fn_cache": {"hits": self._fn_hits, "misses": self._fn_misses,
+                         "size": len(self._fns)},
+            "bytes_sent": self._bytes_sent,
+        }
+        if self._svc is not None:
+            out["service"] = self._svc.stats
+        return out

@@ -364,9 +364,8 @@ def sim_batch(plan: AggPlan, xs: jax.Array, meta: SessionMeta, *,
     session/per-node payloads -> ((S, n_nodes, T) per-node results — or
     (S, T) with ``reveal_only`` — , the SimTransport, whose
     ``bytes_sent`` carries the hop bandwidth account).  The one sim
-    invocation recipe the conformance harness, selftest and benchmarks
-    all share (the historical ``simulate_secure_allreduce*`` shims wrap
-    it)."""
+    invocation recipe the conformance harness, the facade's sim backend
+    and the benchmarks all share."""
     S, n, T = xs.shape
     assert n == plan.n_nodes, (n, plan.n_nodes)
     tp = SimTransport(plan, S=S, impl=impl)
@@ -378,8 +377,8 @@ def sim_batch(plan: AggPlan, xs: jax.Array, meta: SessionMeta, *,
 def manual_allreduce(x: jax.Array, cfg, dp_axes: Sequence[str]) -> jax.Array:
     """Exact-sum allreduce of ``x`` over ``dp_axes`` via the paper
     schedule; call inside a shard_map manual over ``dp_axes``.  The
-    engine-native entry the training step uses (the historical
-    ``secure_allreduce_manual`` shim wraps this)."""
+    engine-native entry the training step and the facade's "manual"
+    backend use."""
     dp_axes = tuple(dp_axes)
     plan = compile_plan(cfg)
     tp = ManualTransport(plan, dp_axes)

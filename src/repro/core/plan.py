@@ -1,4 +1,4 @@
-"""Plan compiler for the secure-allreduce protocol core.
+"""Config model + plan compiler for the secure-allreduce protocol core.
 
 The paper's algorithm is one protocol, but the repo used to run it
 through four diverging code paths (manual/shard_map, chunked pytree,
@@ -8,6 +8,30 @@ makes the committee logic independent of the communication substrate
 *static* about a run is compiled here, once, into an :class:`AggPlan`
 that ``core/engine.py`` executes stage-by-stage against any
 ``Transport``.
+
+This module also owns the *config model* the whole system is
+parameterized by.  One run is described by four small frozen sections —
+
+  * :class:`Topology` — who aggregates: ``n_nodes``, ``cluster_size``,
+    the voted ``schedule``;
+  * :class:`Security` — what the protocol defends: vote ``redundancy``,
+    ``masking`` mode (+ quantization ``clip``/``guard_bits``), the pad
+    ``seed``, the static ``byzantine`` fault model;
+  * :class:`Wire`     — what the hops ship: ``transport`` (full r-copy
+    vs digest), ``digest_words``/``digest_backup``, ``chunk_elems``;
+  * :class:`Runtime`  — where it executes: kernel engine override and
+    the transport ``backend`` (sim oracle / manual-in-shard_map / mesh)
+    with its mesh + dp axes —
+
+that compose into the flat :class:`AggConfig` the compiler consumes
+(``AggConfig.compose`` / the ``.topology``/``.security``/``.wire``
+section views).  Invalid knob combinations raise :class:`ConfigError`
+with an actionable message (never a bare ``assert``, which would vanish
+under ``python -O``); ``cfg.replace(...)`` re-validates and
+``cfg.derive(n_nodes=...)`` reclamps the committee shape for per-axis /
+per-session overrides.  ``compile_plan`` memoizes per config, so every
+caller — facade, service executor, training step — shares one plan per
+shape (see :func:`plan_cache_stats`).
 
 A plan captures:
 
@@ -37,6 +61,278 @@ import numpy as np
 
 from repro.core import schedules as SCH
 from repro.core.byzantine import ByzantineSpec
+from repro.core.masking import MaskConfig
+
+_DEFAULT_SEED = 0x5EC0A66
+
+
+# ---------------------------------------------------------------------------
+# Config model: four composable sections -> one flat AggConfig
+# ---------------------------------------------------------------------------
+
+
+class ConfigError(ValueError):
+    """An invalid protocol-config knob (or knob combination).
+
+    Raised eagerly at construction time by :class:`Topology` /
+    :class:`Security` / :class:`Wire` / :class:`Runtime` /
+    :class:`AggConfig` — a real exception, not an ``assert``, so the
+    checks survive ``python -O`` and the message always says which knob
+    to fix."""
+
+
+def _require(cond: bool, msg: str) -> None:
+    if not cond:
+        raise ConfigError(msg)
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """Who aggregates: the committee layout of one protocol run."""
+    n_nodes: int                  # total DP ranks (g * c)
+    cluster_size: int = 4         # c  (paper: O(log n))
+    schedule: str = "ring"        # ring | tree | butterfly
+
+    def __post_init__(self):
+        _require(self.n_nodes >= 1,
+                 f"n_nodes must be >= 1, got {self.n_nodes}")
+        _require(self.cluster_size >= 1,
+                 f"cluster_size must be >= 1, got {self.cluster_size}")
+        _require(self.n_nodes % self.cluster_size == 0,
+                 f"n_nodes={self.n_nodes} must be a multiple of "
+                 f"cluster_size={self.cluster_size} (clusters are "
+                 "contiguous rank groups); pick a dividing cluster_size "
+                 "or use cfg.derive(n_nodes=...) to reclamp")
+        _require(self.schedule in SCH.SCHEDULES,
+                 f"unknown schedule {self.schedule!r}; pick one of "
+                 f"{sorted(SCH.SCHEDULES)}")
+        g = self.n_nodes // self.cluster_size
+        _require(self.schedule != "butterfly" or g == 1 or g & (g - 1) == 0,
+                 f"schedule='butterfly' needs a power-of-two cluster "
+                 f"count, got g={g} (= n_nodes/cluster_size); use 'ring' "
+                 "or 'tree', or adjust the committee shape")
+
+    @property
+    def n_clusters(self) -> int:
+        return self.n_nodes // self.cluster_size
+
+
+@dataclasses.dataclass(frozen=True)
+class Security:
+    """What the protocol defends: voting, masking, the fault model."""
+    redundancy: int = 3           # r odd: copies per vote
+    masking: str = "global"       # global | pairwise | none
+    clip: float = 1.0             # quantization range [-clip, clip]
+    guard_bits: int = 2           # summation headroom beyond ceil(log2 n)
+    seed: int = _DEFAULT_SEED     # pad-stream base key
+    byzantine: ByzantineSpec = ByzantineSpec()
+
+    def __post_init__(self):
+        _require(self.redundancy >= 1,
+                 f"redundancy must be >= 1, got {self.redundancy}")
+        _require(self.redundancy % 2 == 1,
+                 f"redundancy={self.redundancy} must be odd — the "
+                 "element-wise majority vote needs an unambiguous median")
+        _require(self.masking in ("global", "pairwise", "none"),
+                 f"unknown masking {self.masking!r}; pick one of "
+                 "['global', 'pairwise', 'none']")
+        _require(self.clip > 0,
+                 f"clip must be > 0 (quantization range), got {self.clip}")
+        _require(self.guard_bits >= 0,
+                 f"guard_bits must be >= 0, got {self.guard_bits}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Wire:
+    """What the voted hops ship over the wire."""
+    transport: str = "full"       # full | digest
+    digest_words: int = 16        # words per row digest (digest transport)
+    # digest transport: the plan compiles a shift-1 full-payload backup
+    # stream (``HopRound.backup_perm``) shipped eagerly as a second
+    # static ppermute, so a digest-rejected payload is replaced in-band
+    # (SPMD cannot fetch lazily).  On by default — it is what lets the
+    # digest cells absorb payload corruption in the conformance grid.
+    # Set False for the honest-path bandwidth (1 payload + r digests);
+    # the unhappy path then costs one retransmission round, accounted
+    # analytically in ``schedules.schedule_cost``.
+    digest_backup: bool = True
+    # chunked transport: pytree payloads are packed into equal chunks of
+    # this many float32 elements; each hop is pipelined chunk-by-chunk.
+    chunk_elems: int = 1 << 16
+
+    def __post_init__(self):
+        _require(self.transport in ("full", "digest"),
+                 f"unknown transport {self.transport!r}; pick 'full' "
+                 "(r payload copies per hop) or 'digest' (1 payload + "
+                 "r digests)")
+        _require(self.transport != "digest" or self.digest_words >= 1,
+                 f"transport='digest' needs digest_words >= 1 (got "
+                 f"{self.digest_words}) — zero-width digests cannot "
+                 "vote; use transport='full' if you want no digests")
+        _require(self.chunk_elems >= 1,
+                 f"chunk_elems must be >= 1, got {self.chunk_elems}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Runtime:
+    """Where the protocol executes (facade-level; never part of a plan).
+
+    ``backend`` picks the engine transport the one-shot facade verbs
+    run on: ``"sim"`` (single-device oracle), ``"manual"`` (call inside
+    an existing shard_map manual over ``dp_axes``), ``"mesh"`` (the
+    facade builds the shard_map over ``mesh``), or ``"auto"`` (mesh
+    when one is given, sim otherwise)."""
+    kernel_impl: Optional[str] = None   # pallas | pallas_interpret | jnp
+    backend: str = "auto"               # auto | sim | manual | mesh
+    mesh: Optional[object] = None       # jax.sharding.Mesh for "mesh"
+    dp_axes: tuple = ("data",)
+
+    def __post_init__(self):
+        _require(self.backend in ("auto", "sim", "manual", "mesh"),
+                 f"unknown backend {self.backend!r}; pick one of "
+                 "['auto', 'sim', 'manual', 'mesh']")
+        _require(self.kernel_impl in (None, "pallas", "pallas_interpret",
+                                      "jnp"),
+                 f"unknown kernel_impl {self.kernel_impl!r}; pick one of "
+                 "[None, 'pallas', 'pallas_interpret', 'jnp']")
+        _require(self.backend != "mesh" or self.mesh is not None,
+                 "backend='mesh' needs a mesh: pass "
+                 "Runtime(backend='mesh', mesh=compat.node_mesh(n))")
+        object.__setattr__(self, "dp_axes", tuple(self.dp_axes))
+
+    def resolve(self) -> str:
+        """The effective backend ('auto' resolved)."""
+        if self.backend != "auto":
+            return self.backend
+        return "mesh" if self.mesh is not None else "sim"
+
+
+@dataclasses.dataclass(frozen=True)
+class AggConfig:
+    """Flat, hashable protocol config the plan compiler consumes.
+
+    The four sections above are the *public* composition story
+    (``AggConfig.compose(topology, security, wire, runtime)``; the
+    ``.topology``/``.security``/``.wire`` properties give the section
+    views back); the flat field list keeps the config a plain hashable
+    dataclass — the plan-cache key.  Validation happens once, in the
+    sections, plus the cross-section checks below; every path raises
+    :class:`ConfigError`."""
+    n_nodes: int
+    cluster_size: int = 4
+    redundancy: int = 3
+    schedule: str = "ring"
+    transport: str = "full"
+    digest_words: int = 16
+    digest_backup: bool = True
+    masking: str = "global"
+    clip: float = 1.0
+    guard_bits: int = 2
+    seed: int = _DEFAULT_SEED
+    byzantine: ByzantineSpec = ByzantineSpec()
+    chunk_elems: int = 1 << 16
+    # kernel engine override (None = auto per backend; see kernels/backend)
+    kernel_impl: Optional[str] = None
+
+    def __post_init__(self):
+        # section validation (each raises ConfigError with the fix)
+        self.topology, self.security, self.wire  # noqa: B018
+        _require(self.kernel_impl in (None, "pallas", "pallas_interpret",
+                                      "jnp"),
+                 f"unknown kernel_impl {self.kernel_impl!r}")
+        # cross-section: a vote's r copies come from distinct members of
+        # one cluster, so r cannot exceed the cluster size
+        _require(self.redundancy <= self.cluster_size,
+                 f"redundancy={self.redundancy} > cluster_size="
+                 f"{self.cluster_size}: the r redundant copies are "
+                 "distinct member shifts within one cluster; lower "
+                 "redundancy or grow the cluster")
+
+    # -- section views ------------------------------------------------------
+    @property
+    def topology(self) -> Topology:
+        return Topology(n_nodes=self.n_nodes, cluster_size=self.cluster_size,
+                        schedule=self.schedule)
+
+    @property
+    def security(self) -> Security:
+        return Security(redundancy=self.redundancy, masking=self.masking,
+                        clip=self.clip, guard_bits=self.guard_bits,
+                        seed=self.seed, byzantine=self.byzantine)
+
+    @property
+    def wire(self) -> Wire:
+        return Wire(transport=self.transport, digest_words=self.digest_words,
+                    digest_backup=self.digest_backup,
+                    chunk_elems=self.chunk_elems)
+
+    @classmethod
+    def compose(cls, topology: Topology, security: Security = Security(),
+                wire: Wire = Wire(),
+                runtime: Optional[Runtime] = None) -> "AggConfig":
+        """The four config sections -> one flat plan-cacheable config.
+        Only ``runtime.kernel_impl`` rides along — backend/mesh stay at
+        the facade (they never change the compiled plan)."""
+        return cls(
+            n_nodes=topology.n_nodes, cluster_size=topology.cluster_size,
+            schedule=topology.schedule,
+            redundancy=security.redundancy, masking=security.masking,
+            clip=security.clip, guard_bits=security.guard_bits,
+            seed=security.seed, byzantine=security.byzantine,
+            transport=wire.transport, digest_words=wire.digest_words,
+            digest_backup=wire.digest_backup, chunk_elems=wire.chunk_elems,
+            kernel_impl=runtime.kernel_impl if runtime is not None else None)
+
+    # -- override story -----------------------------------------------------
+    def replace(self, **kw) -> "AggConfig":
+        """Validated ``dataclasses.replace`` accepting flat knobs and/or
+        whole sections (``topology=`` / ``security=`` / ``wire=``).
+        Sections expand first, explicit flat knobs win — so
+        ``replace(security=Security(redundancy=1), clip=9.0)`` keeps
+        ``clip=9.0``."""
+        base = {}
+        for name in ("topology", "security", "wire"):
+            sec = kw.pop(name, None)
+            if sec is not None:
+                for f in dataclasses.fields(sec):
+                    base[f.name] = getattr(sec, f.name)
+        base.update(kw)
+        return dataclasses.replace(self, **base)
+
+    def derive(self, **kw) -> "AggConfig":
+        """Per-axis / per-session override that *reclamps* the committee
+        shape: shrinking ``n_nodes`` pulls ``cluster_size`` down to the
+        largest divisor and ``redundancy`` down to the largest odd value
+        that fits (unless explicitly overridden), and drops static
+        byzantine ranks that fall out of range — the training step's
+        per-sync-axis configs derive this way."""
+        if "n_nodes" in kw:
+            n = kw["n_nodes"]
+            _require(n >= 1, f"n_nodes must be >= 1, got {n}")
+            c = kw.get("cluster_size", min(self.cluster_size, n))
+            if "cluster_size" not in kw:
+                while n % c:
+                    c -= 1
+                kw["cluster_size"] = c
+            if "redundancy" not in kw:
+                r = min(self.redundancy, c)
+                kw["redundancy"] = max(r - (1 - r % 2), 1)
+            if "byzantine" not in kw and self.byzantine.corrupt_ranks:
+                keep = tuple(x for x in self.byzantine.corrupt_ranks
+                             if x < n)
+                kw["byzantine"] = dataclasses.replace(
+                    self.byzantine, corrupt_ranks=keep)
+        return self.replace(**kw)
+
+    # -- derived views ------------------------------------------------------
+    @property
+    def n_clusters(self) -> int:
+        return self.n_nodes // self.cluster_size
+
+    def mask_cfg(self) -> MaskConfig:
+        return MaskConfig(n_nodes=self.n_nodes, clip=self.clip,
+                          guard_bits=self.guard_bits, mode=self.masking,
+                          cluster_size=self.cluster_size, seed=self.seed)
 
 
 # ---------------------------------------------------------------------------
@@ -157,7 +453,7 @@ class SessionMeta:
 @dataclasses.dataclass(frozen=True)
 class AggPlan:
     """Compiled, transport-independent form of one protocol run."""
-    cfg: "AggConfig"                          # noqa: F821 (core import cycle)
+    cfg: AggConfig
     groups: tuple[tuple[int, ...], ...]       # intra-cluster psum groups
     rounds: tuple[HopRound, ...]
     faults: tuple[ByzantineSpec, ...]         # static per-run fault model
@@ -183,8 +479,42 @@ class AggPlan:
         chunked streams reproduce the monolithic stream exactly."""
         return chunk_idx * chunk_elems
 
+    def wire_bytes(self, T: int, S: int = 1, chunks: int = 1) -> int:
+        """Bytes this plan moves for ``S`` sessions of ``T`` float32
+        elements shipped as ``chunks`` equal hops — the same per-hop
+        account ``Transport._account`` accumulates at trace time (the
+        conformance suite pins both against ``schedules.schedule_cost``).
+        Note the digest transport ships one digest set *per chunk*."""
+        cfg = self.cfg
+        words = 0
+        for rnd in self.rounds:
+            if cfg.transport == "full":
+                words += sum(len(p) for p in rnd.perms) * T
+            else:
+                words += len(rnd.perms[0]) * T
+                words += (sum(len(p) for p in rnd.perms)
+                          * cfg.digest_words * chunks)
+                if cfg.digest_backup:
+                    words += len(rnd.backup_perm) * T
+        return 4 * words * S
 
-def compile_plan(cfg, *, epoch=None, fault=None) -> AggPlan:
+
+_PLAN_CACHE: dict[AggConfig, AggPlan] = {}
+_PLAN_STATS = {"hits": 0, "misses": 0}
+
+
+def plan_cache_stats() -> dict:
+    """Hit/miss/size counters of the shared ``compile_plan`` memo —
+    surfaced by ``SecureAggregator.stats()`` / ``AggregationService``."""
+    return dict(_PLAN_STATS, size=len(_PLAN_CACHE))
+
+
+def clear_plan_cache() -> None:
+    _PLAN_CACHE.clear()
+    _PLAN_STATS.update(hits=0, misses=0)
+
+
+def compile_plan(cfg: AggConfig, *, epoch=None, fault=None) -> AggPlan:
     """AggConfig + overlay snapshot + fault plan -> executable AggPlan.
 
     ``epoch`` (optional): an object with ``n_nodes`` / ``cluster_size``
@@ -194,6 +524,13 @@ def compile_plan(cfg, *, epoch=None, fault=None) -> AggPlan:
     Byzantine slots are folded into the plan's static fault model (the
     service instead passes *runtime* masks via :class:`SessionMeta`, so
     fault-pattern churn never retraces)."""
+    cacheable = epoch is None and fault is None
+    if cacheable:
+        hit = _PLAN_CACHE.get(cfg)
+        if hit is not None:
+            _PLAN_STATS["hits"] += 1
+            return hit
+        _PLAN_STATS["misses"] += 1
     n, c, g, r = cfg.n_nodes, cfg.cluster_size, cfg.n_clusters, cfg.redundancy
     if epoch is not None:
         assert epoch.n_nodes == n, (epoch.n_nodes, n)
@@ -239,5 +576,8 @@ def compile_plan(cfg, *, epoch=None, fault=None) -> AggPlan:
         seen |= set(sp.corrupt_ranks)
 
     groups = tuple(tuple(range(cl * c, (cl + 1) * c)) for cl in range(g))
-    return AggPlan(cfg=cfg, groups=groups, rounds=tuple(rounds),
+    plan = AggPlan(cfg=cfg, groups=groups, rounds=tuple(rounds),
                    faults=tuple(faults))
+    if cacheable:
+        _PLAN_CACHE[cfg] = plan
+    return plan

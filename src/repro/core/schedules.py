@@ -3,7 +3,7 @@
 A schedule is a list of *rounds*; each round says, for every cluster, which
 cluster it receives a partial aggregate from (or None).  Schedules operate
 at cluster granularity — the member-level fan-out (redundancy ``r`` copies
-for the majority vote) is applied by ``secure_allreduce`` when turning a
+for the majority vote) is applied by ``core.plan.compile_plan`` when turning a
 round into ``lax.ppermute`` permutations.
 
   * ring      — the paper's Step 3 executed as a concurrent rotation

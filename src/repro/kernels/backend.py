@@ -9,7 +9,7 @@ kernel executes for the current process:
                            the kernels by construction; fastest option on
                            CPU/GPU where no Mosaic lowering exists).
 
-The protocol layer (``core/secure_allreduce``) and the jit'd op wrappers
+The protocol layer (``core/engine``) and the jit'd op wrappers
 ask :func:`resolve` instead of hard-coding ``interpret=True``, so the same
 program compiles natively on TPU and falls back gracefully elsewhere.
 The batched multi-session ops (``*_batch`` in ``kernels/secure_agg``)

@@ -26,7 +26,7 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
 from repro.configs import SHAPES, get_config, list_archs, supported_shapes  # noqa: E402
-from repro.core.secure_allreduce import AggConfig  # noqa: E402
+from repro.core.plan import AggConfig  # noqa: E402
 from repro.launch import steps as ST  # noqa: E402
 from repro.launch.mesh import dp_axes_of, make_production_mesh  # noqa: E402
 from repro.roofline import analysis as RA  # noqa: E402

@@ -19,7 +19,7 @@ import jax.numpy as jnp  # noqa: E402
 
 from repro.configs import SHAPES, get_config  # noqa: E402
 from repro.configs.base import MoEConfig  # noqa: E402
-from repro.core.secure_allreduce import AggConfig  # noqa: E402
+from repro.core.plan import AggConfig  # noqa: E402
 from repro.launch import steps as ST  # noqa: E402
 from repro.launch.dryrun import run_cell  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402

@@ -24,11 +24,9 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
+from repro.api import AggConfig, Runtime, SecureAggregator  # noqa: E402
 from repro.core.byzantine import ByzantineSpec  # noqa: E402
-from repro.core.engine import MeshTransport, sim_batch  # noqa: E402
 from repro.core.masking import quantization_error_bound  # noqa: E402
-from repro.core.plan import SessionMeta, compile_plan  # noqa: E402
-from repro.core.secure_allreduce import AggConfig  # noqa: E402
 
 
 def check(name: str, ok: bool, detail: str = ""):
@@ -39,18 +37,17 @@ def check(name: str, ok: bool, detail: str = ""):
 
 
 def run_sim(cfg: AggConfig, xs) -> np.ndarray:
-    """Single-device oracle: (n, T) payloads -> (n, T) per-node results."""
-    out, _ = sim_batch(compile_plan(cfg), jnp.asarray(xs)[None],
-                       SessionMeta.single(cfg.seed))
-    return np.asarray(out[0])
+    """Single-device oracle via the facade: (n, T) -> (n, T) results."""
+    agg = SecureAggregator(cfg, runtime=Runtime(backend="sim"))
+    return np.asarray(agg.allreduce(jnp.asarray(xs)))
 
 
 def run_mesh(cfg: AggConfig, mesh, axes, xs) -> np.ndarray:
-    """Distributed: the same plan under shard_map over a real dp mesh."""
-    plan = compile_plan(cfg)
-    mt = MeshTransport(mesh, axes)
-    return np.asarray(mt.execute(plan, jnp.asarray(xs)[None],
-                                 SessionMeta.single(cfg.seed))[0])
+    """Distributed: the same plan under shard_map over a real dp mesh —
+    the facade's mesh backend."""
+    agg = SecureAggregator(cfg, runtime=Runtime(backend="mesh", mesh=mesh,
+                                                dp_axes=axes))
+    return np.asarray(agg.allreduce(jnp.asarray(xs)))
 
 
 def main():

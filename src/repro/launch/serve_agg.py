@@ -4,6 +4,9 @@ sessions under synthetic load, batched by the admission scheduler.
     PYTHONPATH=src python -m repro.launch.serve_agg --sessions 64 \
         --batch 16 --elems 1024 --overlay-n 256 --churn-every 16
 
+Drives everything through the ``repro.api.SecureAggregator`` facade
+(one config: Topology/Security/Runtime sections; ``open_session`` /
+``seal`` / ``pump`` / ``result`` verbs).
 Opens ``--sessions`` sessions against a cuckoo-overlay network, feeds
 every protocol slot's contribution, seals them as load arrives, and lets
 the size/age watermarks of the admission queue decide when batches
@@ -25,36 +28,36 @@ import time
 
 import numpy as np
 
+from repro.api import Runtime, SecureAggregator, Security, Topology
 from repro.core.overlay import build_overlay
 from repro.launch.mesh import make_host_mesh
-from repro.service import (AggregationService, BatchingConfig, EpochManager,
-                           SessionParams)
+from repro.service import BatchingConfig, EpochManager
 
 
-def run_load(svc: AggregationService, em: EpochManager, *, sessions: int,
+def run_load(agg: SecureAggregator, em: EpochManager, *, sessions: int,
              elems: int, churn_every: int, seed: int = 0) -> dict:
     rng = np.random.default_rng(seed)
-    n = svc.default_params.n_nodes
+    n = agg.cfg.n_nodes
     expected: dict[int, np.ndarray] = {}
     t0 = time.monotonic()
     for i in range(sessions):
         if churn_every and i and i % churn_every == 0:
             em.churn(joins=4, leaves=4, honest_join_frac=1.0)
-        s = svc.open(now=time.monotonic())
+        s = agg.open_session(elems, now=time.monotonic())
         vals = rng.integers(0, 2, size=(n, elems)).astype(np.float32)
         for slot in range(n):
             s.contribute(slot, vals[slot])
         expected[s.sid] = vals.sum(0)
-        svc.seal(s.sid, now=time.monotonic())
-        svc.pump()                       # watermark-driven flushes
-    svc.drain()
+        agg.seal(s.sid, now=time.monotonic())
+        agg.pump()                       # watermark-driven flushes
+    agg.drain()
     wall = time.monotonic() - t0
     exact = sum(
-        bool(np.allclose(svc.result(sid), want, atol=1e-3))
+        bool(np.allclose(agg.result(sid), want, atol=1e-3))
         for sid, want in expected.items())
     return {"wall_s": wall, "sessions": sessions,
             "sessions_per_s": sessions / max(wall, 1e-9),
-            "exact": exact, "stats": svc.stats}
+            "exact": exact, "stats": agg.stats()["service"]}
 
 
 def main() -> None:
@@ -87,23 +90,24 @@ def main() -> None:
     ov = build_overlay(args.overlay_n, args.tau, seed=42)
     em = EpochManager(ov, cluster_size=args.cluster_size)
     snap = em.current()
-    params = SessionParams(n_nodes=snap.n_nodes, elems=args.elems,
-                           cluster_size=args.cluster_size,
-                           redundancy=args.redundancy,
-                           schedule=args.schedule)
     agg_mesh = None
     if args.transport == "mesh":
         from repro.runtime import compat
         agg_mesh = compat.node_mesh(snap.n_nodes)
-    svc = AggregationService(
-        params, epochs=em,
-        batching=BatchingConfig(max_batch=args.batch, max_age=args.max_age),
-        kernel_impl=args.impl, transport=args.transport, mesh=agg_mesh)
+    agg = SecureAggregator(
+        topology=Topology(n_nodes=snap.n_nodes,
+                          cluster_size=args.cluster_size,
+                          schedule=args.schedule),
+        security=Security(redundancy=args.redundancy),
+        runtime=Runtime(kernel_impl=args.impl, backend=args.transport,
+                        mesh=agg_mesh),
+        epochs=em,
+        batching=BatchingConfig(max_batch=args.batch, max_age=args.max_age))
     print(f"service: g={snap.n_clusters} clusters x c={args.cluster_size} "
           f"-> {snap.n_nodes} slots, T={args.elems}, r={args.redundancy}, "
           f"transport={args.transport}")
 
-    out = run_load(svc, em, sessions=args.sessions, elems=args.elems,
+    out = run_load(agg, em, sessions=args.sessions, elems=args.elems,
                    churn_every=args.churn_every)
     hist = collections.Counter(out["stats"]["batch_sizes"])
     print(f"{out['sessions']} sessions in {out['wall_s']:.2f}s "

@@ -8,8 +8,6 @@ axes), which are aggregated by the paper's voted cluster schedule.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Optional
 
 import jax
@@ -19,7 +17,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
 from repro.core.engine import tree_allreduce
-from repro.core.secure_allreduce import AggConfig
+from repro.core.plan import AggConfig
 from repro.launch import sharding as SH
 from repro.launch.mesh import dp_axes_of
 from repro.models import model as M
@@ -191,13 +189,9 @@ def build_secure_train_step(cfg: ModelConfig, mesh: jax.sharding.Mesh,
                 for a in ax:
                     n_ax *= mesh.shape[a]
                 sub = {str(i): flat[i] for i in idxs}
-                agg_ax = dataclasses.replace(
-                    agg, n_nodes=n_ax,
-                    cluster_size=min(agg.cluster_size, n_ax),
-                    redundancy=min(agg.redundancy,
-                                   min(agg.cluster_size, n_ax) | 1),
-                )
-                summed = tree_allreduce(sub, agg_ax, ax)
+                # per-sync-axis committee: derive() reclamps the cluster
+                # size / vote redundancy to whatever the axis supports
+                summed = tree_allreduce(sub, agg.derive(n_nodes=n_ax), ax)
                 for i in idxs:
                     out[i] = summed[str(i)]
             grads = jax.tree.unflatten(treedef, out)

@@ -23,7 +23,7 @@ from repro.checkpoint import ckpt as CK
 from repro.configs import SHAPES, get_config, get_smoke_config
 from repro.configs.base import ShapeConfig
 from repro.core.byzantine import ByzantineSpec
-from repro.core.secure_allreduce import AggConfig
+from repro.core.plan import AggConfig
 from repro.data.pipeline import DataConfig, SyntheticStream
 from repro.launch import steps as ST
 from repro.launch.mesh import dp_axes_of, make_host_mesh
@@ -48,10 +48,9 @@ def train_loop(cfg, mesh, *, steps: int, shape: ShapeConfig,
     if secure:
         cfg = dataclasses.replace(cfg, dp_mode="replicated")
         if agg is None:
-            c = 4 if dp_n % 4 == 0 else (2 if dp_n % 2 == 0 else 1)
-            agg = AggConfig(n_nodes=dp_n, cluster_size=c,
-                            redundancy=min(3, c) | 1 if c > 1 else 1,
-                            clip=8.0)
+            # default committee: derive() reclamps cluster_size=4 / r=3
+            # to whatever the dp extent supports (divisor, odd r <= c)
+            agg = AggConfig(n_nodes=4, clip=8.0).derive(n_nodes=dp_n)
         step_fn, (p_sh, o_sh, b_sh), opt_cfg = ST.build_secure_train_step(
             cfg, mesh, agg, opt_cfg=opt_cfg, shape=shape, donate=False)
     else:

@@ -19,6 +19,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from repro.core.plan import plan_cache_stats
 from repro.service.epochs import EpochManager, EpochSnapshot
 from repro.service.executor import (AdmissionQueue, BatchedExecutor,
                                     BatchingConfig)
@@ -140,6 +141,8 @@ class AggregationService:
             "pending": self.queue.depth(),
             "batch_sizes": tuple(self.queue.batch_sizes),
             "queue": self.queue.metrics,
+            "executor_cache": self.executor.cache_stats,
+            "plan_cache": plan_cache_stats(),
             "epoch": (self.epochs.current().epoch
                       if self.epochs is not None else None),
         }

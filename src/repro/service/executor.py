@@ -108,6 +108,15 @@ class BatchedExecutor:
         self._fns: dict = {}
         self.batches_run = 0
         self.sessions_run = 0
+        self.fn_cache_hits = 0
+        self.fn_cache_misses = 0
+
+    @property
+    def cache_stats(self) -> dict:
+        """Compiled-executable cache account (plan compilation has its
+        own shared memo — see ``core.plan.plan_cache_stats``)."""
+        return {"hits": self.fn_cache_hits, "misses": self.fn_cache_misses,
+                "size": len(self._fns)}
 
     def _compiled(self, template: Session, padded: int, S: int,
                   modes: frozenset) -> Callable:
@@ -116,7 +125,10 @@ class BatchedExecutor:
         # (<= 8 combinations) is part of the executable's identity
         key = (template.params.batch_key(padded), S, modes)
         fn = self._fns.get(key)
-        if fn is None:
+        if fn is not None:
+            self.fn_cache_hits += 1
+        else:
+            self.fn_cache_misses += 1
             cfg = template.params.agg_config(self.kernel_impl)
             plan = compile_plan(cfg)
             if self.transport == "mesh":

@@ -26,7 +26,7 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core.secure_allreduce import AggConfig
+from repro.core.plan import AggConfig, _require
 from repro.runtime.fault import SessionFaultPlan
 
 _MASK32 = 0xFFFFFFFF
@@ -77,10 +77,26 @@ class SessionParams:
     digest_backup: bool = True
 
     def __post_init__(self):
-        assert self.elems >= 1
-        AggConfig(n_nodes=self.n_nodes, cluster_size=self.cluster_size,
-                  redundancy=self.redundancy, schedule=self.schedule,
-                  transport=self.transport)
+        _require(self.elems >= 1,
+                 f"session payload length elems must be >= 1, got "
+                 f"{self.elems}")
+        # the protocol knobs validate as one config (raises ConfigError)
+        self.agg_config()
+
+    @classmethod
+    def from_config(cls, cfg: AggConfig, elems: int) -> "SessionParams":
+        """Derive session parameters from the shared protocol config —
+        the facade's ``open_session`` path: every protocol knob has ONE
+        home (the config sections), sessions only add the payload
+        length."""
+        _require(isinstance(cfg, AggConfig),
+                 f"from_config needs an AggConfig, got {type(cfg).__name__}")
+        return cls(n_nodes=cfg.n_nodes, elems=elems,
+                   cluster_size=cfg.cluster_size, redundancy=cfg.redundancy,
+                   schedule=cfg.schedule, clip=cfg.clip,
+                   guard_bits=cfg.guard_bits, masking=cfg.masking,
+                   transport=cfg.transport, digest_words=cfg.digest_words,
+                   digest_backup=cfg.digest_backup)
 
     def agg_config(self, kernel_impl: Optional[str] = None) -> AggConfig:
         return AggConfig(n_nodes=self.n_nodes,

@@ -94,10 +94,12 @@ def session_faults(n: int, c: int, r: int,
     return [adv.specs(n, c, r) for adv in adversaries]
 
 
-def run_sim_batch(cfg, xs, seeds=None, faults=None, reveal_only=False):
-    """Engine-native batched oracle run (no deprecation shims):
-    (S, n, T) payloads -> (np result, bytes_sent)."""
+def run_sim_batch(cfg, xs, seeds=None, offsets=None, faults=None,
+                  reveal_only=False):
+    """Engine-native batched oracle run — THE one sim recipe every test
+    file shares: (S, n, T) payloads -> (np result, bytes_sent)."""
     S, n = xs.shape[:2]
-    meta = SessionMeta.build(S, n, seed=cfg.seed, seeds=seeds, faults=faults)
+    meta = SessionMeta.build(S, n, seed=cfg.seed, seeds=seeds,
+                             offsets=offsets, faults=faults)
     out, tp = sim_batch(compile_plan(cfg), xs, meta, reveal_only=reveal_only)
     return np.asarray(out), tp.bytes_sent

@@ -1,0 +1,383 @@
+"""Public-surface pins for ``repro.api`` — the one front door.
+
+Three layers of pinning so surface drift is always a *deliberate* diff:
+
+  * ``__all__`` and the facade method signatures are snapshot-pinned;
+  * invalid config knobs raise :class:`ConfigError` with an actionable
+    message (negative test per knob combination — they must survive
+    ``python -O``, so none of them may be a bare ``assert``);
+  * facade results are BIT-IDENTICAL to direct engine calls across the
+    wire-transport x masking grid (sim in-process, mesh backend in a
+    forced-multi-device subprocess), the derived ``SessionParams`` carry
+    exactly the shared config's knobs, and the analytic ``cost()``
+    equals the engine's executed wire bytes.
+"""
+import dataclasses
+import inspect
+import os
+import subprocess
+import sys
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+import repro.api as api
+from repro.api import (AggConfig, ConfigError, Runtime, SecureAggregator,
+                       Security, Topology, Wire)
+from adversary import run_sim_batch
+from repro.core.plan import plan_cache_stats
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+RNG = np.random.default_rng(0xA71)
+
+
+# ---------------------------------------------------------------------------
+# Surface snapshots
+# ---------------------------------------------------------------------------
+
+
+def test_api_all_is_pinned():
+    assert api.__all__ == [
+        "AggConfig", "ConfigError", "Runtime", "SecureAggregator",
+        "Security", "SessionMeta", "Topology", "Wire", "compile_plan",
+        "plan_cache_stats",
+    ]
+    assert repro.__all__ == [
+        "AggConfig", "ConfigError", "Runtime", "SecureAggregator",
+        "Security", "Topology", "Wire",
+    ]
+    for name in repro.__all__:
+        assert getattr(repro, name) is getattr(api, name)
+
+
+def test_facade_signatures_are_pinned():
+    """Changing the facade's verbs is an API break — make it a diff of
+    this table, not an accident."""
+    want = {
+        "__init__": "(self, cfg: 'Optional[AggConfig]' = None, *, "
+                    "topology: 'Optional[Topology]' = None, "
+                    "security: 'Optional[Security]' = None, "
+                    "wire: 'Optional[Wire]' = None, "
+                    "runtime: 'Optional[Runtime]' = None, "
+                    "batching=None, epochs=None)",
+        "allreduce": "(self, tree)",
+        "open_session": "(self, elems: 'int', *, params=None, now=None)",
+        "seal": "(self, sid: 'int', now=None) -> 'None'",
+        "pump": "(self, now=None, force: 'bool' = False) -> 'int'",
+        "drain": "(self) -> 'int'",
+        "result": "(self, sid: 'int', evict: 'bool' = False)",
+        "cost": "(self, elems: 'int') -> 'dict'",
+        "stats": "(self) -> 'dict'",
+        "plan": "(self) -> 'AggPlan'",
+        "derive": '(self, **kw) -> "\'SecureAggregator\'"',
+    }
+    got = {name: str(inspect.signature(getattr(SecureAggregator, name)))
+           for name in want}
+    assert got == want
+
+
+def test_config_sections_are_pinned():
+    """The knob -> section mapping (the README table) cannot drift."""
+    fields = {cls.__name__: tuple(f.name for f in dataclasses.fields(cls))
+              for cls in (Topology, Security, Wire, Runtime)}
+    assert fields == {
+        "Topology": ("n_nodes", "cluster_size", "schedule"),
+        "Security": ("redundancy", "masking", "clip", "guard_bits", "seed",
+                     "byzantine"),
+        "Wire": ("transport", "digest_words", "digest_backup",
+                 "chunk_elems"),
+        "Runtime": ("kernel_impl", "backend", "mesh", "dp_axes"),
+    }
+    # every AggConfig knob has exactly one section home (+ kernel_impl
+    # riding with Runtime)
+    flat = {f.name for f in dataclasses.fields(AggConfig)}
+    sectioned = set().union(*(set(v) for k, v in fields.items()
+                              if k != "Runtime"))
+    assert flat == sectioned | {"kernel_impl"}
+    cfg = AggConfig.compose(
+        Topology(n_nodes=8), Security(redundancy=1, masking="pairwise"),
+        Wire(transport="digest"), Runtime(kernel_impl="jnp"))
+    assert (cfg.topology, cfg.security, cfg.wire) == (
+        Topology(n_nodes=8), Security(redundancy=1, masking="pairwise"),
+        Wire(transport="digest"))
+    assert cfg.kernel_impl == "jnp"
+
+
+# ---------------------------------------------------------------------------
+# ConfigError negatives: one per invalid knob combination
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kw,needle", [
+    (dict(n_nodes=10, cluster_size=4), "multiple of cluster_size"),
+    (dict(n_nodes=0), "n_nodes"),
+    (dict(n_nodes=8, cluster_size=0), "cluster_size"),
+    (dict(n_nodes=8, redundancy=2), "must be odd"),
+    (dict(n_nodes=8, cluster_size=4, redundancy=5), "redundancy=5 > "
+                                                    "cluster_size=4"),
+    (dict(n_nodes=8, schedule="star"), "unknown schedule"),
+    (dict(n_nodes=24, cluster_size=4, schedule="butterfly"),
+     "power-of-two"),
+    (dict(n_nodes=8, transport="carrier-pigeon"), "unknown transport"),
+    (dict(n_nodes=8, transport="digest", digest_words=0),
+     "digest_words >= 1"),
+    (dict(n_nodes=8, transport="digest", digest_words=-3),
+     "digest_words >= 1"),
+    (dict(n_nodes=8, masking="xor"), "unknown masking"),
+    (dict(n_nodes=8, clip=0.0), "clip"),
+    (dict(n_nodes=8, guard_bits=-1), "guard_bits"),
+    (dict(n_nodes=8, chunk_elems=0), "chunk_elems"),
+    (dict(n_nodes=8, kernel_impl="cuda"), "kernel_impl"),
+])
+def test_invalid_knobs_raise_config_error(kw, needle):
+    with pytest.raises(ConfigError) as exc:
+        AggConfig(**kw)
+    assert needle in str(exc.value)
+    assert isinstance(exc.value, ValueError)   # except-compatible
+
+
+def test_invalid_runtime_and_ctor_combinations():
+    with pytest.raises(ConfigError, match="needs a mesh"):
+        Runtime(backend="mesh")
+    with pytest.raises(ConfigError, match="unknown backend"):
+        Runtime(backend="tpu")
+    with pytest.raises(ConfigError, match="needs a config"):
+        SecureAggregator()
+    with pytest.raises(ConfigError, match="not both"):
+        SecureAggregator(AggConfig(n_nodes=8),
+                         topology=Topology(n_nodes=8))
+    with pytest.raises(ConfigError, match="elems"):
+        from repro.service import SessionParams
+        SessionParams(n_nodes=8, elems=0)
+
+
+def test_replace_revalidates_and_derive_reclamps():
+    cfg = AggConfig(n_nodes=16, cluster_size=4, redundancy=3)
+    with pytest.raises(ConfigError):
+        cfg.replace(redundancy=4)
+    with pytest.raises(ConfigError):
+        cfg.replace(n_nodes=10)
+    sec = cfg.replace(security=Security(redundancy=1, clip=8.0))
+    assert (sec.redundancy, sec.clip, sec.n_nodes) == (1, 8.0, 16)
+    # mixing a section with flat knobs: the explicit flat knob wins,
+    # section fields the caller did not spell out still apply
+    mixed = cfg.replace(security=Security(redundancy=1), clip=9.0)
+    assert (mixed.redundancy, mixed.clip) == (1, 9.0)
+    d = cfg.derive(n_nodes=6)
+    assert (d.cluster_size, d.redundancy) == (3, 3)
+    d = cfg.derive(n_nodes=2)
+    assert (d.cluster_size, d.redundancy) == (2, 1)
+    byz = cfg.replace(
+        byzantine=dataclasses.replace(cfg.byzantine,
+                                      corrupt_ranks=(1, 9)))
+    assert byz.derive(n_nodes=4).byzantine.corrupt_ranks == (1,)
+
+
+# ---------------------------------------------------------------------------
+# Facade == engine, bit for bit, across the transport x masking grid
+# ---------------------------------------------------------------------------
+
+
+def _direct_engine(cfg, xs):
+    out, sent = run_sim_batch(cfg, jnp.asarray(xs)[None])
+    return out[0], sent
+
+
+@pytest.mark.parametrize("masking", ["global", "pairwise", "none"])
+@pytest.mark.parametrize("transport", ["full", "digest"])
+def test_facade_bit_identical_to_engine(transport, masking):
+    n, T = 16, 96
+    cfg = AggConfig(n_nodes=n, cluster_size=4, redundancy=3,
+                    transport=transport, masking=masking, clip=2.0)
+    xs = (RNG.normal(size=(n, T)) * 0.2).astype(np.float32)
+    want, want_bytes = _direct_engine(cfg, xs)
+    agg = SecureAggregator(cfg)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        got = np.asarray(agg.allreduce(xs))
+    assert np.array_equal(got, want)
+    # repeat: plan/fn caches hit, result still bit-identical
+    assert np.array_equal(np.asarray(agg.allreduce(xs)), want)
+    st = agg.stats()
+    assert st["fn_cache"] == {"hits": 1, "misses": 1, "size": 1}
+    # analytic account == engine's executed wire bytes, facade-accounted
+    assert agg.cost(T)["bytes_total"] == want_bytes
+    assert st["bytes_sent"] == 2 * want_bytes
+
+
+def test_facade_pytree_payload_matches_flat():
+    n = 16
+    cfg = AggConfig(n_nodes=n, cluster_size=4, redundancy=3, clip=2.0)
+    xs = (RNG.normal(size=(n, 70)) * 0.2).astype(np.float32)
+    tree = {"w": jnp.asarray(xs[:, :32]).reshape(n, 4, 8),
+            "b": jnp.asarray(xs[:, 32:])}
+    agg = SecureAggregator(cfg)
+    got = agg.allreduce(tree)
+    assert got["w"].shape == (n, 4, 8) and got["b"].shape == (n, 38)
+    flat = np.concatenate([np.asarray(got["w"]).reshape(n, 32),
+                           np.asarray(got["b"])], axis=1)
+    want, _ = _direct_engine(cfg, xs)
+    assert np.array_equal(flat, want)
+    with pytest.raises(ConfigError, match="leading axis"):
+        agg.allreduce(jnp.zeros((n + 1, 8), jnp.float32))
+
+
+def test_shared_plan_cache_across_facades_and_executor():
+    """Two facades + the service executor over the same config compile
+    ONE plan (the module-wide memo) — repeated shapes never recompile."""
+    cfg = AggConfig(n_nodes=8, cluster_size=4, redundancy=3, clip=2.0,
+                    guard_bits=3)   # unique -> fresh cache entry
+    base = plan_cache_stats()
+    a, b = SecureAggregator(cfg), SecureAggregator(cfg)
+    assert a.plan() is b.plan()
+    xs = (RNG.normal(size=(8, 17)) * 0.2).astype(np.float32)
+    np.testing.assert_array_equal(np.asarray(a.allreduce(xs)),
+                                  np.asarray(b.allreduce(xs)))
+    now = plan_cache_stats()
+    assert now["misses"] == base["misses"] + 1
+    assert now["hits"] > base["hits"]
+
+
+# ---------------------------------------------------------------------------
+# Sessions through the facade: derived params, delegate lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_session_params_derive_from_shared_config():
+    from repro.service import SessionParams
+    cfg = AggConfig(n_nodes=8, cluster_size=4, redundancy=1,
+                    schedule="tree", transport="digest", digest_words=8,
+                    digest_backup=False, masking="pairwise", clip=4.0,
+                    guard_bits=3)
+    p = SessionParams.from_config(cfg, elems=33)
+    # round-trips: the session's protocol config is the shared config
+    # (modulo the facade-only chunking/kernel knobs)
+    assert p.agg_config() == cfg.replace(chunk_elems=1 << 16)
+    assert p.elems == 33
+
+
+def test_facade_sessions_match_direct_service():
+    from repro.service import (AggregationService, BatchingConfig,
+                               SessionParams)
+    n, elems, S = 8, 20, 3
+    vals = (RNG.normal(size=(S, n, elems)) * 0.3).astype(np.float32)
+    cfg = AggConfig(n_nodes=n, cluster_size=4, redundancy=3, clip=2.0)
+
+    def drive(open_fn, seal, pump, result):
+        sids = []
+        for i in range(S):
+            s = open_fn()
+            for slot in range(n):
+                if (i, slot) != (1, 2):        # one missing slot -> crash
+                    s.contribute(slot, vals[i, slot])
+            seal(s.sid, 0.0)
+            sids.append(s.sid)
+        pump()
+        return np.stack([result(sid) for sid in sids])
+
+    agg = SecureAggregator(cfg, batching=BatchingConfig(max_batch=S,
+                                                        max_age=1e9))
+    got = drive(lambda: agg.open_session(elems),
+                lambda sid, now: agg.seal(sid, now=now),
+                lambda: agg.pump(force=True), agg.result)
+
+    svc = AggregationService(SessionParams.from_config(cfg, elems),
+                             base_seed=cfg.seed,
+                             batching=BatchingConfig(max_batch=S,
+                                                     max_age=1e9))
+    want = drive(svc.open, lambda sid, now: svc.seal(sid, now=now),
+                 lambda: svc.pump(force=True), svc.result)
+    assert np.array_equal(got, want)
+    expect = vals.sum(1)
+    expect[1] -= vals[1, 2]
+    assert np.abs(got - expect).max() < 1e-3
+    assert agg.stats()["service"]["sessions_run"] == S
+    assert agg.service is not None
+
+
+def test_static_byzantine_config_reaches_sessions():
+    """A Security.byzantine fault model is honored by BOTH facade verbs:
+    open_session injects it as a SessionFaultPlan, so the session runs
+    the same faulty-but-absorbed protocol allreduce runs."""
+    from repro.core.byzantine import ByzantineSpec
+    from repro.service import BatchingConfig
+    n, elems = 8, 12
+    cfg = AggConfig(n_nodes=n, cluster_size=4, redundancy=3, clip=2.0,
+                    byzantine=ByzantineSpec(corrupt_ranks=(1, 5),
+                                            mode="garbage"))
+    vals = (RNG.normal(size=(n, elems)) * 0.3).astype(np.float32)
+    agg = SecureAggregator(cfg, batching=BatchingConfig(max_batch=1))
+    s = agg.open_session(elems)
+    assert tuple(s.fault.byzantine_slots) == (1, 5)
+    for slot in range(n):
+        s.contribute(slot, vals[slot])
+    agg.seal(s.sid, now=0.0)
+    agg.pump(force=True)
+    # the injected corruption is vote-absorbed: exact sum, same as the
+    # one-shot verb's first row
+    want = np.asarray(SecureAggregator(cfg).allreduce(vals))[0]
+    assert np.array_equal(agg.result(s.sid), want[:elems])
+
+
+def test_facade_session_verbs_require_open():
+    agg = SecureAggregator(AggConfig(n_nodes=8))
+    with pytest.raises(ConfigError, match="open_session"):
+        agg.pump()
+
+
+def test_manual_backend_rejects_sessions_and_skips_byte_account():
+    """The batched executor has no 'manual' backend: open_session must
+    refuse rather than silently downgrade to sim; and an all-zero-size
+    payload books no wire bytes (nothing moves)."""
+    agg = SecureAggregator(AggConfig(n_nodes=8),
+                           runtime=Runtime(backend="manual"))
+    with pytest.raises(ConfigError, match="manual"):
+        agg.open_session(4)
+    sim = SecureAggregator(AggConfig(n_nodes=8))
+    empty = {"a": jnp.zeros((8, 0), jnp.float32)}
+    out = sim.allreduce(empty)
+    assert out["a"].shape == (8, 0)
+    assert sim.stats()["bytes_sent"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Mesh backend: facade == sim facade bit-exact (subprocess, 8 devices)
+# ---------------------------------------------------------------------------
+
+
+_MESH_FACADE = """
+import numpy as np, jax.numpy as jnp
+from repro.api import AggConfig, Runtime, SecureAggregator
+from repro.runtime import compat
+
+n, T = 8, 65
+rng = np.random.default_rng(3)
+mesh = compat.make_mesh((n,), ("data",))
+for transport in ("full", "digest"):
+    for masking in ("global", "pairwise", "none"):
+        cfg = AggConfig(n_nodes=n, cluster_size=4, redundancy=3,
+                        transport=transport, masking=masking, clip=2.0)
+        xs = (rng.normal(size=(n, T)) * 0.2).astype(np.float32)
+        sim = SecureAggregator(cfg).allreduce(xs)
+        dist = SecureAggregator(
+            cfg, runtime=Runtime(backend="mesh", mesh=mesh)).allreduce(xs)
+        assert np.array_equal(np.asarray(sim), np.asarray(dist)), \\
+            (transport, masking)
+        assert np.abs(np.asarray(dist)[0] - xs.sum(0)).max() < 1e-3
+print("FACADE MESH==SIM")
+"""
+
+
+@pytest.mark.mesh
+@pytest.mark.slow
+def test_facade_mesh_backend_bit_identical_to_sim_8dev():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    r = subprocess.run([sys.executable, "-c", _MESH_FACADE], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stdout[-4000:] + r.stderr[-4000:]
+    assert "FACADE MESH==SIM" in r.stdout

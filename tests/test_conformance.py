@@ -15,33 +15,27 @@ in one batch) and pins:
     cell (forced multi-device subprocess);
   * the analytic bandwidth model (``schedules.schedule_cost``) equals
     the bytes the engine's compiled plan actually moves;
-  * the one-release ``secure_allreduce_*`` shims warn and stay
-    bit-identical to the engine path;
+  * the retired ``core/secure_allreduce`` shim module stays deleted and
+    the engine path runs deprecation-clean (the ``repro.api`` facade is
+    the only front door — facade == engine is pinned in tests/test_api);
   * the README "Adversary model" table matches the executed grid.
 """
 import dataclasses
 import os
 import subprocess
 import sys
+import warnings
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import PartitionSpec as P
 
 from adversary import (ADVERSARIES, colluding_minority, run_sim_batch,
                        session_faults)
 from repro.core.byzantine import ByzantineSpec
-from repro.core.engine import manual_allreduce, tree_allreduce
 from repro.core.masking import quantization_error_bound
-from repro.core.plan import SessionMeta, compile_plan
+from repro.core.plan import AggConfig, SessionMeta, compile_plan
 from repro.core.schedules import schedule_cost
-from repro.core.secure_allreduce import (AggConfig, secure_allreduce_manual,
-                                         secure_allreduce_sharded,
-                                         secure_allreduce_tree,
-                                         simulate_secure_allreduce,
-                                         simulate_secure_allreduce_batch)
-from repro.runtime import compat
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 RNG = np.random.default_rng(0xC0FFEE)
@@ -267,8 +261,7 @@ _MESH_GRID = """
 import numpy as np, jax.numpy as jnp
 from adversary import ADVERSARIES, run_sim_batch, session_faults
 from repro.core.engine import MeshTransport
-from repro.core.plan import SessionMeta, compile_plan
-from repro.core.secure_allreduce import AggConfig
+from repro.core.plan import AggConfig, SessionMeta, compile_plan
 from repro.runtime import compat
 
 n, c, r, T = 16, 4, 3, 64
@@ -371,57 +364,30 @@ def test_service_digest_batch_on_mesh_matches_sim_8dev():
 
 
 # ---------------------------------------------------------------------------
-# Deprecation shims: warn + bit-identical to the engine path
+# Shim retirement: core/secure_allreduce is gone; repro.api is the door
 # ---------------------------------------------------------------------------
 
 
-def test_simulate_shims_warn_and_match_engine():
-    cfg = AggConfig(n_nodes=8, cluster_size=4, redundancy=3, clip=2.0)
-    xs = _payloads(1, n=8, T=65)
-    want, _ = run_sim_batch(cfg, xs)
-    with pytest.warns(DeprecationWarning):
-        got = simulate_secure_allreduce(jnp.asarray(xs[0]), cfg)
-    assert np.array_equal(np.asarray(got), want[0])
-    with pytest.warns(DeprecationWarning):
-        got_b = simulate_secure_allreduce_batch(jnp.asarray(xs), cfg)
-    assert np.array_equal(np.asarray(got_b), want)
+def test_secure_allreduce_shim_module_stays_deleted():
+    """The one-release deprecation window closed: the legacy module (and
+    with it every ``secure_allreduce_*`` entry point) must not come
+    back — new code goes through ``repro.api.SecureAggregator``
+    (pinned bit-identical to the engine in tests/test_api.py)."""
+    with pytest.raises(ModuleNotFoundError):
+        import repro.core.secure_allreduce  # noqa: F401
 
 
-def test_manual_shims_warn_and_match_engine():
-    """manual/tree/sharded shims on a 1-device mesh: DeprecationWarning
-    emitted, outputs bit-identical to the engine-native entries the
-    internal callers migrated to."""
-    cfg = AggConfig(n_nodes=1, cluster_size=1, redundancy=1, clip=2.0)
-    mesh = compat.make_mesh((1,), ("data",))
-    x = jnp.asarray((RNG.normal(size=(33,)) * 0.2).astype(np.float32))
-
-    def run_flat(fn):
-        sm = compat.shard_map(lambda v: fn(v[0])[None], mesh=mesh,
-                              in_specs=(P("data"),), out_specs=P("data"),
-                              check_vma=False)
-        return np.asarray(sm(x[None]))[0]
-
-    def run_tree(fn):
-        def body(v):
-            t = {"a": v[0][:20], "b": v[0][20:]}
-            out = fn(t, cfg, ("data",))
-            return jnp.concatenate([out["a"], out["b"]])[None]
-        sm = compat.shard_map(body, mesh=mesh, in_specs=(P("data"),),
-                              out_specs=P("data"), check_vma=False)
-        return np.asarray(sm(x[None]))[0]
-
-    want = run_flat(lambda v: manual_allreduce(v, cfg, ("data",)))
-    with pytest.warns(DeprecationWarning):
-        got_m = run_flat(
-            lambda v: secure_allreduce_manual(v, cfg, ("data",)))
-    assert np.array_equal(got_m, want)
-    with pytest.warns(DeprecationWarning):
-        got_s = secure_allreduce_sharded(x[None], mesh, cfg)
-    assert np.array_equal(np.asarray(got_s)[0], want)
-    want_t = run_tree(tree_allreduce)
-    with pytest.warns(DeprecationWarning):
-        got_t = run_tree(secure_allreduce_tree)
-    assert np.array_equal(got_t, want_t)
+def test_engine_path_emits_no_deprecation_warnings():
+    """A full digest/pairwise adversary cell runs deprecation-clean —
+    nothing under the engine path touches a retired entry point (the
+    api-lane sweeps the whole tier-1 suite the same way)."""
+    cfg = _grid_cfg("digest", "pairwise")
+    xs = _payloads(2)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        run_sim_batch(cfg, xs,
+                      faults=[(), ADVERSARIES[-1].specs(GRID_N, GRID_C,
+                                                        GRID_R)])
 
 
 # ---------------------------------------------------------------------------

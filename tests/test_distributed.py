@@ -40,7 +40,7 @@ from repro.configs import get_smoke_config
 from repro.configs.base import ShapeConfig
 from repro.launch.mesh import make_host_mesh
 from repro.launch.train import train_loop
-from repro.core.secure_allreduce import AggConfig
+from repro.core.plan import AggConfig
 from repro.optim import adamw
 
 cfg = dataclasses.replace(get_smoke_config('olmo-1b'), dtype='float32')

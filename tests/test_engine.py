@@ -10,8 +10,8 @@ import sys
 import numpy as np
 import pytest
 
-from repro.core.plan import SessionMeta, compile_plan, fault_masks_of
-from repro.core.secure_allreduce import AggConfig
+from repro.core.plan import (AggConfig, SessionMeta, compile_plan,
+                            fault_masks_of)
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
@@ -86,10 +86,8 @@ def test_session_meta_build_normalizes():
 _MESH_EQUIV = """
 import numpy as np, jax, jax.numpy as jnp
 from repro.core.byzantine import ByzantineSpec
-from repro.core.engine import MeshTransport
-from repro.core.plan import SessionMeta, compile_plan
-from repro.core.secure_allreduce import (AggConfig,
-                                         simulate_secure_allreduce_batch)
+from repro.core.engine import MeshTransport, sim_batch
+from repro.core.plan import AggConfig, SessionMeta, compile_plan
 from repro.runtime import compat
 
 rng = np.random.default_rng(5)
@@ -107,8 +105,7 @@ for masking in ("global", "pairwise", "none"):
     meta = SessionMeta.build(S, n, seed=cfg.seed, seeds=seeds, faults=faults)
     mt = MeshTransport(mesh, ("data",))
     got = np.asarray(mt.execute(plan, xs, meta))
-    want = np.asarray(simulate_secure_allreduce_batch(
-        xs, cfg, seeds=seeds, faults=faults))
+    want = np.asarray(sim_batch(plan, xs, meta)[0])
     assert np.array_equal(got, want), masking
     ro = np.asarray(mt.execute(plan, xs, meta, reveal_only=True))
     assert np.array_equal(ro, want[:, 0]), masking

@@ -17,7 +17,8 @@ import pytest
 from repro.core.byzantine import ByzantineSpec, majority_vote, \
     majority_vote_list
 from repro.core.masking import MaskConfig, reference_aggregate
-from repro.core.secure_allreduce import AggConfig, simulate_secure_allreduce
+from repro.api import SecureAggregator
+from repro.core.plan import AggConfig
 from repro.kernels import backend
 from repro.kernels.secure_agg import (mask_encrypt_batch_op, mask_encrypt_op,
                                       mask_encrypt_ref,
@@ -242,7 +243,8 @@ def test_chunked_stream_equals_monolithic():
 
 def test_tree_pack_unpack_handles_zero_size_leaves():
     """Chunk packing round-trips pytrees containing 0-element leaves."""
-    from repro.core.secure_allreduce import _pack_chunks, _unpack_chunks
+    from repro.core.engine import pack_chunks as _pack_chunks
+    from repro.core.engine import unpack_chunks as _unpack_chunks
     leaves = [jnp.arange(3, dtype=jnp.float32),
               jnp.zeros((0,), jnp.float32),
               jnp.arange(5, dtype=jnp.float32) * 2,
@@ -268,7 +270,7 @@ def test_simulate_matches_reference_under_byzantine(masking, schedule):
                     schedule=schedule, masking=masking, clip=2.0,
                     byzantine=ByzantineSpec(corrupt_ranks=corrupt,
                                             mode="garbage"))
-    out = np.asarray(simulate_secure_allreduce(xs, cfg))
+    out = np.asarray(SecureAggregator(cfg).allreduce(xs))
     want = np.asarray(reference_aggregate(cfg.mask_cfg(), xs))
     assert np.array_equal(out, np.tile(want, (n, 1)))
 
@@ -276,7 +278,8 @@ def test_simulate_matches_reference_under_byzantine(masking, schedule):
 _JAXPR_PROBE = """
 import json, numpy as np, jax, jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from repro.core.secure_allreduce import AggConfig, secure_allreduce_manual
+from repro.core.engine import manual_allreduce
+from repro.core.plan import AggConfig
 from repro.runtime import compat
 
 def count_eqns(jaxpr, counts):
@@ -301,7 +304,7 @@ def trace(n_nodes, cluster_size):
                     redundancy=3, schedule="tree")
     mesh = Mesh(np.array(jax.devices()[:n_nodes]), ("data",))
     fn = compat.shard_map(
-        lambda x: secure_allreduce_manual(x[0], cfg, ("data",))[None],
+        lambda x: manual_allreduce(x[0], cfg, ("data",))[None],
         mesh=mesh, in_specs=(P("data"),), out_specs=P("data"),
         check_vma=False)
     x = jax.ShapeDtypeStruct((n_nodes, 2048), jnp.float32)

@@ -7,16 +7,27 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from adversary import run_sim_batch
 from repro.core.byzantine import ByzantineSpec
 from repro.core.overlay import build_overlay
-from repro.core.secure_allreduce import (AggConfig,
-                                         simulate_secure_allreduce,
-                                         simulate_secure_allreduce_batch)
+from repro.core.plan import AggConfig
 from repro.runtime.fault import SessionFaultPlan
 from repro.service import (AggregationService, BatchingConfig, EpochManager,
                            LifecycleError, SessionParams, SessionState)
 
 RNG = np.random.default_rng(11)
+
+
+def run_batch(xs, cfg, **kw):
+    """(S, n, T) payloads -> per-node results via the shared oracle
+    recipe in tests/adversary.py."""
+    out, _ = run_sim_batch(cfg, jnp.asarray(xs), **kw)
+    return out
+
+
+def run_one(xs, cfg):
+    """Single-session oracle: (n, T) -> (n, T) per-node results."""
+    return run_batch(jnp.asarray(xs)[None], cfg)[0]
 
 
 # ---------------------------------------------------------------------------
@@ -26,7 +37,7 @@ RNG = np.random.default_rng(11)
 
 @pytest.mark.parametrize("schedule", ["ring", "butterfly"])
 def test_batched_equals_monolithic_under_faults(schedule):
-    """(S, n, T) batch == S monolithic ``simulate_secure_allreduce`` runs
+    """(S, n, T) batch == S monolithic engine-oracle runs
     bit-for-bit, S=8, with one injected crash session and one Byzantine
     session; per-session pad-stream keys."""
     S, n, c, T = 8, 16, 4, 333
@@ -37,13 +48,13 @@ def test_batched_equals_monolithic_under_faults(schedule):
     faults[5] = (ByzantineSpec(corrupt_ranks=(10,), mode="flip"),)  # byz
     cfg = AggConfig(n_nodes=n, cluster_size=c, redundancy=3,
                     schedule=schedule, clip=2.0)
-    got = np.asarray(simulate_secure_allreduce_batch(
+    got = np.asarray(run_batch(
         xs, cfg, seeds=jnp.asarray(seeds, dtype=jnp.uint32), faults=faults))
     for s in range(S):
         scfg = dataclasses.replace(
             cfg, seed=seeds[s],
             byzantine=faults[s][0] if faults[s] else ByzantineSpec())
-        want = np.asarray(simulate_secure_allreduce(xs[s], scfg))
+        want = np.asarray(run_one(xs[s], scfg))
         assert np.array_equal(got[s], want), f"session {s} diverged"
     # faults were absorbed by the vote: revealed sums stay exact
     err = np.abs(got[:, 0] - np.asarray(xs).sum(1)).max()
@@ -55,9 +66,8 @@ def test_reveal_only_matches_full_output():
     xs = jnp.asarray(RNG.normal(size=(S, n, T)).astype(np.float32) * 0.2)
     seeds = jnp.arange(S, dtype=jnp.uint32) + 3
     cfg = AggConfig(n_nodes=n, cluster_size=4, redundancy=3)
-    full = simulate_secure_allreduce_batch(xs, cfg, seeds=seeds)
-    ro = simulate_secure_allreduce_batch(xs, cfg, seeds=seeds,
-                                         reveal_only=True)
+    full = run_batch(xs, cfg, seeds=seeds)
+    ro = run_batch(xs, cfg, seeds=seeds, reveal_only=True)
     assert np.array_equal(np.asarray(full[:, 0]), np.asarray(ro))
 
 
@@ -68,10 +78,9 @@ def test_per_session_offsets_shift_the_pad_stream():
     x = RNG.normal(size=(1, n, T)).astype(np.float32) * 0.2
     cfg = AggConfig(n_nodes=n, cluster_size=4, redundancy=3)
     seeds = jnp.asarray([42], dtype=jnp.uint32)
-    whole = simulate_secure_allreduce_batch(jnp.asarray(x), cfg, seeds=seeds)
-    tail = simulate_secure_allreduce_batch(
-        jnp.asarray(x[:, :, k:]), cfg, seeds=seeds,
-        offsets=jnp.asarray([k], dtype=jnp.uint32))
+    whole = run_batch(jnp.asarray(x), cfg, seeds=seeds)
+    tail = run_batch(jnp.asarray(x[:, :, k:]), cfg, seeds=seeds,
+                     offsets=jnp.asarray([k], dtype=jnp.uint32))
     assert np.array_equal(np.asarray(whole)[:, :, k:], np.asarray(tail))
 
 

@@ -11,11 +11,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import AggConfig, SecureAggregator
 from repro.configs import get_smoke_config
 from repro.configs.base import ShapeConfig
 from repro.core.byzantine import ByzantineSpec
 from repro.core.protocol import Adversary, run_da
-from repro.core.secure_allreduce import AggConfig, simulate_secure_allreduce
 from repro.launch.mesh import make_host_mesh
 from repro.launch.train import train_loop
 from repro.optim import adamw
@@ -41,7 +41,7 @@ def test_tensor_system_end_to_end():
     cfg = AggConfig(n_nodes=n, cluster_size=4, redundancy=3, clip=2.0,
                     byzantine=ByzantineSpec(corrupt_ranks=(0, 5),
                                             mode="garbage"))
-    out = np.asarray(simulate_secure_allreduce(xs, cfg))
+    out = np.asarray(SecureAggregator(cfg).allreduce(xs))
     np.testing.assert_allclose(out, np.asarray(xs.sum(0))[None].repeat(n, 0),
                                atol=1e-4)
 

@@ -9,7 +9,12 @@ from hypothesis import strategies as st
 
 from repro.core.byzantine import ByzantineSpec, digest, majority_vote
 from repro.core.schedules import get_schedule, schedule_cost
-from repro.core.secure_allreduce import AggConfig, simulate_secure_allreduce
+from adversary import run_sim_batch
+from repro.core.plan import AggConfig
+
+
+def simulate(xs, cfg):
+    return run_sim_batch(cfg, jnp.asarray(xs)[None])[0][0]
 
 
 @settings(max_examples=30, deadline=None)
@@ -85,7 +90,7 @@ def test_simulated_allreduce_with_byzantine_minority(schedule, seed):
                     schedule=schedule, clip=2.0,
                     byzantine=ByzantineSpec(corrupt_ranks=corrupt,
                                             mode="garbage"))
-    out = np.asarray(simulate_secure_allreduce(xs, cfg))
+    out = np.asarray(simulate(xs, cfg))
     want = np.asarray(xs.sum(0))
     assert np.abs(out - want[None]).max() < 1e-4
 
