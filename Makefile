@@ -6,7 +6,7 @@
 PY := PYTHONPATH=src python
 
 .PHONY: test api-lane kernel-lane service-lane mesh-lane adversary-lane \
-    bench-service bench-service-mesh bench
+    chaos-lane bench-service bench-service-mesh bench
 
 test:
 	$(PY) -m pytest -x -q
@@ -44,6 +44,14 @@ mesh-lane:
 adversary-lane:
 	$(PY) -m pytest tests/test_conformance.py tests/test_vote_schedules.py \
 	    -m "not mesh" -q
+
+# chaos-injected resilience conformance: retry/bisect/quarantine over
+# every chaos mode x {sim, mesh}, deadlines, shedding, and the breaker
+# degrade ladder, swept over the fixed chaos seeds baked into the
+# suite's parametrizations (the storm tests replay seeds 0..2 exactly;
+# the mesh cell forces 8 host devices in its own subprocess)
+chaos-lane:
+	$(PY) -m pytest tests/test_resilience.py -m chaos -q
 
 bench-service:
 	$(PY) -m benchmarks.run --only service --json BENCH_service.json

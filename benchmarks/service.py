@@ -133,3 +133,61 @@ def run(full: bool = False, transport: str = "sim") -> None:
     print(f"service_load_gen_S{batch},{wall / n_sessions * 1e6:.0f},"
           f"sessions_per_s={n_sessions / wall:.0f};"
           f"queue_and_python_included")
+
+    # --- load shedding under synthetic overload: every session is
+    # sealed before the first pump, so the queue floods past the
+    # max_pending_rows watermark and sheds the newest arrivals; the row
+    # records survivor throughput (shed sessions cost bookkeeping only)
+    shed_svc = AggregationService(
+        params, batching=BatchingConfig(max_batch=batch, max_age=1e9,
+                                        max_pending_rows=2 * batch))
+
+    def overload_once() -> tuple[float, int]:
+        shed0 = shed_svc.queue.shed_sessions
+        t0 = _time.monotonic()
+        for i in range(n_sessions):
+            s = shed_svc.open(now=float(i))
+            for slot in range(N_NODES):
+                s.contribute(slot, vals[slot])
+            shed_svc.seal(s.sid, now=float(i))   # no pump: queue floods
+        shed_svc.drain()
+        return (_time.monotonic() - t0,
+                shed_svc.queue.shed_sessions - shed0)
+
+    overload_once()                   # warm + establish the steady state
+    wall_shed, shed = overload_once()
+    survived = n_sessions - shed
+    print(f"service_shed_overload_S{batch},"
+          f"{survived / wall_shed:.0f},"
+          f"survivor_sessions_per_s;shed={shed}/{n_sessions};"
+          f"watermark={2 * batch}_rows")
+
+    # --- degrade ladder: a mesh executor behind an OPEN circuit
+    # breaker runs every batch on the sim fallback (bit-identical by
+    # construction); the row is the degraded-mode throughput, directly
+    # comparable to service_load_gen (the healthy sim path)
+    from repro.runtime.resilience import CircuitBreaker, RetryPolicy
+    brk = CircuitBreaker(k=1, cooloff_s=1e18, clock=lambda: 0.0)
+    brk.record_failure()              # trip it: every dispatch degrades
+    deg_svc = AggregationService(
+        params, batching=BatchingConfig(max_batch=batch, max_age=1e9),
+        transport="mesh", mesh=object(),   # never dereferenced while open
+        breaker=brk, retry=RetryPolicy(max_attempts=1))
+
+    def degraded_once() -> float:
+        t0 = _time.monotonic()
+        for i in range(n_sessions):
+            s = deg_svc.open(now=float(i))
+            for slot in range(N_NODES):
+                s.contribute(slot, vals[slot])
+            deg_svc.seal(s.sid, now=float(i))
+            deg_svc.pump(now=float(i))
+        deg_svc.drain()
+        return _time.monotonic() - t0
+
+    degraded_once()                   # warm the sim-fallback executable
+    wall_deg = degraded_once()
+    assert deg_svc.executor.degraded_batches > 0
+    print(f"service_degraded_sim_fallback_S{batch},"
+          f"{n_sessions / wall_deg:.0f},"
+          f"sessions_per_s;breaker_open_mesh_to_sim")

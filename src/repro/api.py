@@ -60,14 +60,19 @@ class SecureAggregator:
     (``topology`` required, ``security``/``wire`` optional); ``runtime``
     picks the execution backend and kernel engine.  ``batching`` /
     ``epochs`` configure the session service behind
-    :meth:`open_session` (ignored by the one-shot verbs)."""
+    :meth:`open_session` (ignored by the one-shot verbs); ``retry`` /
+    ``breaker`` / ``chaos`` configure its resilience layer (a
+    ``RetryPolicy`` for retry/bisect/quarantine, a ``CircuitBreaker``
+    for the mesh->sim degrade ladder, a ``ChaosConfig`` for
+    deterministic fault injection in tests)."""
 
     def __init__(self, cfg: Optional[AggConfig] = None, *,
                  topology: Optional[Topology] = None,
                  security: Optional[Security] = None,
                  wire: Optional[Wire] = None,
                  runtime: Optional[Runtime] = None,
-                 batching=None, epochs=None):
+                 batching=None, epochs=None, retry=None, breaker=None,
+                 chaos=None):
         if cfg is None:
             if topology is None:
                 raise ConfigError(
@@ -92,6 +97,9 @@ class SecureAggregator:
         self._bytes_sent = 0            # modeled wire bytes, cumulative
         self._batching = batching
         self._epochs = epochs
+        self._retry = retry
+        self._breaker = breaker
+        self._chaos = chaos
         self._svc = None
 
     # -- config / plan ------------------------------------------------------
@@ -110,7 +118,9 @@ class SecureAggregator:
         """A sibling facade over ``cfg.derive(**kw)`` — same runtime and
         service knobs, reclamped committee (caches start empty)."""
         return SecureAggregator(self.cfg.derive(**kw), runtime=self.runtime,
-                                batching=self._batching, epochs=self._epochs)
+                                batching=self._batching, epochs=self._epochs,
+                                retry=self._retry, breaker=self._breaker,
+                                chaos=self._chaos)
 
     # -- one-shot aggregation ----------------------------------------------
     def allreduce(self, tree):
@@ -202,7 +212,7 @@ class SecureAggregator:
         behind :meth:`open_session` (None until the first session)."""
         return self._svc
 
-    def open_session(self, elems: int, *, params=None, now=None):
+    def open_session(self, elems: int, *, params=None, now=None, ttl=None):
         """Open one aggregation query of ``elems`` elements per node.
 
         ``params`` (a ``SessionParams``) overrides the defaults derived
@@ -210,14 +220,17 @@ class SecureAggregator:
         callers never re-specify n_nodes/cluster/redundancy/wire knobs.
         A static ``Security.byzantine`` fault model is injected into the
         session (as a ``SessionFaultPlan``), so both facade verbs honor
-        the same shared config.  Returns the
+        the same shared config.  ``ttl`` (defaulting to
+        ``BatchingConfig.session_ttl``) sets the session deadline on
+        the open/seal/pump clock.  Returns the
         :class:`~repro.service.Session`; drive it with
         ``contribute(...)`` then :meth:`seal` / :meth:`pump` /
         :meth:`result` (or the service object directly)."""
         from repro.service import SessionParams
         if params is None:
             params = SessionParams.from_config(self.cfg, elems)
-        session = self._service(params).open(params=params, now=now)
+        session = self._service(params).open(params=params, now=now,
+                                             ttl=ttl)
         byz = self.cfg.byzantine
         if byz.corrupt_ranks:
             from repro.runtime.fault import SessionFaultPlan
@@ -243,7 +256,9 @@ class SecureAggregator:
                 kernel_impl=self.cfg.kernel_impl,
                 base_seed=self.cfg.seed,
                 transport="mesh" if backend == "mesh" else "sim",
-                mesh=self.runtime.mesh, dp_axes=self.runtime.dp_axes)
+                mesh=self.runtime.mesh, dp_axes=self.runtime.dp_axes,
+                retry=self._retry, breaker=self._breaker,
+                chaos=self._chaos)
         return self._svc
 
     def seal(self, sid: int, now=None) -> None:
@@ -284,7 +299,8 @@ class SecureAggregator:
         manual-backend calls run inside the caller's ``shard_map`` and
         are accounted at trace time by the engine's
         ``Transport.bytes_sent`` instead), and the service stats once a
-        session has been opened."""
+        session has been opened.  ``degraded`` flags a session service
+        currently running on the sim fallback (open circuit breaker)."""
         out = {
             "backend": self.backend,
             "plan_cache": plan_cache_stats(),
@@ -294,4 +310,6 @@ class SecureAggregator:
         }
         if self._svc is not None:
             out["service"] = self._svc.stats
+            brk = self._svc.executor.breaker
+            out["degraded"] = brk is not None and brk.state == "open"
         return out

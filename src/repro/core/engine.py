@@ -555,10 +555,14 @@ class MeshTransport:
 
     def __init__(self, mesh: jax.sharding.Mesh,
                  dp_axes: Sequence[str] = ("data",),
-                 impl: Optional[str] = None):
+                 impl: Optional[str] = None, wrap_inner=None):
         self.mesh = mesh
         self.dp_axes = tuple(dp_axes)
         self.impl = impl
+        # optional hook wrapping the per-rank ManualTransport inside the
+        # shard_map body (e.g. runtime.chaos.ChaosTransport injecting a
+        # raise-at-hop-k fault); must preserve the Transport protocol
+        self.wrap_inner = wrap_inner
         self.last_bytes: Optional[int] = None
         n = 1
         for ax in self.dp_axes:
@@ -579,9 +583,10 @@ class MeshTransport:
         def body(xl, seeds, offsets, masks):
             tp = ManualTransport(plan, self.dp_axes, S=S, impl=self.impl)
             inner.append(tp)
+            run_tp = tp if self.wrap_inner is None else self.wrap_inner(tp)
             m = SessionMeta(seeds=seeds, offsets=offsets,
                             fault_masks=dict(masks))
-            (out,) = execute_chunks(plan, tp, [xl[:, 0, :]], m)
+            (out,) = execute_chunks(plan, run_tp, [xl[:, 0, :]], m)
             # reveal_only: every rank decrypted the identical aggregate
             # with identical per-session keys, so the (S, T) output is
             # replicated over the dp axes — return one copy instead of

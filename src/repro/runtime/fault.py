@@ -37,6 +37,18 @@ class StragglerTimeout(RuntimeError):
     pass
 
 
+class FaultPlanError(ValueError):
+    """An invalid session fault plan (overlapping slot groups,
+    conflicting Byzantine modes).  A real exception in the
+    ``core.plan.ConfigError`` style — raised eagerly, survives
+    ``python -O``, and the message says which slots to fix."""
+
+
+def _require(cond: bool, msg: str) -> None:
+    if not cond:
+        raise FaultPlanError(msg)
+
+
 @dataclasses.dataclass
 class FailurePlan:
     crash_at_steps: tuple[int, ...] = ()
@@ -70,7 +82,11 @@ class SessionFaultPlan:
 
     def __post_init__(self):
         overlap = set(self.crashed_slots) & set(self.byzantine_slots)
-        assert not overlap, f"slots in both fault groups: {sorted(overlap)}"
+        _require(not overlap,
+                 f"slot(s) {sorted(overlap)} appear in both crashed_slots "
+                 "and byzantine_slots — the fault groups must be disjoint "
+                 "(a slot either crashes or corrupts, not both); put each "
+                 "slot in exactly one group")
 
     def specs(self) -> tuple[ByzantineSpec, ...]:
         """Lower to the vote path's per-mode corruption specs."""
@@ -85,8 +101,13 @@ class SessionFaultPlan:
         return tuple(out)
 
     def merge(self, other: "SessionFaultPlan") -> "SessionFaultPlan":
-        assert other.byzantine_mode == self.byzantine_mode or \
-            not (self.byzantine_slots and other.byzantine_slots)
+        _require(other.byzantine_mode == self.byzantine_mode
+                 or not (self.byzantine_slots and other.byzantine_slots),
+                 f"cannot merge fault plans with conflicting byzantine "
+                 f"modes {self.byzantine_mode!r} vs "
+                 f"{other.byzantine_mode!r} while both have byzantine "
+                 "slots — one merged plan carries one mode; inject the "
+                 "second mode as a separate session fault")
         mode = (self.byzantine_mode if self.byzantine_slots
                 else other.byzantine_mode)
         crashed = tuple(sorted(set(self.crashed_slots)

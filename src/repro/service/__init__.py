@@ -10,6 +10,11 @@ Three layers on top of the PR-1 kernel dispatch path:
   * ``epochs``   — overlay churn epochs: sessions stay pinned to their
     epoch's committee snapshot, departures become vote-absorbed crashes.
 
+plus the resilience layer from ``runtime.resilience`` /
+``runtime.chaos``: retry/backoff with batch bisection and a dead-letter
+quarantine in the executor, session deadlines and load shedding in the
+admission queue, and the mesh->sim circuit-breaker degrade ladder.
+
 :class:`AggregationService` is the facade gluing them together.
 """
 from __future__ import annotations
@@ -20,6 +25,7 @@ from typing import Optional, Sequence
 import numpy as np
 
 from repro.core.plan import plan_cache_stats
+from repro.runtime.resilience import CircuitBreaker, RetryPolicy
 from repro.service.epochs import EpochManager, EpochSnapshot
 from repro.service.executor import (AdmissionQueue, BatchedExecutor,
                                     BatchingConfig)
@@ -28,8 +34,9 @@ from repro.service.session import (LifecycleError, Session, SessionParams,
 
 __all__ = [
     "AdmissionQueue", "AggregationService", "BatchedExecutor",
-    "BatchingConfig", "EpochManager", "EpochSnapshot", "LifecycleError",
-    "Session", "SessionParams", "SessionState", "derive_session_seed",
+    "BatchingConfig", "CircuitBreaker", "EpochManager", "EpochSnapshot",
+    "LifecycleError", "RetryPolicy", "Session", "SessionParams",
+    "SessionState", "derive_session_seed",
 ]
 
 
@@ -49,7 +56,10 @@ class AggregationService:
                  kernel_impl: Optional[str] = None,
                  base_seed: int = 0x5EC0_A66,
                  transport: str = "sim", mesh=None,
-                 dp_axes: Sequence[str] = ("data",)):
+                 dp_axes: Sequence[str] = ("data",),
+                 retry: Optional[RetryPolicy] = None,
+                 breaker: Optional[CircuitBreaker] = None,
+                 chaos=None):
         if epochs is not None:
             snap = epochs.current()
             assert snap.n_nodes == default_params.n_nodes, \
@@ -59,7 +69,8 @@ class AggregationService:
         self.base_seed = base_seed
         self.executor = BatchedExecutor(kernel_impl=kernel_impl,
                                         transport=transport, mesh=mesh,
-                                        dp_axes=dp_axes)
+                                        dp_axes=dp_axes, retry=retry,
+                                        breaker=breaker, chaos=chaos)
         self.queue = AdmissionQueue(self.executor, batching,
                                     pre_execute=self._merge_epoch_faults)
         self._sessions: dict[int, Session] = {}
@@ -82,7 +93,12 @@ class AggregationService:
     # in all three, so the age watermark is meaningful out of the box;
     # tests pass explicit ticks to all of them instead.
     def open(self, params: Optional[SessionParams] = None,
-             now: Optional[float] = None) -> Session:
+             now: Optional[float] = None,
+             ttl: Optional[float] = None) -> Session:
+        """Admit a new session.  ``ttl`` (defaulting to
+        ``BatchingConfig.session_ttl``) sets the session deadline:
+        ``expires_at = now + ttl`` on the open/seal/pump clock — a
+        session still queued past it moves to EXPIRED at pump time."""
         now = time.monotonic() if now is None else now
         params = params or self.default_params
         sid = self._next_sid
@@ -91,8 +107,10 @@ class AggregationService:
         if epoch is not None:
             assert epoch.n_nodes == params.n_nodes, \
                 "session shape must match the epoch committee layout"
+        ttl = self.queue.batching.session_ttl if ttl is None else ttl
         s = Session(sid, params, derive_session_seed(self.base_seed, sid),
-                    epoch=epoch, opened_at=now)
+                    epoch=epoch, opened_at=now,
+                    expires_at=None if ttl is None else now + ttl)
         self._sessions[sid] = s
         return s
 
@@ -103,9 +121,10 @@ class AggregationService:
         self._sessions[sid].contribute(slot, value)
 
     def seal(self, sid: int, now: Optional[float] = None) -> None:
+        now = time.monotonic() if now is None else now
         s = self._sessions[sid]
-        s.seal(time.monotonic() if now is None else now)
-        self.queue.submit(s)
+        s.seal(now)
+        self.queue.submit(s, now=now)
 
     def pump(self, now: Optional[float] = None, force: bool = False) -> int:
         """Flush ready batches; returns number of sessions revealed."""
@@ -126,9 +145,12 @@ class AggregationService:
         return out
 
     def evict(self, sid: int) -> None:
-        """Forget a terminal (REVEALED/FAILED) session."""
+        """Forget a terminal (REVEALED/FAILED/EXPIRED) session."""
         s = self._sessions[sid]
-        assert s.state in (SessionState.REVEALED, SessionState.FAILED), s
+        if s.state not in (SessionState.REVEALED, SessionState.FAILED,
+                           SessionState.EXPIRED):
+            raise LifecycleError(
+                f"only terminal sessions can be evicted, got {s!r}")
         del self._sessions[sid]
 
     # -- introspection ------------------------------------------------------
@@ -143,6 +165,10 @@ class AggregationService:
             "queue": self.queue.metrics,
             "executor_cache": self.executor.cache_stats,
             "plan_cache": plan_cache_stats(),
+            "resilience": self.executor.resilience,
+            "failed_sessions": sum(
+                s.state is SessionState.FAILED
+                for s in self._sessions.values()),
             "epoch": (self.epochs.current().epoch
                       if self.epochs is not None else None),
         }

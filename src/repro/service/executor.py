@@ -1,4 +1,4 @@
-"""Batched session executor + admission scheduler.
+"""Batched session executor + admission scheduler (+ resilience layer).
 
 The executor is where the service meets the protocol core: S concurrent
 sessions that share a :class:`BatchKey` are packed into one
@@ -25,6 +25,20 @@ exceeds ``BatchingConfig.max_row_elems`` contributes several (n, T_row)
 rows whose pad-stream counter offsets continue where the previous row
 stopped, so the chunked session is bit-identical to a monolithic one.
 
+Runtime faults (a raising dispatch, a compile failure, a stalled
+collective) are handled by the resilience layer rather than failing
+all S rows: :meth:`BatchedExecutor.execute` retries the batch per its
+:class:`~repro.runtime.resilience.RetryPolicy` (exponential backoff,
+deterministic jitter, optional per-attempt deadline), then *bisects*
+a still-failing batch to quarantine the poison session(s) into the
+``dead_letter`` list while the healthy halves reveal normally.  With a
+``transport="mesh"`` executor, a
+:class:`~repro.runtime.resilience.CircuitBreaker` adds the degrade
+ladder: K consecutive mesh failures fall the executor back to the sim
+transport (bit-identical by construction) until a post-cooloff probe
+succeeds.  ``runtime.chaos`` injects deterministic runtime faults into
+exactly this machinery for tests.
+
 The admission queue coalesces sealed sessions per batch key and flushes
 on two watermarks:
 
@@ -33,9 +47,20 @@ on two watermarks:
     waited ``max_age`` (``now`` defaults to ``time.monotonic()``; tests
     pass explicit ticks).
 
-It also keeps fairness/starvation telemetry: per-key age watermarks
-(``oldest_ages``), the max observed queue age, and per-reason flush
-counters — see :attr:`AdmissionQueue.metrics`.
+It also enforces two protection tiers:
+
+  * session deadlines — a queued session past its ``expires_at`` moves
+    to EXPIRED at pump time instead of aggregating;
+  * load shedding — when total pending rows exceed the
+    ``max_pending_rows`` high-watermark, newest-arrival sessions are
+    shed (EXPIRED, flush reason ``"shed"``) with weighted-fair victim
+    selection across batch keys: keys are weighted by pending rows
+    discounted by their ``oldest_ages`` watermark, so large young
+    floods shed first and old starving keys are protected.
+
+Fairness/starvation telemetry rides on :attr:`AdmissionQueue.metrics`:
+per-key age watermarks (``oldest_ages``), the max observed queue age,
+per-reason flush counters, and the shed/expired/dropped counts.
 
 Payload lengths are rounded up to ``pad_buckets`` so sessions with
 similar (not identical) T share a compiled executable; the pad tail is
@@ -51,9 +76,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import MeshTransport, SimTransport, execute_chunks
-from repro.core.plan import SessionMeta, compile_plan, fault_masks_of
-from repro.service.session import Session, SessionState
+from repro.core.engine import (MeshTransport, SimTransport, execute_chunks)
+from repro.core.plan import (SessionMeta, compile_plan, fault_masks_of,
+                             _require)
+from repro.runtime.chaos import (ChaosConfig, ChaosError, ChaosSchedule,
+                                 ChaosTransport)
+from repro.runtime.resilience import (CircuitBreaker, DeadlineExceeded,
+                                      RetryPolicy)
+from repro.service.session import (LifecycleError, Session, SessionState)
 
 BatchKey = tuple
 
@@ -70,6 +100,13 @@ class BatchingConfig:
     # keeps the historical behavior (one row, padded to a multiple of
     # the top bucket)
     max_row_elems: Optional[int] = None
+    # load-shedding high-watermark: when the TOTAL pending rows across
+    # all batch keys exceed this, newest-arrival sessions are shed
+    # (EXPIRED, flush reason "shed") at submit time; None = unbounded
+    max_pending_rows: Optional[int] = None
+    # default session deadline: open() sets expires_at = now + ttl
+    # unless the caller overrides it; None = sessions never expire
+    session_ttl: Optional[float] = None
 
     def padded_elems(self, elems: int) -> int:
         for b in self.pad_buckets:
@@ -90,26 +127,53 @@ class BatchedExecutor:
     """Runs batches of sealed sessions through one engine execution.
 
     Compiled executables are cached per (batch key, row count, fault
-    modes) — a steady-state service replays a handful of shapes, so each
-    shape compiles once and every later batch is a single cached call.
-    """
+    modes, backend) — a steady-state service replays a handful of
+    shapes, so each shape compiles once and every later batch is a
+    single cached call.  Failures go through the retry -> bisect ->
+    quarantine ladder of ``retry`` (see module docstring); a mesh
+    executor additionally degrades to the sim transport behind
+    ``breaker``."""
 
     def __init__(self, kernel_impl: Optional[str] = None,
                  transport: str = "sim",
                  mesh: Optional[jax.sharding.Mesh] = None,
-                 dp_axes: Sequence[str] = ("data",)):
-        assert transport in ("sim", "mesh"), transport
-        if transport == "mesh":
-            assert mesh is not None, "mesh transport needs a mesh"
+                 dp_axes: Sequence[str] = ("data",),
+                 retry: Optional[RetryPolicy] = None,
+                 breaker: Optional[CircuitBreaker] = None,
+                 chaos=None):
+        _require(transport in ("sim", "mesh"),
+                 f"unknown executor transport {transport!r}; pick 'sim' "
+                 "(single-device oracle) or 'mesh' (shard_map over a dp "
+                 "mesh)")
+        _require(transport != "mesh" or mesh is not None,
+                 "executor transport='mesh' needs a mesh: pass "
+                 "mesh=compat.node_mesh(n_nodes) (one device per "
+                 "protocol node)")
         self.kernel_impl = kernel_impl
         self.transport = transport
         self.mesh = mesh
         self.dp_axes = tuple(dp_axes)
+        self.retry = retry if retry is not None else RetryPolicy()
+        # the degrade ladder only applies to the distributed backend —
+        # a sim executor has nothing to fall back to
+        self.breaker = breaker if breaker is not None else (
+            CircuitBreaker() if transport == "mesh" else None)
+        if chaos is not None and isinstance(chaos, ChaosConfig):
+            chaos = ChaosSchedule(chaos)
+        self.chaos: Optional[ChaosSchedule] = chaos
         self._fns: dict = {}
         self.batches_run = 0
         self.sessions_run = 0
         self.fn_cache_hits = 0
         self.fn_cache_misses = 0
+        # resilience accounting (surfaced via ``resilience`` / svc.stats)
+        self.retries = 0              # re-attempts after a failure
+        self.bisections = 0           # batch splits after budget exhaust
+        self.quarantined = 0          # sessions moved to the dead letter
+        self.deadline_hits = 0        # attempts past retry.deadline_s
+        self.degraded_batches = 0     # batches run on the sim fallback
+        self.dead_letter: list[tuple[int, str]] = []   # (sid, error repr)
+        self._units = 0               # retry units started (jitter salt)
 
     @property
     def cache_stats(self) -> dict:
@@ -118,12 +182,30 @@ class BatchedExecutor:
         return {"hits": self.fn_cache_hits, "misses": self.fn_cache_misses,
                 "size": len(self._fns)}
 
+    @property
+    def resilience(self) -> dict:
+        """Retry/quarantine/degrade account (see module docstring)."""
+        return {
+            "retries": self.retries,
+            "bisections": self.bisections,
+            "quarantined": self.quarantined,
+            "deadline_hits": self.deadline_hits,
+            "degraded_batches": self.degraded_batches,
+            "dead_letter": tuple(self.dead_letter),
+            "chaos_injected": (self.chaos.injected
+                               if self.chaos is not None else 0),
+            "breaker": (self.breaker.snapshot()
+                        if self.breaker is not None else None),
+        }
+
     def _compiled(self, template: Session, padded: int, S: int,
-                  modes: frozenset) -> Callable:
+                  modes: frozenset, backend: str) -> Callable:
         # fault PATTERNS are runtime (S, n) masks, so churn/missing-slot
         # variation never retraces; only the set of fault MODES present
-        # (<= 8 combinations) is part of the executable's identity
-        key = (template.params.batch_key(padded), S, modes)
+        # (<= 8 combinations) and the dispatch backend are part of the
+        # executable's identity (the degrade ladder adds "sim" entries
+        # next to a mesh executor's primaries)
+        key = (template.params.batch_key(padded), S, modes, backend)
         fn = self._fns.get(key)
         if fn is not None:
             self.fn_cache_hits += 1
@@ -131,7 +213,7 @@ class BatchedExecutor:
             self.fn_cache_misses += 1
             cfg = template.params.agg_config(self.kernel_impl)
             plan = compile_plan(cfg)
-            if self.transport == "mesh":
+            if backend == "mesh":
                 mt = MeshTransport(self.mesh, self.dp_axes,
                                    impl=self.kernel_impl)
 
@@ -155,52 +237,168 @@ class BatchedExecutor:
             self._fns[key] = fn
         return fn
 
+    # -- one dispatch attempt ----------------------------------------------
+    def _attempt(self, sessions: Sequence[Session], padded: int,
+                 backend: str, fault: Optional[ChaosConfig]):
+        """Pack + dispatch one batch once; returns (revealed, owner)
+        WITHOUT touching session state (the caller reveals after the
+        deadline check, so a failed/too-slow attempt stays retriable)."""
+        if fault is not None and fault.mode == "dispatch":
+            raise ChaosError(
+                f"chaos: injected dispatch failure "
+                f"(batch of {len(sessions)})")
+        if fault is not None and fault.mode == "slow":
+            time.sleep(fault.slow_s)
+        n_nodes = sessions[0].params.n_nodes
+        rows, seeds, offsets, owner = [], [], [], []
+        for i, s in enumerate(sessions):
+            for j, mat in enumerate(s.payload_rows(padded)):
+                rows.append(mat)
+                seeds.append(s.seed)
+                offsets.append((s.pad_offset + j * padded) & _MASK32)
+                owner.append(i)
+        xs = np.stack(rows)                      # (R, n, padded)
+        owner = np.asarray(owner)
+        sess_masks = fault_masks_of(
+            [s.fault.specs() for s in sessions], n_nodes)
+        masks = {m: v[owner] for m, v in sess_masks.items()}  # per row
+        if fault is not None and fault.mode == "compile":
+            raise ChaosError("chaos: injected compile failure")
+        if fault is not None and fault.mode == "hop":
+            revealed = self._chaos_hop_run(sessions[0], xs, seeds, offsets,
+                                           masks, backend, fault)
+        else:
+            fn = self._compiled(sessions[0], padded, len(rows),
+                                frozenset(masks), backend)
+            revealed = fn(
+                jnp.asarray(xs),
+                jnp.asarray(seeds, dtype=jnp.uint32),
+                jnp.asarray(offsets, dtype=jnp.uint32),
+                {k: jnp.asarray(v) for k, v in masks.items()})
+        return np.asarray(revealed), owner
+
+    def _chaos_hop_run(self, template: Session, xs, seeds, offsets, masks,
+                       backend: str, fault: ChaosConfig):
+        """Eager (unjitted) engine run with a ChaosTransport wrapped
+        around the substrate, so a raise-at-hop-k fault fires on every
+        armed attempt instead of only the first trace."""
+        cfg = template.params.agg_config(self.kernel_impl)
+        plan = compile_plan(cfg)
+        meta = SessionMeta(
+            seeds=jnp.asarray(seeds, dtype=jnp.uint32),
+            offsets=jnp.asarray(offsets, dtype=jnp.uint32),
+            fault_masks={k: jnp.asarray(v) for k, v in masks.items()})
+        xj = jnp.asarray(xs)
+        if backend == "mesh":
+            mt = MeshTransport(self.mesh, self.dp_axes,
+                               impl=self.kernel_impl,
+                               wrap_inner=lambda tp: ChaosTransport(
+                                   tp, fault))
+            return mt.execute(plan, xj, meta, reveal_only=True)
+        R, n, T = xj.shape
+        tp = ChaosTransport(SimTransport(plan, S=R), fault)
+        flat = xj.reshape(R * n, T).astype(jnp.float32)
+        (out,) = execute_chunks(plan, tp, [flat], meta, reveal_only=True)
+        return out
+
+    # -- retry / bisect / quarantine ladder ---------------------------------
+    def _run_unit(self, sessions: list[Session],
+                  padded: int) -> Optional[Exception]:
+        """Drive one retry unit to a terminal state: every session ends
+        REVEALED or FAILED (never AGGREGATING).  Returns the first
+        triggering error if any session was quarantined, else None."""
+        policy = self.retry
+        self._units += 1
+        salt = self._units
+        last: Optional[Exception] = None
+        for attempt in range(1, policy.max_attempts + 1):
+            backend = self.transport
+            degraded = False
+            if (self.breaker is not None and backend == "mesh"
+                    and not self.breaker.allow_primary()):
+                backend, degraded = "sim", True
+            fault = (self.chaos.decide(sessions, backend)
+                     if self.chaos is not None else None)
+            t0 = time.monotonic()
+            try:
+                revealed, owner = self._attempt(sessions, padded,
+                                                backend, fault)
+                if (policy.deadline_s is not None
+                        and time.monotonic() - t0 > policy.deadline_s):
+                    self.deadline_hits += 1
+                    raise DeadlineExceeded(
+                        f"batch attempt exceeded the "
+                        f"{policy.deadline_s}s deadline")
+            except Exception as e:
+                last = e
+                if self.breaker is not None and backend == "mesh":
+                    self.breaker.record_failure()
+                if attempt < policy.max_attempts:
+                    self.retries += 1
+                    delay = policy.backoff_s(attempt, salt=salt)
+                    if delay > 0:
+                        policy.sleep(delay)
+                continue
+            if self.breaker is not None and backend == "mesh":
+                self.breaker.record_success()
+            if degraded:
+                self.degraded_batches += 1
+            for i, s in enumerate(sessions):
+                s.reveal(revealed[owner == i].reshape(-1))
+            self.batches_run += 1
+            self.sessions_run += len(sessions)
+            return None
+        # attempt budget exhausted: bisect to isolate the poison rows
+        if policy.bisect and len(sessions) > 1:
+            self.bisections += 1
+            mid = len(sessions) // 2
+            e1 = self._run_unit(sessions[:mid], padded)
+            e2 = self._run_unit(sessions[mid:], padded)
+            return e1 if e1 is not None else e2
+        # irreducible unit still failing: quarantine it
+        for s in sessions:
+            s.fail(repr(last))
+            self.dead_letter.append((s.sid, repr(last)))
+        self.quarantined += len(sessions)
+        if len(self.dead_letter) > 4096:          # bounded history
+            del self.dead_letter[:-2048]
+        return last
+
     def execute(self, sessions: Sequence[Session],
                 padded_elems: Optional[int] = None) -> None:
         """Aggregate + reveal one batch (all sessions share a batch key).
 
         A session may span several batch rows (long payloads); row j of
         a session reuses its pad key at counter offset ``pad_offset +
-        j * padded_elems``.  On an executor error every session in the
-        batch moves to FAILED (never retried, never wedged in
-        AGGREGATING) and the error propagates to the pump caller."""
+        j * padded_elems``.  Failures run the retry -> bisect ->
+        quarantine ladder: surviving sessions reveal normally and the
+        poison ones land in :attr:`dead_letter` as FAILED — a session is
+        never left in AGGREGATING and never silently dropped.  The
+        first triggering error re-raises only when NO session in the
+        call survived (so the pump can account a fully-poisoned key
+        without starving the rest of its sweep)."""
         if not sessions:
             return
         padded = padded_elems or max(s.params.elems for s in sessions)
         key0 = sessions[0].params.batch_key(padded)
-        assert all(s.params.batch_key(padded) == key0 for s in sessions), \
-            "batch mixes incompatible sessions"
-        n_nodes = sessions[0].params.n_nodes
+        _require(all(s.params.batch_key(padded) == key0 for s in sessions),
+                 "batch mixes incompatible sessions (distinct batch "
+                 "keys); group sessions per AdmissionQueue.submit key")
+        sessions = list(sessions)
         for s in sessions:
             s.mark_aggregating()
         try:
-            rows, seeds, offsets, owner = [], [], [], []
-            for i, s in enumerate(sessions):
-                for j, mat in enumerate(s.payload_rows(padded)):
-                    rows.append(mat)
-                    seeds.append(s.seed)
-                    offsets.append((s.pad_offset + j * padded) & _MASK32)
-                    owner.append(i)
-            xs = np.stack(rows)                      # (R, n, padded)
-            owner = np.asarray(owner)
-            sess_masks = fault_masks_of(
-                [s.fault.specs() for s in sessions], n_nodes)
-            masks = {m: v[owner] for m, v in sess_masks.items()}  # per row
-            fn = self._compiled(sessions[0], padded, len(rows),
-                                frozenset(masks))
-            revealed = np.asarray(fn(
-                jnp.asarray(xs),
-                jnp.asarray(seeds, dtype=jnp.uint32),
-                jnp.asarray(offsets, dtype=jnp.uint32),
-                {k: jnp.asarray(v) for k, v in masks.items()}))
-        except Exception as e:
+            err = self._run_unit(sessions, padded)
+        except BaseException:
+            # unexpected escape (bug / KeyboardInterrupt): never leave a
+            # session wedged in AGGREGATING
             for s in sessions:
-                s.fail(repr(e))
+                if s.state is SessionState.AGGREGATING:
+                    s.fail("executor aborted mid-batch")
             raise
-        for i, s in enumerate(sessions):
-            s.reveal(revealed[owner == i].reshape(-1))
-        self.batches_run += 1
-        self.sessions_run += len(sessions)
+        if err is not None and all(s.state is SessionState.FAILED
+                                   for s in sessions):
+            raise err
 
 
 class AdmissionQueue:
@@ -215,19 +413,33 @@ class AdmissionQueue:
         self._pending: dict[BatchKey, list[Session]] = {}
         self.batch_sizes: list[int] = []
         # fairness/starvation telemetry (see ``metrics``)
-        self.flush_reasons = {"size": 0, "age": 0, "force": 0}
+        self.flush_reasons = {"size": 0, "age": 0, "force": 0, "shed": 0}
         self.max_queue_age = 0.0
         self.starved_sessions = 0     # flushed only after 2x the age mark
+        self.expired_sessions = 0     # deadline reached while queued
+        self.shed_sessions = 0        # dropped by the load watermark
+        self.dropped_sessions = 0     # left the queue already terminal
 
-    def submit(self, session: Session) -> BatchKey:
-        assert session.state is SessionState.SEALED, session
+    def submit(self, session: Session,
+               now: Optional[float] = None) -> BatchKey:
+        if session.state is not SessionState.SEALED:
+            raise LifecycleError(
+                f"only SEALED sessions enter the admission queue, got "
+                f"{session!r}")
         row_elems, _ = self.batching.row_layout(session.params.elems)
         key = session.params.batch_key(row_elems)
         self._pending.setdefault(key, []).append(session)
+        if self.batching.max_pending_rows is not None:
+            self._shed(session.sealed_at if now is None else now)
         return key
 
     def depth(self) -> int:
         return sum(len(q) for q in self._pending.values())
+
+    def depth_rows(self) -> int:
+        """Total pending batch rows across all keys (the unit the
+        ``max_pending_rows`` load watermark is measured in)."""
+        return sum(self._rows(key, q) for key, q in self._pending.items())
 
     def oldest_ages(self, now: Optional[float] = None) -> dict:
         """Per-key age watermark: how long each key's oldest sealed
@@ -242,12 +454,54 @@ class AdmissionQueue:
             "flush_reasons": dict(self.flush_reasons),
             "max_queue_age": self.max_queue_age,
             "starved_sessions": self.starved_sessions,
+            "expired_sessions": self.expired_sessions,
+            "shed_sessions": self.shed_sessions,
+            "dropped_sessions": self.dropped_sessions,
             "pending_sessions": self.depth(),
+            "pending_rows": self.depth_rows(),
         }
 
     def _rows(self, key: BatchKey, sessions: Sequence[Session]) -> int:
         row_elems = key[-1]
         return sum(s.n_rows(row_elems) for s in sessions)
+
+    def _shed(self, now: float) -> None:
+        """Load shedding: while total pending rows exceed the
+        high-watermark, drop the NEWEST arrival of the heaviest key.
+
+        Victim selection is weighted-fair across batch keys: each key
+        weighs ``pending_rows / (1 + oldest_age)`` — the key holding
+        the most work, discounted by how long its oldest session has
+        already waited — so a young flood sheds before an old starving
+        key loses anything."""
+        limit = self.batching.max_pending_rows
+        while self.depth_rows() > limit:
+            ages = self.oldest_ages(now)
+            key = max(self._pending,
+                      key=lambda k: self._rows(k, self._pending[k])
+                      / (1.0 + max(ages.get(k, 0.0), 0.0)))
+            victim = self._pending[key].pop()     # newest arrival
+            victim.expire(
+                f"shed: admission queue over max_pending_rows={limit}")
+            self.flush_reasons["shed"] += 1
+            self.shed_sessions += 1
+            if not self._pending[key]:
+                del self._pending[key]
+
+    def _sweep(self, q: list[Session], now: float) -> list[Session]:
+        """Deadline/terminal sweep of one key's queue: expired sessions
+        move to EXPIRED, sessions already terminal (failed or expired
+        elsewhere) are dropped; survivors stay queued."""
+        alive = []
+        for s in q:
+            if s.state is not SessionState.SEALED:
+                self.dropped_sessions += 1
+            elif s.expired(now):
+                s.expire("deadline: session expired before aggregation")
+                self.expired_sessions += 1
+            else:
+                alive.append(s)
+        return alive
 
     def _run(self, key: BatchKey, batch: list[Session], reason: str,
              now: float, account_age: bool = True) -> None:
@@ -266,7 +520,8 @@ class AdmissionQueue:
             del self.batch_sizes[:-2048]
 
     def pump(self, now: Optional[float] = None, force: bool = False) -> int:
-        """Flush ready batches; returns the number of sessions executed.
+        """Flush ready batches; returns the number of sessions executed
+        (revealed or quarantined — expired/shed sessions don't count).
 
         Size watermark: every group of ``max_batch`` ready rows flushes.
         Age watermark: a partial group flushes when its oldest member
@@ -274,39 +529,54 @@ class AdmissionQueue:
         ``force``).  ``now`` defaults to the monotonic clock.  A forced
         pump (drain/shutdown) skips ALL age accounting — callers that
         sealed with logical ticks would otherwise record bogus
-        monotonic-minus-tick ages."""
+        monotonic-minus-tick ages.
+
+        Keys are isolated: a key whose batch raises out of the executor
+        (a fully-poisoned batch, or a raising ``pre_execute``) is
+        skipped for the rest of this pump, the sweep continues over the
+        other keys, and the FIRST such error re-raises after the sweep
+        completes — one poisoned key never starves the rest."""
         now = time.monotonic() if now is None else now
         account_age = not force
         ran = 0
+        first_err: Optional[Exception] = None
         for key in list(self._pending):
             q = self._pending[key]
-            while self._rows(key, q) >= self.batching.max_batch:
-                # FIFO prefix that fits the row budget — never exceeds
-                # max_batch rows (keeping the compile-cache shape set
-                # small), except a single session wider than the budget,
-                # which flushes alone
-                take, rows = [], 0
-                row_elems = key[-1]
-                while q and rows + q[0].n_rows(row_elems) \
-                        <= self.batching.max_batch:
-                    s = q.pop(0)
-                    take.append(s)
-                    rows += s.n_rows(row_elems)
-                if not take:
-                    take.append(q.pop(0))
-                self._run(key, take, "size", now,
-                          account_age=account_age)
-                ran += len(take)
-            if q and (force or
-                      now - min(s.sealed_at for s in q)
-                      >= self.batching.max_age):
-                batch, self._pending[key] = list(q), []
-                q = self._pending[key]
-                # batch already dequeued: a raising executor FAILs it,
-                # never retries
-                self._run(key, batch, "force" if force else "age", now,
-                          account_age=account_age)
-                ran += len(batch)
+            q[:] = self._sweep(q, now)
+            try:
+                while self._rows(key, q) >= self.batching.max_batch:
+                    # FIFO prefix that fits the row budget — never exceeds
+                    # max_batch rows (keeping the compile-cache shape set
+                    # small), except a single session wider than the budget,
+                    # which flushes alone
+                    take, rows = [], 0
+                    row_elems = key[-1]
+                    while q and rows + q[0].n_rows(row_elems) \
+                            <= self.batching.max_batch:
+                        s = q.pop(0)
+                        take.append(s)
+                        rows += s.n_rows(row_elems)
+                    if not take:
+                        take.append(q.pop(0))
+                    self._run(key, take, "size", now,
+                              account_age=account_age)
+                    ran += len(take)
+                if q and (force or
+                          now - min(s.sealed_at for s in q)
+                          >= self.batching.max_age):
+                    batch, self._pending[key] = list(q), []
+                    q = self._pending[key]
+                    # batch already dequeued: a raising executor has
+                    # already quarantined it (never re-enqueued)
+                    self._run(key, batch, "force" if force else "age", now,
+                              account_age=account_age)
+                    ran += len(batch)
+            except Exception as e:
+                if first_err is None:
+                    first_err = e
+                q = self._pending.get(key, [])
             if not q:
-                del self._pending[key]
+                self._pending.pop(key, None)
+        if first_err is not None:
+            raise first_err
         return ran

@@ -48,7 +48,8 @@ class SessionState(enum.Enum):
     SEALED = "sealed"            # admitted to the scheduler queue
     AGGREGATING = "aggregating"  # packed into an executing batch
     REVEALED = "revealed"        # result available
-    FAILED = "failed"
+    FAILED = "failed"            # executor error (after retry/quarantine)
+    EXPIRED = "expired"          # deadline passed / shed by admission
 
 
 class LifecycleError(RuntimeError):
@@ -127,13 +128,18 @@ class Session:
 
     def __init__(self, sid: int, params: SessionParams, seed: int,
                  pad_offset: int = 0, epoch: Optional[object] = None,
-                 opened_at: float = 0.0):
+                 opened_at: float = 0.0,
+                 expires_at: Optional[float] = None):
         self.sid = sid
         self.params = params
         self.seed = int(seed) & _MASK32
         self.pad_offset = int(pad_offset) & _MASK32
         self.epoch = epoch            # EpochSnapshot this session is pinned to
         self.opened_at = opened_at
+        # deadline (same clock as opened_at/sealed_at): a session still
+        # queued past this point moves to EXPIRED at pump time instead
+        # of aggregating; None = no deadline
+        self.expires_at = expires_at
         self.sealed_at: Optional[float] = None
         self.state = SessionState.OPEN
         self.fault = SessionFaultPlan()
@@ -215,6 +221,19 @@ class Session:
         self.state = SessionState.FAILED
         self.failed_reason = reason
         self._contrib.clear()
+
+    def expire(self, reason: str = "deadline") -> None:
+        """Retire an un-executed session (deadline passed, or shed by
+        the admission queue's load watermark).  Only sensible before
+        aggregation starts — a dispatched batch either reveals or
+        fails."""
+        self._require(SessionState.OPEN, SessionState.SEALED)
+        self.state = SessionState.EXPIRED
+        self.failed_reason = reason
+        self._contrib.clear()
+
+    def expired(self, now: float) -> bool:
+        return self.expires_at is not None and now >= self.expires_at
 
     @property
     def result(self) -> np.ndarray:

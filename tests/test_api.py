@@ -62,9 +62,11 @@ def test_facade_signatures_are_pinned():
                     "security: 'Optional[Security]' = None, "
                     "wire: 'Optional[Wire]' = None, "
                     "runtime: 'Optional[Runtime]' = None, "
-                    "batching=None, epochs=None)",
+                    "batching=None, epochs=None, retry=None, breaker=None, "
+                    "chaos=None)",
         "allreduce": "(self, tree)",
-        "open_session": "(self, elems: 'int', *, params=None, now=None)",
+        "open_session": "(self, elems: 'int', *, params=None, now=None, "
+                        "ttl=None)",
         "seal": "(self, sid: 'int', now=None) -> 'None'",
         "pump": "(self, now=None, force: 'bool' = False) -> 'int'",
         "drain": "(self) -> 'int'",

@@ -1,0 +1,600 @@
+"""Chaos-injected resilience conformance: the retry -> bisect ->
+quarantine ladder, session deadlines, load shedding, and the mesh->sim
+circuit-breaker degrade ladder, driven by ``runtime.chaos``.
+
+The acceptance grid: every chaos mode x transport {sim, mesh} x retry
+outcome {recovered, bisected, quarantined} —
+
+  * surviving sessions REVEAL bit-identical to a fault-free run
+    (chaos faults raise or delay, never corrupt payloads);
+  * quarantined sessions land in the executor's dead-letter list with
+    the triggering error;
+  * no session is ever left in AGGREGATING.
+
+The mesh half of the grid runs in a forced-8-device subprocess (marked
+``mesh``/``slow``, like the engine equivalence cells); everything else
+runs single-host on the sim oracle — `make chaos-lane` sweeps this file
+minus the mesh cell over the fixed chaos seeds baked into the
+parametrizations.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.runtime.chaos import (ChaosConfig, ChaosError, ChaosSchedule,
+                                 ChaosTransport)
+from repro.runtime.resilience import (CircuitBreaker, DeadlineExceeded,
+                                      ResilienceError, RetryPolicy)
+from repro.service import (AggregationService, BatchingConfig, LifecycleError,
+                           SessionParams, SessionState)
+
+pytestmark = pytest.mark.chaos
+
+RNG = np.random.default_rng(23)
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+N, ELEMS = 8, 16
+
+
+def _params(elems=ELEMS):
+    return SessionParams(n_nodes=N, elems=elems, cluster_size=4,
+                         redundancy=3)
+
+
+def _service(S=6, vals=None, batching=None, **kw):
+    """A sim-oracle service pre-loaded with S sealed sessions carrying
+    ``vals`` (S, n, elems); fresh service => sids 0..S-1, so two
+    services fed the same vals derive identical pad keys."""
+    svc = AggregationService(
+        _params(), batching=batching or BatchingConfig(max_batch=64,
+                                                       max_age=1e9), **kw)
+    sessions = []
+    for i in range(S):
+        s = svc.open(now=0.0)
+        for slot in range(N):
+            s.contribute(slot, vals[i, slot])
+        svc.seal(s.sid, now=0.0)
+        sessions.append(s)
+    return svc, sessions
+
+
+def _vals(S=6):
+    return RNG.normal(size=(S, N, ELEMS)).astype(np.float32) * 0.3
+
+
+def _reference(vals):
+    """Fault-free run of the same sessions (same sids => same pad
+    keys): the bit-identity oracle for every chaos scenario."""
+    svc, sessions = _service(S=len(vals), vals=vals)
+    assert svc.pump(force=True) == len(vals)
+    return np.stack([s.result for s in sessions])
+
+
+# ---------------------------------------------------------------------------
+# Outcome "recovered": every chaos mode, transient fault, retry wins
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("chaos", [
+    ChaosConfig(mode="dispatch", times=1),
+    ChaosConfig(mode="compile", times=1),
+    ChaosConfig(mode="hop", hop_k=0, times=1),
+    # the 1.0s stall alone exceeds the 0.5s deadline, so attempt 1
+    # fails deterministically; its completed dispatch warms the jitted
+    # fn, so the clean retry finishes far under the deadline
+    ChaosConfig(mode="slow", slow_s=1.0, times=1),
+], ids=lambda c: c.mode)
+def test_transient_fault_recovers_bit_identical(chaos):
+    """One injected fault per mode; the retry succeeds and the batch
+    reveals bit-identical to the fault-free run."""
+    vals = _vals()
+    retry = RetryPolicy(
+        max_attempts=3, base_backoff_s=0.0,
+        deadline_s=0.5 if chaos.mode == "slow" else None)
+    svc, sessions = _service(vals=vals, retry=retry, chaos=chaos)
+    assert svc.pump(force=True) == 6
+    assert np.array_equal(np.stack([s.result for s in sessions]),
+                          _reference(vals))
+    res = svc.stats["resilience"]
+    assert res["chaos_injected"] == 1
+    assert res["retries"] == 1
+    assert res["quarantined"] == 0 and res["dead_letter"] == ()
+    assert res["deadline_hits"] == (1 if chaos.mode == "slow" else 0)
+    assert all(s.state is SessionState.REVEALED for s in sessions)
+
+
+# ---------------------------------------------------------------------------
+# Outcomes "bisected" / "quarantined": poison isolation, dead letter
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["dispatch", "hop"])
+def test_poison_session_bisected_into_dead_letter(mode):
+    """A fault pinned to one session (``poison_sids``) exhausts the
+    batch's attempts, bisection isolates it, the survivors reveal
+    bit-identical, and the poison lands in the dead letter FAILED."""
+    vals = _vals()
+    poison = 3
+    chaos = ChaosConfig(mode=mode, hop_k=0, poison_sids=(poison,))
+    svc, sessions = _service(
+        vals=vals, chaos=chaos,
+        retry=RetryPolicy(max_attempts=2, base_backoff_s=0.0))
+    assert svc.pump(force=True) == 6       # executed incl. the quarantine
+    ref = _reference(vals)
+    for i, s in enumerate(sessions):
+        if i == poison:
+            assert s.state is SessionState.FAILED
+            assert "chaos" in s.failed_reason
+        else:
+            assert s.state is SessionState.REVEALED
+            assert np.array_equal(s.result, ref[i])
+    res = svc.stats["resilience"]
+    assert res["bisections"] == 2          # [0..5] -> [3,4,5] -> [3]
+    assert res["quarantined"] == 1
+    assert len(res["dead_letter"]) == 1
+    sid, err = res["dead_letter"][0]
+    assert sid == poison and "chaos" in err
+    assert svc.stats["failed_sessions"] == 1
+
+
+def test_whole_batch_quarantined_without_bisection():
+    """``bisect=False`` restores whole-batch quarantine: a persistent
+    fault fails every session, all land in the dead letter, and the
+    pump re-raises the triggering error (nothing survived)."""
+    vals = _vals(S=4)
+    svc, sessions = _service(
+        S=4, vals=vals, chaos=ChaosConfig(mode="dispatch"),
+        retry=RetryPolicy(max_attempts=2, base_backoff_s=0.0, bisect=False))
+    with pytest.raises(ChaosError):
+        svc.pump(force=True)
+    assert all(s.state is SessionState.FAILED for s in sessions)
+    res = svc.stats["resilience"]
+    assert res["bisections"] == 0 and res["quarantined"] == 4
+    assert sorted(sid for sid, _ in res["dead_letter"]) == [0, 1, 2, 3]
+    assert svc.pump(force=True) == 0       # queue fully drained
+
+
+def test_pump_isolates_poisoned_key_and_reraises_after_sweep():
+    """A key whose whole batch is quarantined must not starve the other
+    keys: the pump finishes the sweep, then re-raises the first error."""
+    vals = _vals(S=2)
+    svc = AggregationService(
+        _params(), batching=BatchingConfig(max_batch=64, max_age=1e9),
+        chaos=ChaosConfig(mode="dispatch", poison_sids=(0,)),
+        retry=RetryPolicy(max_attempts=1))
+    sa = svc.open(now=0.0)                           # key A: elems=16
+    for slot in range(N):
+        sa.contribute(slot, vals[0, slot])
+    svc.seal(sa.sid, now=0.0)
+    sb = svc.open(params=_params(elems=100), now=0.0)   # key B: elems=100
+    for slot in range(N):
+        sb.contribute(slot, np.full(100, 0.25, np.float32))
+    svc.seal(sb.sid, now=0.0)
+    with pytest.raises(ChaosError):
+        svc.pump(force=True)
+    assert sa.state is SessionState.FAILED           # key A quarantined
+    assert sb.state is SessionState.REVEALED         # key B still ran
+    assert np.allclose(sb.result, np.full(100, 0.25 * N), atol=1e-4)
+    assert svc.queue.depth() == 0
+
+
+# ---------------------------------------------------------------------------
+# Chaos storm over the fixed seed sweep (the chaos-lane anchor)
+# ---------------------------------------------------------------------------
+
+
+def _storm(seed):
+    vals = _vals(S=8)
+    svc, sessions = _service(
+        S=8, vals=vals, chaos=ChaosConfig(mode="dispatch", p=0.4, seed=seed),
+        retry=RetryPolicy(max_attempts=2, base_backoff_s=0.0))
+    try:
+        svc.pump(force=True)
+    except ChaosError:
+        pass                                          # all-failed batch
+    ref = _reference(vals)
+    dead = dict(svc.executor.dead_letter)
+    failed = []
+    for i, s in enumerate(sessions):
+        # terminal, never wedged in AGGREGATING
+        assert s.state in (SessionState.REVEALED, SessionState.FAILED)
+        if s.state is SessionState.REVEALED:
+            assert np.array_equal(s.result, ref[i])   # survivors exact
+        else:
+            failed.append(s.sid)
+            assert "chaos" in dead[s.sid]             # dead-lettered
+    return tuple(failed), svc.stats["resilience"]["chaos_injected"]
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_chaos_storm_is_terminal_exact_and_replayable(seed):
+    """Random fault storm at p=0.4: every session ends terminal,
+    survivors bit-identical, quarantines dead-lettered — and the whole
+    outcome replays exactly from the seed."""
+    assert _storm(seed) == _storm(seed)
+
+
+# ---------------------------------------------------------------------------
+# Session deadlines and load shedding
+# ---------------------------------------------------------------------------
+
+
+def test_session_deadline_expires_at_pump_not_aggregates():
+    vals = _vals(S=2)
+    svc = AggregationService(
+        _params(), batching=BatchingConfig(max_batch=64, max_age=1e9))
+    doomed = svc.open(now=0.0, ttl=5.0)
+    live = svc.open(now=0.0)                    # no ttl: never expires
+    for slot in range(N):
+        doomed.contribute(slot, vals[0, slot])
+        live.contribute(slot, vals[1, slot])
+    svc.seal(doomed.sid, now=0.0)
+    svc.seal(live.sid, now=0.0)
+    assert svc.pump(now=10.0, force=True) == 1  # only the live session
+    assert doomed.state is SessionState.EXPIRED
+    assert "deadline" in doomed.failed_reason
+    assert live.state is SessionState.REVEALED
+    assert svc.queue.metrics["expired_sessions"] == 1
+    with pytest.raises(LifecycleError):
+        _ = doomed.result
+    svc.evict(doomed.sid)                       # EXPIRED is evictable
+    with pytest.raises(KeyError):
+        svc.result(doomed.sid)
+
+
+def test_default_ttl_comes_from_batching_config():
+    svc = AggregationService(
+        _params(), batching=BatchingConfig(max_batch=64, max_age=1e9,
+                                           session_ttl=7.0))
+    s = svc.open(now=1.0)
+    assert s.expires_at == 8.0
+    assert svc.open(now=1.0, ttl=2.0).expires_at == 3.0
+
+
+def test_force_pump_drains_expired_keys_under_logical_ticks():
+    """A key whose every member expired must drain cleanly on a forced
+    pump (shutdown path) — no empty-batch dispatch, no leftover key."""
+    svc = AggregationService(
+        _params(), batching=BatchingConfig(max_batch=64, max_age=1e9))
+    doomed = [svc.open(now=0.0, ttl=1.0) for _ in range(3)]
+    for s in doomed:
+        for slot in range(N):
+            s.contribute(slot, np.zeros(ELEMS, np.float32))
+        svc.seal(s.sid, now=0.0)
+    assert svc.pump(now=50.0, force=True) == 0
+    assert all(s.state is SessionState.EXPIRED for s in doomed)
+    assert svc.queue.depth() == 0 and not svc.queue._pending
+    assert svc.queue.metrics["expired_sessions"] == 3
+    assert svc.executor.batches_run == 0
+
+
+def test_load_shedding_sheds_newest_over_high_watermark():
+    svc = AggregationService(
+        _params(), batching=BatchingConfig(max_batch=64, max_age=1e9,
+                                           max_pending_rows=4))
+    sessions = []
+    for i in range(6):
+        s = svc.open(now=float(i))
+        for slot in range(N):
+            s.contribute(slot, np.zeros(ELEMS, np.float32))
+        svc.seal(s.sid, now=float(i))
+        sessions.append(s)
+    m = svc.queue.metrics
+    assert m["shed_sessions"] == 2 and m["pending_rows"] == 4
+    assert m["flush_reasons"]["shed"] == 2
+    # newest arrivals shed; the 4 oldest survive to reveal
+    assert [s.state for s in sessions[4:]] == [SessionState.EXPIRED] * 2
+    assert all("shed" in s.failed_reason for s in sessions[4:])
+    assert svc.pump(force=True) == 4
+    assert all(s.state is SessionState.REVEALED for s in sessions[:4])
+
+
+def test_shedding_is_weighted_fair_protects_old_keys():
+    """Victims come from the big YOUNG key (a flood), never from the
+    old key already near its age watermark."""
+    svc = AggregationService(
+        _params(), batching=BatchingConfig(max_batch=64, max_age=1e9,
+                                           max_pending_rows=3))
+    old = []
+    for _ in range(2):                       # key A: elems=16, sealed at 0
+        s = svc.open(now=0.0)
+        for slot in range(N):
+            s.contribute(slot, np.zeros(ELEMS, np.float32))
+        svc.seal(s.sid, now=0.0)
+        old.append(s)
+    flood = []
+    for _ in range(3):                       # key B: elems=100, sealed late
+        s = svc.open(params=_params(elems=100), now=10.0)
+        for slot in range(N):
+            s.contribute(slot, np.zeros(100, np.float32))
+        svc.seal(s.sid, now=10.0)
+        flood.append(s)
+    assert all(s.state is SessionState.SEALED for s in old)
+    assert [s.state for s in flood] == [SessionState.SEALED,
+                                        SessionState.EXPIRED,
+                                        SessionState.EXPIRED]
+    assert svc.queue.metrics["shed_sessions"] == 2
+
+
+# ---------------------------------------------------------------------------
+# Degrade ladder: circuit breaker falls back to the sim oracle
+# ---------------------------------------------------------------------------
+
+
+def test_breaker_trips_degrades_and_reprobes_single_host():
+    """Mesh executor on a 1-device host: dispatch-chaos pinned to the
+    mesh backend kills every mesh attempt before it touches the mesh,
+    so the ladder is observable anywhere — trip after k=2 consecutive
+    failures, run degraded on sim (bit-identical), re-probe after the
+    cooloff, failed probe restarts it."""
+    clk = {"t": 0.0}
+    brk = CircuitBreaker(k=2, cooloff_s=50.0, clock=lambda: clk["t"])
+    vals = _vals()
+    svc, sessions = _service(
+        vals=vals, transport="mesh", mesh=object(),   # never dereferenced
+        retry=RetryPolicy(max_attempts=3, base_backoff_s=0.0),
+        breaker=brk, chaos=ChaosConfig(mode="dispatch",
+                                       only_backend="mesh"))
+    # batch 1: mesh fails twice -> breaker opens; 3rd attempt on sim
+    assert svc.pump(force=True) == 6
+    assert np.array_equal(np.stack([s.result for s in sessions]),
+                          _reference(vals))
+    res = svc.stats["resilience"]
+    assert brk.state == "open" and brk.trips == 1
+    assert res["degraded_batches"] == 1 and res["retries"] == 2
+    # batch 2 while open: straight to sim, no mesh attempt burned
+    s2 = svc.open(now=0.0)
+    for slot in range(N):
+        s2.contribute(slot, vals[0, slot])
+    svc.seal(s2.sid, now=0.0)
+    assert svc.pump(force=True) == 1
+    assert s2.state is SessionState.REVEALED
+    res = svc.stats["resilience"]
+    assert res["degraded_batches"] == 2 and res["retries"] == 2
+    assert res["breaker"]["state"] == "open"
+    # cooloff elapsed: one probe goes back to mesh, chaos kills it,
+    # the cooloff restarts and the batch still reveals on sim
+    clk["t"] = 100.0
+    s3 = svc.open(now=0.0)
+    for slot in range(N):
+        s3.contribute(slot, vals[1, slot])
+    svc.seal(s3.sid, now=0.0)
+    assert svc.pump(force=True) == 1
+    assert s3.state is SessionState.REVEALED
+    assert brk.probes == 1 and brk.state == "open"
+    assert svc.stats["resilience"]["degraded_batches"] == 3
+
+
+def test_facade_surfaces_degradation():
+    from repro.api import SecureAggregator, Topology
+    brk = CircuitBreaker(k=1, cooloff_s=1e9)
+    agg = SecureAggregator(topology=Topology(n_nodes=N), breaker=brk)
+    s = agg.open_session(4)
+    for slot in range(N):
+        s.contribute(slot, np.zeros(4, np.float32))
+    agg.seal(s.sid)
+    agg.drain()
+    assert agg.stats()["degraded"] is False
+    brk.record_failure()                     # k=1: one failure trips it
+    assert agg.stats()["degraded"] is True
+    assert agg.stats()["service"]["resilience"]["breaker"]["trips"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Unit pins: policy determinism, validation, chaos schedule, transport
+# ---------------------------------------------------------------------------
+
+
+def test_backoff_is_deterministic_bounded_and_exponential():
+    p = RetryPolicy(base_backoff_s=0.1, backoff_factor=2.0, jitter=0.25)
+    for attempt in (1, 2, 3):
+        d = p.backoff_s(attempt, salt=7)
+        assert d == p.backoff_s(attempt, salt=7)          # replayable
+        base = 0.1 * 2.0 ** (attempt - 1)
+        assert base * 0.75 <= d <= base * 1.25            # jitter band
+    assert p.backoff_s(1, salt=1) != p.backoff_s(1, salt=2)  # de-synced
+    assert RetryPolicy(base_backoff_s=0.0).backoff_s(1) == 0.0
+
+
+@pytest.mark.parametrize("bad", [
+    dict(max_attempts=0), dict(base_backoff_s=-1.0),
+    dict(backoff_factor=0.5), dict(jitter=2.0), dict(deadline_s=0.0),
+])
+def test_retry_policy_validates(bad):
+    with pytest.raises(ResilienceError):
+        RetryPolicy(**bad)
+
+
+@pytest.mark.parametrize("bad", [
+    dict(mode="nope"), dict(p=1.5), dict(times=-1), dict(hop_k=-1),
+    dict(slow_s=-0.1), dict(only_backend="tpu"),
+])
+def test_chaos_config_validates(bad):
+    with pytest.raises(ResilienceError):
+        ChaosConfig(**bad)
+
+
+def test_breaker_validates_and_snapshots():
+    with pytest.raises(ResilienceError):
+        CircuitBreaker(k=0)
+    b = CircuitBreaker(k=2, cooloff_s=5.0, clock=lambda: 0.0)
+    assert b.snapshot() == {"state": "closed", "consecutive_failures": 0,
+                            "trips": 0, "probes": 0}
+
+
+def test_chaos_schedule_decisions_replay_from_seed():
+    class _S:                                 # minimal session stand-in
+        def __init__(self, sid):
+            self.sid = sid
+
+    def stream(seed):
+        sched = ChaosSchedule(ChaosConfig(mode="dispatch", p=0.5,
+                                          seed=seed))
+        return tuple(sched.decide([_S(0)], "sim") is not None
+                     for _ in range(32))
+
+    assert stream(5) == stream(5)
+    assert stream(5) != stream(6)
+    assert any(stream(5)) and not all(stream(5))   # p strictly inside
+
+
+def test_chaos_transport_delegates_everything_but_armed_hops():
+    class Inner:
+        impl = "jnp"
+
+        def hop(self, rnd, rnd_idx, meta, acc):
+            return ("hopped", rnd_idx)
+
+    tp = ChaosTransport(Inner(), ChaosConfig(mode="hop", hop_k=2))
+    assert tp.impl == "jnp"                       # attribute passthrough
+    assert tp.hop(None, 1, None, None) == ("hopped", 1)
+    with pytest.raises(ChaosError):
+        tp.hop(None, 2, None, None)
+    assert ChaosTransport(Inner(), None).hop(None, 2, None, None) \
+        == ("hopped", 2)
+
+
+def test_deadline_exceeded_is_a_runtime_error():
+    assert issubclass(DeadlineExceeded, RuntimeError)
+
+
+# ---------------------------------------------------------------------------
+# Mesh half of the grid (forced 8-device subprocess)
+# ---------------------------------------------------------------------------
+
+
+def _run_sub(code: str, devices: int = 8, timeout: int = 900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    return subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+_MESH_CHAOS = """
+import numpy as np
+from repro.runtime import compat
+from repro.runtime.chaos import ChaosConfig
+from repro.runtime.resilience import CircuitBreaker, RetryPolicy
+from repro.service import AggregationService, BatchingConfig, SessionParams
+from repro.service.session import SessionState
+
+n, elems, S, BLOCKS = 8, 48, 4, 4
+rng = np.random.default_rng(7)
+vals = rng.normal(size=(BLOCKS * S, n, elems)).astype(np.float32) * 0.3
+params = SessionParams(n_nodes=n, elems=elems, cluster_size=4, redundancy=3)
+mesh = compat.make_mesh((n,), ("data",))
+
+
+def build(transport="mesh", **kw):
+    return AggregationService(
+        params, batching=BatchingConfig(max_batch=64, max_age=1e9),
+        transport=transport, mesh=mesh if transport == "mesh" else None,
+        **kw)
+
+
+def feed(svc, block):
+    out = []
+    for i in range(S):
+        s = svc.open(now=0.0)
+        for slot in range(n):
+            s.contribute(slot, vals[block * S + i, slot])
+        svc.seal(s.sid, now=0.0)
+        out.append(s)
+    return out
+
+
+# sim-oracle references, one per sid block (sim == mesh by construction)
+ref_svc = build(transport="sim")
+ref = []
+for b in range(BLOCKS):
+    ss = feed(ref_svc, b)
+    assert ref_svc.pump(force=True) == S
+    ref.append(np.stack([s.result for s in ss]))
+
+# -- recovered: one transient fault per mode, mesh batch retries clean --
+for chaos in (ChaosConfig(mode="dispatch", times=1),
+              ChaosConfig(mode="compile", times=1),
+              ChaosConfig(mode="hop", hop_k=0, times=1),
+              ChaosConfig(mode="slow", slow_s=1.5, times=1)):
+    svc = build(retry=RetryPolicy(
+        max_attempts=3, base_backoff_s=0.0,
+        deadline_s=1.0 if chaos.mode == "slow" else None), chaos=chaos)
+    ss = feed(svc, 0)
+    assert svc.pump(force=True) == S
+    assert np.array_equal(np.stack([s.result for s in ss]), ref[0]), \
+        chaos.mode
+    res = svc.executor.resilience
+    assert res["chaos_injected"] == 1 and res["retries"] >= 1, chaos.mode
+    assert res["quarantined"] == 0, chaos.mode
+print("MESH RECOVERED OK")
+
+# -- bisected/quarantined: hop fault pinned to one session, eager mesh
+# path through MeshTransport(wrap_inner=ChaosTransport) --
+poison = 2
+svc = build(retry=RetryPolicy(max_attempts=2, base_backoff_s=0.0),
+            chaos=ChaosConfig(mode="hop", hop_k=0, poison_sids=(poison,)))
+ss = feed(svc, 0)
+assert svc.pump(force=True) == S
+for i, s in enumerate(ss):
+    if i == poison:
+        assert s.state is SessionState.FAILED and "chaos" in s.failed_reason
+    else:
+        assert s.state is SessionState.REVEALED
+        assert np.array_equal(s.result, ref[0][i])
+res = svc.executor.resilience
+assert res["bisections"] >= 1 and res["quarantined"] == 1
+assert res["dead_letter"][0][0] == poison
+print("MESH QUARANTINE OK")
+
+# -- degrade ladder: K=2 mesh failures trip the breaker, batches run on
+# the sim fallback bit-identical, a post-cooloff probe closes it again --
+clk = {"t": 0.0}
+brk = CircuitBreaker(k=2, cooloff_s=50.0, clock=lambda: clk["t"])
+svc = build(retry=RetryPolicy(max_attempts=3, base_backoff_s=0.0),
+            breaker=brk,
+            chaos=ChaosConfig(mode="dispatch", only_backend="mesh",
+                              times=3))
+ss = feed(svc, 0)                      # mesh fails x2 -> open; sim runs
+assert svc.pump(force=True) == S
+assert np.array_equal(np.stack([s.result for s in ss]), ref[0])
+assert brk.state == "open" and brk.trips == 1
+assert svc.executor.degraded_batches == 1
+
+ss = feed(svc, 1)                      # still open: straight to sim
+assert svc.pump(force=True) == S
+assert np.array_equal(np.stack([s.result for s in ss]), ref[1])
+assert svc.executor.degraded_batches == 2
+
+clk["t"] = 100.0                       # probe mesh; 3rd injection kills it
+ss = feed(svc, 2)
+assert svc.pump(force=True) == S
+assert np.array_equal(np.stack([s.result for s in ss]), ref[2])
+assert brk.probes == 1 and brk.state == "open"
+assert svc.executor.degraded_batches == 3
+
+clk["t"] = 200.0                       # probe again; chaos exhausted:
+ss = feed(svc, 3)                      # the REAL mesh runs and closes it
+assert svc.pump(force=True) == S
+assert np.array_equal(np.stack([s.result for s in ss]), ref[3])
+assert brk.state == "closed" and brk.probes == 2
+assert svc.executor.degraded_batches == 3
+print("MESH DEGRADE LADDER OK")
+"""
+
+
+@pytest.mark.mesh
+@pytest.mark.slow
+def test_mesh_chaos_grid_and_degrade_ladder_8dev():
+    """The mesh column of the conformance grid: recovery for every
+    chaos mode, hop-fault quarantine through the in-shard_map
+    ChaosTransport, and the full breaker ladder (trip -> degraded
+    sim batches bit-identical -> failed probe -> closing probe)."""
+    r = _run_sub(_MESH_CHAOS)
+    assert r.returncode == 0, r.stderr[-4000:]
+    assert "MESH RECOVERED OK" in r.stdout
+    assert "MESH QUARANTINE OK" in r.stdout
+    assert "MESH DEGRADE LADDER OK" in r.stdout

@@ -11,7 +11,8 @@ from adversary import run_sim_batch
 from repro.core.byzantine import ByzantineSpec
 from repro.core.overlay import build_overlay
 from repro.core.plan import AggConfig
-from repro.runtime.fault import SessionFaultPlan
+from repro.runtime.fault import FaultPlanError, SessionFaultPlan
+from repro.runtime.resilience import RetryPolicy
 from repro.service import (AggregationService, BatchingConfig, EpochManager,
                            LifecycleError, SessionParams, SessionState)
 
@@ -225,10 +226,13 @@ def test_batched_service_matches_per_session_service():
 
 
 def test_executor_failure_fails_batch_not_wedges(monkeypatch):
-    """An executor error moves the whole batch to FAILED and leaves the
-    queue drained — no session is wedged in AGGREGATING, no retry."""
+    """A persistent executor error exhausts the retry budget, moves the
+    whole batch to FAILED (dead-lettered) and leaves the queue drained —
+    no session is ever wedged in AGGREGATING.  The triggering error is
+    exposed on the session AND via ``svc.stats``."""
     svc = AggregationService(
-        _params(), batching=BatchingConfig(max_batch=4, max_age=1e9))
+        _params(), batching=BatchingConfig(max_batch=4, max_age=1e9),
+        retry=RetryPolicy(max_attempts=2, base_backoff_s=0.0))
     s = _fill(svc)
 
     def boom(*a, **k):
@@ -243,6 +247,14 @@ def test_executor_failure_fails_batch_not_wedges(monkeypatch):
     assert svc.pump(force=True) == 0      # nothing left to retry
     with pytest.raises(LifecycleError):
         _ = s.result
+    # the resilience account carries the evidence: one retry burned, the
+    # session quarantined into the dead letter with its triggering error
+    res = svc.stats["resilience"]
+    assert res["retries"] == 1
+    assert res["quarantined"] == 1
+    assert res["dead_letter"] == ((s.sid, repr(RuntimeError(
+        "injected executor failure"))),)
+    assert svc.stats["failed_sessions"] == 1
     svc.evict(s.sid)
 
 
@@ -451,7 +463,8 @@ def test_queue_metrics_track_watermarks_and_flush_reasons():
     _fill(svc, now=21.0)
     assert svc.pump(now=21.0, force=True) == 1
     m = q.metrics
-    assert m["flush_reasons"] == {"size": 1, "age": 1, "force": 1}
+    assert m["flush_reasons"] == {"size": 1, "age": 1, "force": 1,
+                                  "shed": 0}
     assert m["max_queue_age"] == 18.0          # the starved session
     assert m["starved_sessions"] == 1          # waited >= 2 * max_age
     assert m["pending_sessions"] == 0
@@ -475,5 +488,8 @@ def test_fault_plan_merge_keeps_groups_disjoint():
     m = a.merge(b)
     assert m.crashed_slots == (2, 3)       # crash wins over byzantine
     assert m.byzantine_slots == (1,)
-    with pytest.raises(AssertionError):
+    with pytest.raises(FaultPlanError):
         SessionFaultPlan(crashed_slots=(1,), byzantine_slots=(1,))
+    with pytest.raises(FaultPlanError):
+        SessionFaultPlan(byzantine_slots=(1,), byzantine_mode="flip").merge(
+            SessionFaultPlan(byzantine_slots=(2,), byzantine_mode="garbage"))
