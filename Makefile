@@ -6,7 +6,7 @@
 PY := PYTHONPATH=src python
 
 .PHONY: test api-lane kernel-lane service-lane mesh-lane adversary-lane \
-    chaos-lane bench-service bench-service-mesh bench
+    chaos-lane obs-lane bench-service bench-service-mesh bench-obs bench
 
 test:
 	$(PY) -m pytest -x -q
@@ -51,7 +51,15 @@ adversary-lane:
 # suite's parametrizations (the storm tests replay seeds 0..2 exactly;
 # the mesh cell forces 8 host devices in its own subprocess)
 chaos-lane:
-	$(PY) -m pytest tests/test_resilience.py -m chaos -q
+	$(PY) -m pytest tests/test_resilience.py tests/test_obs.py -m chaos -q
+
+# observability lane: registry/recorder semantics, the stage-span and
+# resilience event streams, and the wire-byte exactness chain
+# (per-round trace events == Transport.bytes_sent == AggPlan.wire_bytes
+# == schedule_cost); the chaos-marked byte-identical-replay test also
+# runs under chaos-lane with the rest of the fixed-seed sweeps
+obs-lane:
+	$(PY) -m pytest tests/test_obs.py -q
 
 bench-service:
 	$(PY) -m benchmarks.run --only service --json BENCH_service.json
@@ -62,6 +70,11 @@ bench-service-mesh:
 	XLA_FLAGS=--xla_force_host_platform_device_count=16 \
 	    $(PY) -m benchmarks.run --only service --transport mesh \
 	    --json BENCH_service.json
+
+# instrumentation overhead gate: metrics_on must stay within 2% of a
+# disabled registry on the batched dispatch path
+bench-obs:
+	$(PY) -m benchmarks.run --only obs_overhead --json BENCH_service.json
 
 bench:
 	$(PY) -m benchmarks.run

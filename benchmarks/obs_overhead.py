@@ -1,0 +1,89 @@
+"""Observability overhead: what the metrics registry (and the flight
+recorder) cost on the executor's batched dispatch path.
+
+The instrumentation budget of ``repro.obs`` is "free when you don't
+look": counters are pre-allocated handles updated with one add, stage
+spans are two clock reads per dispatch, and trace events are emitted
+host-side only when a recorder is attached.  This bench pins that claim
+against the same workload as ``service_throughput_batched_S64`` —
+S=64 sessions of T=1024 through ``BatchedExecutor.execute`` — under
+three configurations:
+
+  * ``metrics_off`` — a disabled registry (no-op handles), no recorder:
+    the baseline;
+  * ``metrics_on``  — the default live registry, no recorder: the
+    shipping configuration, required to stay within 2% of baseline;
+  * ``trace_on``    — live registry plus an in-memory recorder (ring
+    only, no sink): the debugging configuration.
+
+Rows follow the ``_us`` / ``_sps`` naming rule (``benchmarks/run.py``);
+the ``*_pct`` rows carry the percent regression vs ``metrics_off``.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.obs import MetricsRegistry, TraceRecorder
+from repro.service.session import Session, SessionParams, derive_session_seed
+
+N_NODES, CLUSTER, R, T, S = 16, 4, 3, 1024, 64
+
+
+def _batches(params: SessionParams, n_batches: int, start: int = 0) -> list:
+    """Pre-built sealed batches (construction stays outside the timed
+    region — the bench measures the executor, not numpy fill)."""
+    rng = np.random.default_rng(0)
+    vals = rng.normal(size=(N_NODES, T)).astype(np.float32) * 0.1
+    out, sid = [], start
+    for _ in range(n_batches):
+        batch = []
+        for _ in range(S):
+            s = Session(sid, params, derive_session_seed(7, sid))
+            for slot in range(N_NODES):
+                s.contribute(slot, vals[slot])
+            s.seal(0.0)
+            batch.append(s)
+            sid += 1
+        out.append(batch)
+    return out
+
+
+def run(full: bool = False) -> None:
+    from repro.service import BatchedExecutor
+    params = SessionParams(n_nodes=N_NODES, elems=T, cluster_size=CLUSTER,
+                           redundancy=R)
+    rounds = 48 if full else 24
+    variants = (
+        ("metrics_off", BatchedExecutor(
+            metrics=MetricsRegistry(enabled=False))),
+        ("metrics_on", BatchedExecutor()),
+        ("trace_on", BatchedExecutor(
+            recorder=TraceRecorder(capacity=1 << 16))),
+    )
+    for _, ex in variants:                       # warm every compile cache
+        for batch in _batches(params, 1, start=10_000_000):
+            ex.execute(batch, padded_elems=T)
+    # one batch per variant per round, interleaved, min over rounds:
+    # machine drift is ms-scale and low-frequency, so coarse blocks
+    # would hand one variant a quiet window and drown a <2% comparison
+    us = {name: float("inf") for name, _ in variants}
+    for r in range(rounds):
+        for vi, (name, ex) in enumerate(variants):
+            (batch,) = _batches(params, 1,
+                                start=(1 + r * len(variants) + vi) * S)
+            t0 = time.perf_counter()
+            ex.execute(batch, padded_elems=T)
+            us[name] = min(us[name],
+                           (time.perf_counter() - t0) * 1e6)
+    for name, _ in variants:
+        per_s = S * 1e6 / us[name]
+        print(f"obs_overhead_{name}_S{S}_us,{us[name]:.0f},"
+              f"sessions_per_s={per_s:.0f};executor_batch_T{T}")
+        print(f"obs_overhead_{name}_S{S}_sps,{per_s:.0f},"
+              f"sessions_per_s;executor_batch_T{T}")
+    for name in ("metrics_on", "trace_on"):
+        pct = (us[name] - us["metrics_off"]) / us["metrics_off"] * 100
+        print(f"obs_overhead_{name}_pct,{pct:.2f},"
+              f"regression_vs_metrics_off;gate_lt_2pct_for_metrics_on")

@@ -10,6 +10,12 @@ benches.  Prints ``name,us_per_call,derived`` CSV rows.
 ``--json`` captures every CSV row whose us_per_call column parses as a
 number and writes ``{name: us_per_call}`` — the perf trajectory file
 future PRs diff against.
+
+Row-naming rule: a bench row's name ends in a unit suffix that states
+what the numeric column means — ``_us`` for microseconds per call
+(lower is better) and ``_sps`` for sessions per second (higher is
+better).  Unsuffixed duplicates of the service rows are the pre-PR-7
+legacy names, kept one release; new rows MUST carry a suffix.
 """
 import argparse
 import contextlib
@@ -66,7 +72,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (comm_cost, crypto_breakdown, kernels,
-                            lower_bound, secure_allreduce, service)
+                            lower_bound, obs_overhead, secure_allreduce,
+                            service)
     table = {
         "comm_cost": comm_cost.run,                # paper Fig 3a/3b
         "crypto_breakdown": crypto_breakdown.run,  # paper Fig 3c/3d
@@ -75,6 +82,7 @@ def main() -> None:
         "kernels": kernels.run,                    # pallas kernel microbench
         "service": functools.partial(              # multi-session load gen
             service.run, transport=args.transport),
+        "obs_overhead": obs_overhead.run,          # metrics/trace cost gate
     }
     names = [args.only] if args.only else list(table)
     tee = _Tee(sys.stdout)

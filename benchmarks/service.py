@@ -11,6 +11,13 @@ recorded here.  ``service_throughput_*`` rows carry sessions/sec in the
 numeric column (higher is better); ``service_executor_*`` rows carry
 us/batch.  A full-service row (admission queue + python session
 bookkeeping included) closes the loop.
+
+Every row is emitted twice: under its legacy name and under the
+unit-suffixed name (``_us`` / ``_sps`` — the naming rule lives in
+``benchmarks/run.py``); the legacy keys are kept one release.
+``service_stage_*_us`` rows are the per-stage timing means read off the
+service's obs registry (``stage.seconds`` histograms) for the sim and
+mesh executors.
 """
 from __future__ import annotations
 
@@ -31,6 +38,29 @@ S_SWEEP = (1, 8, 64)
 def _cfg() -> AggConfig:
     return AggConfig(n_nodes=N_NODES, cluster_size=CLUSTER, redundancy=R,
                      schedule="ring")
+
+
+def _emit(name: str, unit: str, value: float, derived: str) -> None:
+    """Print one bench row under its legacy name (kept one release) AND
+    the unit-suffixed name — ``_us`` = microseconds per call, ``_sps`` =
+    sessions per second (see the naming rule in ``benchmarks/run.py``).
+    The suffixed keys are what future PRs should diff against."""
+    print(f"{name},{value:.0f},{derived}")
+    print(f"{name}_{unit},{value:.0f},{derived}")
+
+
+def _stage_rows(prefix: str, registry, derived: str) -> None:
+    """Per-stage timing rows from the service's obs registry: the mean
+    of each ``stage.seconds`` histogram in us (admission_wait /
+    plan_compile / device_dispatch / reveal)."""
+    from repro.obs.metrics import H_STAGE, STAGES
+    snap = registry.snapshot()["histograms"]
+    for stage in STAGES:
+        h = snap.get(f"{H_STAGE}{{stage={stage}}}", {"count": 0})
+        if not h["count"]:
+            continue
+        print(f"{prefix}_{stage}_us,{h['mean'] * 1e6:.0f},"
+              f"n={h['count']};{derived}")
 
 
 def _run_mesh(full: bool) -> None:
@@ -62,10 +92,30 @@ def _run_mesh(full: bool) -> None:
         seeds = jnp.arange(S, dtype=jnp.uint32) + 7
         us = time_call(fn, xs, seeds, reps=max(5, (128 if full else 64) // S))
         per_s = S * 1e6 / us
-        print(f"service_executor_mesh_S{S}_T{T},{us:.0f},"
+        _emit(f"service_executor_mesh_S{S}_T{T}", "us", us,
               f"sessions_per_s={per_s:.0f};shard_map_{N_NODES}dev")
-        print(f"service_throughput_mesh_S{S},{per_s:.0f},"
+        _emit(f"service_throughput_mesh_S{S}", "sps", per_s,
               f"sessions_per_s;shard_map_{N_NODES}dev")
+
+    # --- per-stage timing on the mesh executor (obs registry) ---
+    from repro.service import (AggregationService, BatchingConfig,
+                               SessionParams)
+    params = SessionParams(n_nodes=N_NODES, elems=T, cluster_size=CLUSTER,
+                           redundancy=R)
+    svc = AggregationService(
+        params, batching=BatchingConfig(max_batch=8, max_age=1e9),
+        transport="mesh", mesh=compat.node_mesh(N_NODES))
+    vals = rng.normal(size=(N_NODES, T)).astype(np.float32) * 0.1
+    for _ in range(2):                # pass 1 cold (plan_compile), 2 warm
+        for _i in range(16):
+            s = svc.open()
+            for slot in range(N_NODES):
+                s.contribute(slot, vals[slot])
+            svc.seal(s.sid)
+            svc.pump()
+        svc.drain()
+    _stage_rows("service_stage_mesh", svc.metrics,
+                f"stage_mean;shard_map_{N_NODES}dev")
 
 
 def run(full: bool = False, transport: str = "sim") -> None:
@@ -82,10 +132,10 @@ def run(full: bool = False, transport: str = "sim") -> None:
         plan, x[None], SessionMeta.single(cfg.seed))[0][0])
     us_seq = time_call(seq_fn, x1)
     seq_per_s = 1e6 / us_seq
-    print(f"service_seq_monolithic_T{T},{us_seq:.0f},"
+    _emit(f"service_seq_monolithic_T{T}", "us", us_seq,
           f"per_session_PR1_path;n={N_NODES}")
-    print(f"service_throughput_seq_per_session,{seq_per_s:.0f},"
-          f"sessions_per_s;baseline")
+    _emit("service_throughput_seq_per_session", "sps", seq_per_s,
+          "sessions_per_s;baseline")
 
     # --- batched executor path at S in {1, 8, 64} ---
     bat_fn = jax.jit(lambda x, s: sim_batch(
@@ -97,10 +147,10 @@ def run(full: bool = False, transport: str = "sim") -> None:
         seeds = jnp.arange(S, dtype=jnp.uint32) + 7
         us = time_call(bat_fn, xs, seeds, reps=max(5, 64 // S))
         per_s = S * 1e6 / us
-        print(f"service_executor_S{S}_T{T},{us:.0f},"
+        _emit(f"service_executor_S{S}_T{T}", "us", us,
               f"sessions_per_s={per_s:.0f};speedup_vs_seq="
               f"{per_s / seq_per_s:.2f}x")
-        print(f"service_throughput_batched_S{S},{per_s:.0f},"
+        _emit(f"service_throughput_batched_S{S}", "sps", per_s,
               f"sessions_per_s;speedup_vs_seq={per_s / seq_per_s:.2f}x")
 
     # --- full service: admission queue + watermarks + bookkeeping ---
@@ -130,9 +180,26 @@ def run(full: bool = False, transport: str = "sim") -> None:
 
     load_once()                       # warm the executor's compile cache
     wall = load_once()
-    print(f"service_load_gen_S{batch},{wall / n_sessions * 1e6:.0f},"
+    _emit(f"service_load_gen_S{batch}", "us", wall / n_sessions * 1e6,
           f"sessions_per_s={n_sessions / wall:.0f};"
           f"queue_and_python_included")
+
+    # --- per-stage timing on the sim executor (obs registry): a
+    # real-clock load (admission_wait is measured on the open/seal/pump
+    # clock, so the synthetic float(i) ticks above would skew it); pass
+    # 1 cold (first dispatch lands in plan_compile), pass 2 warm ---
+    stage_svc = AggregationService(
+        params, batching=BatchingConfig(max_batch=batch, max_age=1e9))
+    for _ in range(2):
+        for _i in range(n_sessions):
+            s = stage_svc.open()
+            for slot in range(N_NODES):
+                s.contribute(slot, vals[slot])
+            stage_svc.seal(s.sid)
+            stage_svc.pump()
+        stage_svc.drain()
+    _stage_rows("service_stage", stage_svc.metrics,
+                f"stage_mean;sim_S{batch}")
 
     # --- load shedding under synthetic overload: every session is
     # sealed before the first pump, so the queue floods past the
@@ -157,8 +224,7 @@ def run(full: bool = False, transport: str = "sim") -> None:
     overload_once()                   # warm + establish the steady state
     wall_shed, shed = overload_once()
     survived = n_sessions - shed
-    print(f"service_shed_overload_S{batch},"
-          f"{survived / wall_shed:.0f},"
+    _emit(f"service_shed_overload_S{batch}", "sps", survived / wall_shed,
           f"survivor_sessions_per_s;shed={shed}/{n_sessions};"
           f"watermark={2 * batch}_rows")
 
@@ -188,6 +254,6 @@ def run(full: bool = False, transport: str = "sim") -> None:
     degraded_once()                   # warm the sim-fallback executable
     wall_deg = degraded_once()
     assert deg_svc.executor.degraded_batches > 0
-    print(f"service_degraded_sim_fallback_S{batch},"
-          f"{n_sessions / wall_deg:.0f},"
-          f"sessions_per_s;breaker_open_mesh_to_sim")
+    _emit(f"service_degraded_sim_fallback_S{batch}", "sps",
+          n_sessions / wall_deg,
+          "sessions_per_s;breaker_open_mesh_to_sim")

@@ -46,6 +46,7 @@ from repro.core.plan import (AggConfig, AggPlan, ConfigError, Runtime,
                              Security, SessionMeta, Topology, Wire,
                              compile_plan, plan_cache_stats)
 from repro.core.schedules import schedule_cost
+from repro.obs import metrics as _obs
 
 __all__ = ["AggConfig", "ConfigError", "Runtime", "SecureAggregator",
            "Security", "SessionMeta", "Topology", "Wire", "compile_plan",
@@ -64,7 +65,10 @@ class SecureAggregator:
     ``breaker`` / ``chaos`` configure its resilience layer (a
     ``RetryPolicy`` for retry/bisect/quarantine, a ``CircuitBreaker``
     for the mesh->sim degrade ladder, a ``ChaosConfig`` for
-    deterministic fault injection in tests)."""
+    deterministic fault injection in tests).  ``metrics`` shares a
+    :class:`~repro.obs.MetricsRegistry` (default: a private one) and
+    ``recorder`` attaches a :class:`~repro.obs.TraceRecorder` flight
+    recorder — both are threaded through to the session service."""
 
     def __init__(self, cfg: Optional[AggConfig] = None, *,
                  topology: Optional[Topology] = None,
@@ -72,7 +76,7 @@ class SecureAggregator:
                  wire: Optional[Wire] = None,
                  runtime: Optional[Runtime] = None,
                  batching=None, epochs=None, retry=None, breaker=None,
-                 chaos=None):
+                 chaos=None, metrics=None, recorder=None):
         if cfg is None:
             if topology is None:
                 raise ConfigError(
@@ -92,9 +96,11 @@ class SecureAggregator:
         self._plan: Optional[AggPlan] = None
         self._mesh_tp = None
         self._fns: dict = {}            # (backend, S, T, reveal) -> jitted
-        self._fn_hits = 0
-        self._fn_misses = 0
-        self._bytes_sent = 0            # modeled wire bytes, cumulative
+        self.metrics = _obs.registry_or_default(metrics)
+        self.recorder = recorder
+        self._c_fn_hits = self.metrics.counter(_obs.M_FACADE_FN_HITS)
+        self._c_fn_misses = self.metrics.counter(_obs.M_FACADE_FN_MISSES)
+        self._c_bytes = self.metrics.counter(_obs.M_FACADE_BYTES)
         self._batching = batching
         self._epochs = epochs
         self._retry = retry
@@ -120,7 +126,8 @@ class SecureAggregator:
         return SecureAggregator(self.cfg.derive(**kw), runtime=self.runtime,
                                 batching=self._batching, epochs=self._epochs,
                                 retry=self._retry, breaker=self._breaker,
-                                chaos=self._chaos)
+                                chaos=self._chaos, metrics=self.metrics,
+                                recorder=self.recorder)
 
     # -- one-shot aggregation ----------------------------------------------
     def allreduce(self, tree):
@@ -157,7 +164,12 @@ class SecureAggregator:
         if T == 0:
             return tree          # every leaf zero-size: nothing moves
         fn = self._executable(backend, treedef, tuple(shapes))
-        self._bytes_sent += self.plan().wire_bytes(T)
+        self._c_bytes.inc(self.plan().wire_bytes(T))
+        if self.recorder is not None:
+            from repro.obs.trace import record_batch_trace
+            record_batch_trace(self.recorder, self.plan(), padded=T,
+                               rows=1, masks={}, unit=0, attempt=1,
+                               backend=backend, sids=(), fresh=False)
         return jax.tree.unflatten(treedef, fn(leaves))
 
     def _executable(self, backend: str, treedef, shapes):
@@ -168,9 +180,9 @@ class SecureAggregator:
         key = (backend, treedef, shapes)
         fn = self._fns.get(key)
         if fn is not None:
-            self._fn_hits += 1
+            self._c_fn_hits.inc()
             return fn
-        self._fn_misses += 1
+        self._c_fn_misses.inc()
         plan = self.plan()
         n = self.cfg.n_nodes
         seed = self.cfg.seed
@@ -258,7 +270,8 @@ class SecureAggregator:
                 transport="mesh" if backend == "mesh" else "sim",
                 mesh=self.runtime.mesh, dp_axes=self.runtime.dp_axes,
                 retry=self._retry, breaker=self._breaker,
-                chaos=self._chaos)
+                chaos=self._chaos, metrics=self.metrics,
+                recorder=self.recorder)
         return self._svc
 
     def seal(self, sid: int, now=None) -> None:
@@ -300,13 +313,18 @@ class SecureAggregator:
         are accounted at trace time by the engine's
         ``Transport.bytes_sent`` instead), and the service stats once a
         session has been opened.  ``degraded`` flags a session service
-        currently running on the sim fallback (open circuit breaker)."""
+        currently running on the sim fallback (open circuit breaker).
+        ``metrics`` is the raw registry snapshot — the facade counters
+        live on the same :class:`~repro.obs.MetricsRegistry` the service
+        shares (``facade.*`` series)."""
         out = {
             "backend": self.backend,
             "plan_cache": plan_cache_stats(),
-            "fn_cache": {"hits": self._fn_hits, "misses": self._fn_misses,
+            "fn_cache": {"hits": self._c_fn_hits.value,
+                         "misses": self._c_fn_misses.value,
                          "size": len(self._fns)},
-            "bytes_sent": self._bytes_sent,
+            "bytes_sent": self._c_bytes.value,
+            "metrics": self.metrics.snapshot(),
         }
         if self._svc is not None:
             out["service"] = self._svc.stats

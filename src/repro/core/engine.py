@@ -50,7 +50,8 @@ from jax.sharding import PartitionSpec as P
 from repro.core.byzantine import (digest_rows, digest_vote_combine,
                                   equivocate_digest, equivocate_payload,
                                   parse_mode, sent_value)
-from repro.core.plan import AggPlan, HopRound, SessionMeta, compile_plan
+from repro.core.plan import (AggPlan, HopRound, SessionMeta, compile_plan,
+                             hop_wire_words)
 from repro.kernels import backend
 from repro.kernels.secure_agg import (mask_encrypt_batch_fn,
                                       unmask_decrypt_batch_fn,
@@ -228,15 +229,11 @@ class Transport:
         static pair lists: full ships r payload copies; digest ships one
         payload + r digests (+ the backup payload when compiled in).
         Accumulated at trace time — the conformance suite pins this
-        against the analytic ``schedules.schedule_cost``."""
-        cfg = self.plan.cfg
-        if cfg.transport == "full":
-            words = sum(len(p) for p in rnd.perms) * T
-        else:
-            words = len(rnd.perms[0]) * T
-            words += sum(len(p) for p in rnd.perms) * cfg.digest_words
-            if cfg.digest_backup:
-                words += len(rnd.backup_perm) * T
+        against the analytic ``schedules.schedule_cost``, and the
+        flight recorder's per-round events sum the same
+        ``plan.hop_wire_words`` split, so trace == executed exactly."""
+        w = hop_wire_words(self.plan.cfg, rnd, T)
+        words = w["payload"] + w["digest"] + w["backup"]
         self.bytes_sent += 4 * words * self.S
 
 

@@ -485,18 +485,30 @@ class AggPlan:
         account ``Transport._account`` accumulates at trace time (the
         conformance suite pins both against ``schedules.schedule_cost``).
         Note the digest transport ships one digest set *per chunk*."""
-        cfg = self.cfg
         words = 0
         for rnd in self.rounds:
-            if cfg.transport == "full":
-                words += sum(len(p) for p in rnd.perms) * T
-            else:
-                words += len(rnd.perms[0]) * T
-                words += (sum(len(p) for p in rnd.perms)
-                          * cfg.digest_words * chunks)
-                if cfg.digest_backup:
-                    words += len(rnd.backup_perm) * T
+            w = hop_wire_words(self.cfg, rnd, T)
+            words += w["payload"] + w["backup"] + w["digest"] * chunks
         return 4 * words * S
+
+
+def hop_wire_words(cfg: AggConfig, rnd: HopRound, T: int) -> dict:
+    """Uint32 words ONE voted hop of ONE chunk of ``T`` elements moves
+    for one session, split by wire view: ``{"payload", "digest",
+    "backup"}``.
+
+    This is the single definition of the protocol's byte account —
+    ``AggPlan.wire_bytes``, the engine's trace-time
+    ``Transport._account``, and the flight recorder's per-round events
+    all sum exactly these words, so "summed trace events == executed
+    ``bytes_sent`` == analytic ``schedule_cost``" holds by construction
+    rather than by three parallel formulas agreeing."""
+    if cfg.transport == "full":
+        return {"payload": sum(len(p) for p in rnd.perms) * T,
+                "digest": 0, "backup": 0}
+    return {"payload": len(rnd.perms[0]) * T,
+            "digest": sum(len(p) for p in rnd.perms) * cfg.digest_words,
+            "backup": len(rnd.backup_perm) * T if cfg.digest_backup else 0}
 
 
 _PLAN_CACHE: dict[AggConfig, AggPlan] = {}

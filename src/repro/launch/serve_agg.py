@@ -23,6 +23,13 @@ shape the executor's retry policy, and ``--chaos MODE`` (with
 runtime faults to watch the retry/bisect/quarantine ladder work under
 real load; the run report includes the resilience counters.
 
+Observability (``repro.obs``): ``--trace-out FILE`` attaches the flight
+recorder and streams the JSONL event log (per-batch / per-voted-round
+wire bytes, stage spans, the retry/bisect/quarantine ladder) to FILE;
+``--metrics-out FILE`` writes the final Prometheus-style snapshot of
+the shared metrics registry; ``--stats-interval N`` prints the human
+metrics table every N sessions while the load runs.
+
 Mesh/compat bootstrap is shared with ``launch.serve`` via
 ``runtime.compat.host_mesh`` (one place for jax-version shims);
 ``REPRO_KERNEL_IMPL`` (or ``--impl``) picks the kernel engine exactly as
@@ -39,13 +46,16 @@ import numpy as np
 from repro.api import Runtime, SecureAggregator, Security, Topology
 from repro.core.overlay import build_overlay
 from repro.launch.mesh import make_host_mesh
+from repro.obs import DEFAULT_REGISTRY, TraceRecorder, stats_table
+from repro.obs.export import prometheus_text
 from repro.runtime.chaos import CHAOS_MODES, ChaosConfig
 from repro.service import BatchingConfig, EpochManager, RetryPolicy
 from repro.service.session import SessionState
 
 
 def run_load(agg: SecureAggregator, em: EpochManager, *, sessions: int,
-             elems: int, churn_every: int, seed: int = 0) -> dict:
+             elems: int, churn_every: int, seed: int = 0,
+             stats_interval: int = 0) -> dict:
     rng = np.random.default_rng(seed)
     n = agg.cfg.n_nodes
     expected: dict[int, np.ndarray] = {}
@@ -60,6 +70,9 @@ def run_load(agg: SecureAggregator, em: EpochManager, *, sessions: int,
         expected[s.sid] = vals.sum(0)
         agg.seal(s.sid, now=time.monotonic())
         agg.pump()                       # watermark-driven flushes
+        if stats_interval and (i + 1) % stats_interval == 0:
+            print(stats_table(agg.metrics,
+                              title=f"metrics @ {i + 1} sessions"))
     agg.drain()
     wall = time.monotonic() - t0
     svc = agg.service
@@ -111,6 +124,17 @@ def main() -> None:
     ap.add_argument("--chaos-seed", type=int, default=0)
     ap.add_argument("--chaos-times", type=int, default=None,
                     help="cap total injections (default unbounded)")
+    # observability: flight recorder + metrics export
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="stream the flight-recorder JSONL event log "
+                         "(batch/round wire bytes, stage spans, the "
+                         "retry/bisect/quarantine ladder) to FILE")
+    ap.add_argument("--metrics-out", default=None, metavar="FILE",
+                    help="write the final Prometheus-style metrics "
+                         "snapshot to FILE")
+    ap.add_argument("--stats-interval", type=int, default=0, metavar="N",
+                    help="print the human metrics table every N "
+                         "sessions (0 = off)")
     args = ap.parse_args()
 
     mesh = make_host_mesh(data=args.data, model=args.model)
@@ -140,13 +164,17 @@ def main() -> None:
                           deadline_s=args.deadline),
         chaos=None if args.chaos is None else ChaosConfig(
             mode=args.chaos, p=args.chaos_p, seed=args.chaos_seed,
-            times=args.chaos_times))
+            times=args.chaos_times),
+        metrics=DEFAULT_REGISTRY,
+        recorder=(None if args.trace_out is None
+                  else TraceRecorder(sink=args.trace_out)))
     print(f"service: g={snap.n_clusters} clusters x c={args.cluster_size} "
           f"-> {snap.n_nodes} slots, T={args.elems}, r={args.redundancy}, "
           f"transport={args.transport}")
 
     out = run_load(agg, em, sessions=args.sessions, elems=args.elems,
-                   churn_every=args.churn_every)
+                   churn_every=args.churn_every,
+                   stats_interval=args.stats_interval)
     hist = collections.Counter(out["stats"]["batch_sizes"])
     print(f"{out['sessions']} sessions in {out['wall_s']:.2f}s "
           f"({out['sessions_per_s']:.1f} sessions/s), "
@@ -163,6 +191,16 @@ def main() -> None:
           f"degraded_batches={res['degraded_batches']} "
           f"shed={qm['shed_sessions']} expired={qm['expired_sessions']} "
           f"degraded={out['degraded']}")
+    print(f"wire: {out['stats']['wire']['bytes_sent']} modeled bytes "
+          f"over {out['stats']['batches']['run']} batches")
+    if agg.recorder is not None:
+        agg.recorder.close()
+        print(f"trace: {agg.recorder.events_recorded} events -> "
+              f"{args.trace_out}")
+    if args.metrics_out is not None:
+        with open(args.metrics_out, "w") as f:
+            f.write(prometheus_text(agg.metrics))
+        print(f"metrics: snapshot -> {args.metrics_out}")
 
 
 if __name__ == "__main__":

@@ -59,7 +59,7 @@ class AggregationService:
                  dp_axes: Sequence[str] = ("data",),
                  retry: Optional[RetryPolicy] = None,
                  breaker: Optional[CircuitBreaker] = None,
-                 chaos=None):
+                 chaos=None, metrics=None, recorder=None):
         if epochs is not None:
             snap = epochs.current()
             assert snap.n_nodes == default_params.n_nodes, \
@@ -70,11 +70,23 @@ class AggregationService:
         self.executor = BatchedExecutor(kernel_impl=kernel_impl,
                                         transport=transport, mesh=mesh,
                                         dp_axes=dp_axes, retry=retry,
-                                        breaker=breaker, chaos=chaos)
+                                        breaker=breaker, chaos=chaos,
+                                        metrics=metrics, recorder=recorder)
         self.queue = AdmissionQueue(self.executor, batching,
                                     pre_execute=self._merge_epoch_faults)
         self._sessions: dict[int, Session] = {}
         self._next_sid = 0
+
+    @property
+    def metrics(self):
+        """The service's :class:`~repro.obs.MetricsRegistry` (shared by
+        the executor and the admission queue)."""
+        return self.executor.metrics
+
+    @property
+    def recorder(self):
+        """The attached flight recorder, or None."""
+        return self.executor.recorder
 
     # -- epoch integration --------------------------------------------------
     def _merge_epoch_faults(self, batch: Sequence[Session]) -> None:
@@ -156,19 +168,61 @@ class AggregationService:
     # -- introspection ------------------------------------------------------
     @property
     def stats(self) -> dict:
-        return {
-            "sessions_opened": self._next_sid,
-            "sessions_run": self.executor.sessions_run,
-            "batches_run": self.executor.batches_run,
+        """One documented stats schema (``obs.metrics.SVC_STATS_KEYS``,
+        version ``SVC_STATS_VERSION``), a view over the service's
+        metrics registry:
+
+          * ``sessions`` — ``opened`` / ``run`` / ``failed`` /
+            ``pending`` counts;
+          * ``batches``  — ``run`` count + realized ``sizes``;
+          * ``queue``    — the admission-queue account
+            (``AdmissionQueue.metrics``: flush reasons, age watermarks,
+            starved/expired/shed/dropped);
+          * ``caches``   — ``executor`` (compiled-fn) and ``plan``
+            (shared memo) hit/miss/size;
+          * ``resilience`` — the retry/bisect/quarantine/degrade
+            account (``BatchedExecutor.resilience``);
+          * ``wire``     — cumulative modeled wire bytes of executed
+            batches (== the engine's trace-time account);
+          * ``epoch``    — current churn epoch (None without one);
+          * ``metrics``  — the raw registry snapshot;
+          * ``schema``   — this schema's version.
+
+        The pre-PR-7 top-level keys (``SVC_STATS_DEPRECATED``) remain
+        one release as aliases of the nested values — same objects, no
+        warning (documented-deprecated only)."""
+        from repro.obs.metrics import SVC_STATS_VERSION
+        queue = self.queue.metrics
+        caches = {"executor": self.executor.cache_stats,
+                  "plan": plan_cache_stats()}
+        sessions = {
+            "opened": self._next_sid,
+            "run": self.executor.sessions_run,
+            "failed": sum(s.state is SessionState.FAILED
+                          for s in self._sessions.values()),
             "pending": self.queue.depth(),
-            "batch_sizes": tuple(self.queue.batch_sizes),
-            "queue": self.queue.metrics,
-            "executor_cache": self.executor.cache_stats,
-            "plan_cache": plan_cache_stats(),
+        }
+        batches = {"run": self.executor.batches_run,
+                   "sizes": tuple(self.queue.batch_sizes)}
+        out = {
+            "schema": SVC_STATS_VERSION,
+            "sessions": sessions,
+            "batches": batches,
+            "queue": queue,
+            "caches": caches,
             "resilience": self.executor.resilience,
-            "failed_sessions": sum(
-                s.state is SessionState.FAILED
-                for s in self._sessions.values()),
+            "wire": {"bytes_sent": self.executor.wire_bytes},
             "epoch": (self.epochs.current().epoch
                       if self.epochs is not None else None),
+            "metrics": self.metrics.snapshot(),
+            # deprecated aliases (SVC_STATS_DEPRECATED) — one release
+            "sessions_opened": sessions["opened"],
+            "sessions_run": sessions["run"],
+            "batches_run": batches["run"],
+            "pending": sessions["pending"],
+            "batch_sizes": batches["sizes"],
+            "executor_cache": caches["executor"],
+            "plan_cache": caches["plan"],
+            "failed_sessions": sessions["failed"],
         }
+        return out

@@ -79,6 +79,8 @@ import numpy as np
 from repro.core.engine import (MeshTransport, SimTransport, execute_chunks)
 from repro.core.plan import (SessionMeta, compile_plan, fault_masks_of,
                              _require)
+from repro.obs import metrics as M
+from repro.obs.trace import TraceRecorder, record_batch_trace
 from repro.runtime.chaos import (ChaosConfig, ChaosError, ChaosSchedule,
                                  ChaosTransport)
 from repro.runtime.resilience import (CircuitBreaker, DeadlineExceeded,
@@ -140,7 +142,9 @@ class BatchedExecutor:
                  dp_axes: Sequence[str] = ("data",),
                  retry: Optional[RetryPolicy] = None,
                  breaker: Optional[CircuitBreaker] = None,
-                 chaos=None):
+                 chaos=None,
+                 metrics: Optional[M.MetricsRegistry] = None,
+                 recorder: Optional[TraceRecorder] = None):
         _require(transport in ("sim", "mesh"),
                  f"unknown executor transport {transport!r}; pick 'sim' "
                  "(single-device oracle) or 'mesh' (shard_map over a dp "
@@ -162,18 +166,88 @@ class BatchedExecutor:
             chaos = ChaosSchedule(chaos)
         self.chaos: Optional[ChaosSchedule] = chaos
         self._fns: dict = {}
-        self.batches_run = 0
-        self.sessions_run = 0
-        self.fn_cache_hits = 0
-        self.fn_cache_misses = 0
-        # resilience accounting (surfaced via ``resilience`` / svc.stats)
-        self.retries = 0              # re-attempts after a failure
-        self.bisections = 0           # batch splits after budget exhaust
-        self.quarantined = 0          # sessions moved to the dead letter
-        self.deadline_hits = 0        # attempts past retry.deadline_s
-        self.degraded_batches = 0     # batches run on the sim fallback
+        # every counter lives on the metrics registry (one source of
+        # truth obs.export can render); the legacy attribute names stay
+        # as read-only properties.  A private registry by default —
+        # explicit sharing (serve_agg) passes one in.
+        self.metrics = M.registry_or_default(metrics)
+        self.recorder = recorder
+        # stage spans use the recorder's clock when one is attached
+        # (deterministic replays inject a TickClock); perf_counter
+        # otherwise
+        self._clock = (recorder.clock if recorder is not None
+                       else time.perf_counter)
+        m = self.metrics
+        self._c_batches = m.counter(M.M_BATCHES)
+        self._c_sessions = m.counter(M.M_SESSIONS)
+        self._c_fn_hits = m.counter(M.M_FN_HITS)
+        self._c_fn_misses = m.counter(M.M_FN_MISSES)
+        self._c_retries = m.counter(M.M_RETRIES)
+        self._c_bisections = m.counter(M.M_BISECTIONS)
+        self._c_quarantined = m.counter(M.M_QUARANTINED)
+        self._c_deadline = m.counter(M.M_DEADLINE_HITS)
+        self._c_degraded = m.counter(M.M_DEGRADED)
+        self._c_wire = m.counter(M.M_WIRE_BYTES)
+        self._h_stage = {s: m.histogram(M.H_STAGE, stage=s)
+                         for s in M.STAGES}
         self.dead_letter: list[tuple[int, str]] = []   # (sid, error repr)
         self._units = 0               # retry units started (jitter salt)
+        self._plans: dict = {}        # params -> AggPlan (byte account)
+
+    def _plan_of(self, template: Session):
+        """Compiled plan of one batch's shared params (hot-path memo in
+        front of the module-wide ``compile_plan`` cache — skips the
+        AggConfig construction/validation per dispatch)."""
+        plan = self._plans.get(template.params)
+        if plan is None:
+            plan = compile_plan(template.params.agg_config(self.kernel_impl))
+            self._plans[template.params] = plan
+        return plan
+
+    # -- registry-backed counter views (the pre-PR-7 attribute names) ----
+    @property
+    def batches_run(self) -> int:
+        return self._c_batches.value
+
+    @property
+    def sessions_run(self) -> int:
+        return self._c_sessions.value
+
+    @property
+    def fn_cache_hits(self) -> int:
+        return self._c_fn_hits.value
+
+    @property
+    def fn_cache_misses(self) -> int:
+        return self._c_fn_misses.value
+
+    @property
+    def retries(self) -> int:
+        return self._c_retries.value
+
+    @property
+    def bisections(self) -> int:
+        return self._c_bisections.value
+
+    @property
+    def quarantined(self) -> int:
+        return self._c_quarantined.value
+
+    @property
+    def deadline_hits(self) -> int:
+        return self._c_deadline.value
+
+    @property
+    def degraded_batches(self) -> int:
+        return self._c_degraded.value
+
+    @property
+    def wire_bytes(self) -> int:
+        """Cumulative modeled wire bytes of every executed batch —
+        ``AggPlan.wire_bytes`` at the executed row count, i.e. exactly
+        what the engine's trace-time ``Transport.bytes_sent`` accounted
+        for those executions."""
+        return self._c_wire.value
 
     @property
     def cache_stats(self) -> dict:
@@ -199,7 +273,10 @@ class BatchedExecutor:
         }
 
     def _compiled(self, template: Session, padded: int, S: int,
-                  modes: frozenset, backend: str) -> Callable:
+                  modes: frozenset, backend: str) -> tuple[Callable, bool]:
+        """(jitted fn, fresh) — ``fresh`` marks a cache miss, which the
+        stage timer attributes to ``plan_compile`` (jax.jit is lazy, so
+        the XLA build cost lands on the miss's first dispatch)."""
         # fault PATTERNS are runtime (S, n) masks, so churn/missing-slot
         # variation never retraces; only the set of fault MODES present
         # (<= 8 combinations) and the dispatch backend are part of the
@@ -208,9 +285,10 @@ class BatchedExecutor:
         key = (template.params.batch_key(padded), S, modes, backend)
         fn = self._fns.get(key)
         if fn is not None:
-            self.fn_cache_hits += 1
+            self._c_fn_hits.inc()
+            return fn, False
         else:
-            self.fn_cache_misses += 1
+            self._c_fn_misses.inc()
             cfg = template.params.agg_config(self.kernel_impl)
             plan = compile_plan(cfg)
             if backend == "mesh":
@@ -235,14 +313,19 @@ class BatchedExecutor:
                     return out
 
             self._fns[key] = fn
-        return fn
+        return fn, True
 
     # -- one dispatch attempt ----------------------------------------------
     def _attempt(self, sessions: Sequence[Session], padded: int,
-                 backend: str, fault: Optional[ChaosConfig]):
+                 backend: str, fault: Optional[ChaosConfig],
+                 unit: int = 0, attempt: int = 1):
         """Pack + dispatch one batch once; returns (revealed, owner)
         WITHOUT touching session state (the caller reveals after the
-        deadline check, so a failed/too-slow attempt stays retriable)."""
+        deadline check, so a failed/too-slow attempt stays retriable).
+        A completed attempt books its stage span, its wire bytes, and
+        the batch/round flight-recorder events — all host-side, after
+        the ``np.asarray`` device sync, so the jitted program is
+        untouched."""
         if fault is not None and fault.mode == "dispatch":
             raise ChaosError(
                 f"chaos: injected dispatch failure "
@@ -264,18 +347,30 @@ class BatchedExecutor:
         masks = {m: v[owner] for m, v in sess_masks.items()}  # per row
         if fault is not None and fault.mode == "compile":
             raise ChaosError("chaos: injected compile failure")
+        t0 = self._clock()
         if fault is not None and fault.mode == "hop":
+            fresh = False                        # eager run, no jit cache
             revealed = self._chaos_hop_run(sessions[0], xs, seeds, offsets,
                                            masks, backend, fault)
         else:
-            fn = self._compiled(sessions[0], padded, len(rows),
-                                frozenset(masks), backend)
+            fn, fresh = self._compiled(sessions[0], padded, len(rows),
+                                       frozenset(masks), backend)
             revealed = fn(
                 jnp.asarray(xs),
                 jnp.asarray(seeds, dtype=jnp.uint32),
                 jnp.asarray(offsets, dtype=jnp.uint32),
                 {k: jnp.asarray(v) for k, v in masks.items()})
-        return np.asarray(revealed), owner
+        revealed = np.asarray(revealed)          # host sync: span ends here
+        stage = "plan_compile" if fresh else "device_dispatch"
+        self._h_stage[stage].observe(self._clock() - t0)
+        plan = self._plan_of(sessions[0])
+        self._c_wire.inc(plan.wire_bytes(padded, S=len(rows)))
+        if self.recorder is not None:
+            record_batch_trace(
+                self.recorder, plan, padded=padded, rows=len(rows),
+                masks=masks, unit=unit, attempt=attempt, backend=backend,
+                sids=tuple(s.sid for s in sessions), fresh=fresh)
+        return revealed, owner
 
     def _chaos_hop_run(self, template: Session, xs, seeds, offsets, masks,
                        backend: str, fault: ChaosConfig):
@@ -310,6 +405,8 @@ class BatchedExecutor:
         policy = self.retry
         self._units += 1
         salt = self._units
+        rec = self.recorder
+        sids = tuple(s.sid for s in sessions)
         last: Optional[Exception] = None
         for attempt in range(1, policy.max_attempts + 1):
             backend = self.transport
@@ -319,39 +416,55 @@ class BatchedExecutor:
                 backend, degraded = "sim", True
             fault = (self.chaos.decide(sessions, backend)
                      if self.chaos is not None else None)
+            if fault is not None and rec is not None:
+                rec.event("chaos", unit=salt, attempt=attempt,
+                          mode=fault.mode, backend=backend,
+                          sids=list(sids))
             t0 = time.monotonic()
             try:
                 revealed, owner = self._attempt(sessions, padded,
-                                                backend, fault)
+                                                backend, fault,
+                                                unit=salt, attempt=attempt)
                 if (policy.deadline_s is not None
                         and time.monotonic() - t0 > policy.deadline_s):
-                    self.deadline_hits += 1
+                    self._c_deadline.inc()
                     raise DeadlineExceeded(
                         f"batch attempt exceeded the "
                         f"{policy.deadline_s}s deadline")
             except Exception as e:
                 last = e
-                if self.breaker is not None and backend == "mesh":
-                    self.breaker.record_failure()
+                self._record_breaker(rec, backend, failed=True)
                 if attempt < policy.max_attempts:
-                    self.retries += 1
+                    self._c_retries.inc()
                     delay = policy.backoff_s(attempt, salt=salt)
+                    if rec is not None:
+                        rec.event("retry", unit=salt, attempt=attempt,
+                                  backend=backend, delay=delay,
+                                  error=repr(e)[:200])
                     if delay > 0:
                         policy.sleep(delay)
                 continue
-            if self.breaker is not None and backend == "mesh":
-                self.breaker.record_success()
+            self._record_breaker(rec, backend, failed=False)
             if degraded:
-                self.degraded_batches += 1
+                self._c_degraded.inc()
+                if rec is not None:
+                    rec.event("degrade", unit=salt, attempt=attempt,
+                              sids=list(sids))
+            t1 = self._clock()
             for i, s in enumerate(sessions):
                 s.reveal(revealed[owner == i].reshape(-1))
-            self.batches_run += 1
-            self.sessions_run += len(sessions)
+            self._h_stage["reveal"].observe(self._clock() - t1)
+            self._c_batches.inc()
+            self._c_sessions.inc(len(sessions))
             return None
         # attempt budget exhausted: bisect to isolate the poison rows
         if policy.bisect and len(sessions) > 1:
-            self.bisections += 1
+            self._c_bisections.inc()
             mid = len(sessions) // 2
+            if rec is not None:
+                rec.event("bisect", unit=salt,
+                          left=[s.sid for s in sessions[:mid]],
+                          right=[s.sid for s in sessions[mid:]])
             e1 = self._run_unit(sessions[:mid], padded)
             e2 = self._run_unit(sessions[mid:], padded)
             return e1 if e1 is not None else e2
@@ -359,10 +472,25 @@ class BatchedExecutor:
         for s in sessions:
             s.fail(repr(last))
             self.dead_letter.append((s.sid, repr(last)))
-        self.quarantined += len(sessions)
+        self._c_quarantined.inc(len(sessions))
+        if rec is not None:
+            rec.event("quarantine", unit=salt, sids=list(sids),
+                      error=repr(last)[:200])
         if len(self.dead_letter) > 4096:          # bounded history
             del self.dead_letter[:-2048]
         return last
+
+    def _record_breaker(self, rec, backend: str, *, failed: bool) -> None:
+        """Feed the breaker and trace its state transitions."""
+        if self.breaker is None or backend != "mesh":
+            return
+        before = self.breaker.state
+        if failed:
+            self.breaker.record_failure()
+        else:
+            self.breaker.record_success()
+        if rec is not None and self.breaker.state != before:
+            rec.event("breaker", state=self.breaker.state)
 
     def execute(self, sessions: Sequence[Session],
                 padded_elems: Optional[int] = None) -> None:
@@ -412,13 +540,45 @@ class AdmissionQueue:
         self.pre_execute = pre_execute   # e.g. epoch-departure fault merge
         self._pending: dict[BatchKey, list[Session]] = {}
         self.batch_sizes: list[int] = []
-        # fairness/starvation telemetry (see ``metrics``)
-        self.flush_reasons = {"size": 0, "age": 0, "force": 0, "shed": 0}
-        self.max_queue_age = 0.0
-        self.starved_sessions = 0     # flushed only after 2x the age mark
-        self.expired_sessions = 0     # deadline reached while queued
-        self.shed_sessions = 0        # dropped by the load watermark
-        self.dropped_sessions = 0     # left the queue already terminal
+        # fairness/starvation telemetry lives on the executor's metrics
+        # registry (one registry per service); the legacy attribute
+        # names stay as read-only properties and ``metrics`` returns the
+        # same dict shape as before
+        reg = executor.metrics
+        self.recorder = executor.recorder
+        self._c_flush = {r: reg.counter(M.M_FLUSHES, reason=r)
+                         for r in ("size", "age", "force", "shed")}
+        self._g_max_age = reg.gauge(M.M_MAX_QUEUE_AGE)
+        self._c_starved = reg.counter(M.M_STARVED)
+        self._c_expired = reg.counter(M.M_EXPIRED)
+        self._c_shed = reg.counter(M.M_SHED)
+        self._c_dropped = reg.counter(M.M_DROPPED)
+        self._h_wait = executor._h_stage["admission_wait"]
+
+    # -- registry-backed counter views (the pre-PR-7 attribute names) ----
+    @property
+    def flush_reasons(self) -> dict:
+        return {r: c.value for r, c in self._c_flush.items()}
+
+    @property
+    def max_queue_age(self) -> float:
+        return self._g_max_age.value
+
+    @property
+    def starved_sessions(self) -> int:
+        return self._c_starved.value    # flushed only after 2x the age mark
+
+    @property
+    def expired_sessions(self) -> int:
+        return self._c_expired.value    # deadline reached while queued
+
+    @property
+    def shed_sessions(self) -> int:
+        return self._c_shed.value       # dropped by the load watermark
+
+    @property
+    def dropped_sessions(self) -> int:
+        return self._c_dropped.value    # left the queue already terminal
 
     def submit(self, session: Session,
                now: Optional[float] = None) -> BatchKey:
@@ -483,8 +643,12 @@ class AdmissionQueue:
             victim = self._pending[key].pop()     # newest arrival
             victim.expire(
                 f"shed: admission queue over max_pending_rows={limit}")
-            self.flush_reasons["shed"] += 1
-            self.shed_sessions += 1
+            self._c_flush["shed"].inc()
+            self._c_shed.inc()
+            if self.recorder is not None:
+                self.recorder.event("shed", sid=victim.sid,
+                                    pending_rows=self.depth_rows(),
+                                    limit=limit)
             if not self._pending[key]:
                 del self._pending[key]
 
@@ -495,10 +659,12 @@ class AdmissionQueue:
         alive = []
         for s in q:
             if s.state is not SessionState.SEALED:
-                self.dropped_sessions += 1
+                self._c_dropped.inc()
             elif s.expired(now):
                 s.expire("deadline: session expired before aggregation")
-                self.expired_sessions += 1
+                self._c_expired.inc()
+                if self.recorder is not None:
+                    self.recorder.event("expire", sid=s.sid)
             else:
                 alive.append(s)
         return alive
@@ -507,11 +673,18 @@ class AdmissionQueue:
              now: float, account_age: bool = True) -> None:
         if account_age:
             age = now - min(s.sealed_at for s in batch)
-            self.max_queue_age = max(self.max_queue_age, age)
-            self.starved_sessions += sum(
+            self._g_max_age.track_max(age)
+            self._c_starved.inc(sum(
                 now - s.sealed_at >= 2 * self.batching.max_age
-                for s in batch)
-        self.flush_reasons[reason] += 1
+                for s in batch))
+            # the admission-wait span of this batch (oldest member's
+            # queue residency, on the open/seal/pump clock)
+            self._h_wait.observe(age)
+        self._c_flush[reason].inc()
+        if self.recorder is not None:
+            self.recorder.event("flush", reason=reason,
+                                sids=[s.sid for s in batch],
+                                rows=self._rows(key, batch))
         if self.pre_execute is not None:
             self.pre_execute(batch)
         self.executor.execute(batch, padded_elems=key[-1])

@@ -63,7 +63,7 @@ def test_facade_signatures_are_pinned():
                     "wire: 'Optional[Wire]' = None, "
                     "runtime: 'Optional[Runtime]' = None, "
                     "batching=None, epochs=None, retry=None, breaker=None, "
-                    "chaos=None)",
+                    "chaos=None, metrics=None, recorder=None)",
         "allreduce": "(self, tree)",
         "open_session": "(self, elems: 'int', *, params=None, now=None, "
                         "ttl=None)",
@@ -298,6 +298,50 @@ def test_facade_sessions_match_direct_service():
     assert np.abs(got - expect).max() < 1e-3
     assert agg.stats()["service"]["sessions_run"] == S
     assert agg.service is not None
+
+
+def test_service_stats_schema_snapshot_is_pinned():
+    """The one documented ``svc.stats`` shape (obs.metrics schema
+    constants): canonical nested keys + the deprecated top-level
+    aliases, kept one release with byte-identical values."""
+    from repro.obs import (SVC_STATS_DEPRECATED, SVC_STATS_KEYS,
+                           SVC_STATS_VERSION)
+    n, elems, S = 8, 20, 2
+    vals = (RNG.normal(size=(S, n, elems)) * 0.3).astype(np.float32)
+    agg = SecureAggregator(AggConfig(n_nodes=n, cluster_size=4,
+                                     redundancy=3, clip=2.0))
+    for i in range(S):
+        s = agg.open_session(elems)
+        for slot in range(n):
+            s.contribute(slot, vals[i, slot])
+        agg.seal(s.sid, now=0.0)
+    agg.pump(force=True)
+    st = agg.stats()["service"]
+    # the schema constants ARE the contract: exact key set, pinned here
+    assert SVC_STATS_KEYS == ("schema", "sessions", "batches", "queue",
+                              "caches", "resilience", "wire", "epoch",
+                              "metrics")
+    assert SVC_STATS_DEPRECATED == (
+        "sessions_opened", "sessions_run", "batches_run", "pending",
+        "batch_sizes", "executor_cache", "plan_cache", "failed_sessions")
+    assert set(st) == set(SVC_STATS_KEYS) | set(SVC_STATS_DEPRECATED)
+    assert st["schema"] == SVC_STATS_VERSION == 1
+    assert st["sessions"] == {"opened": S, "run": S, "failed": 0,
+                              "pending": 0}
+    assert st["batches"]["run"] == 1
+    nested = {"sessions_opened": st["sessions"]["opened"],
+              "sessions_run": st["sessions"]["run"],
+              "batches_run": st["batches"]["run"],
+              "pending": st["sessions"]["pending"],
+              "batch_sizes": st["batches"]["sizes"],
+              "executor_cache": st["caches"]["executor"],
+              "plan_cache": st["caches"]["plan"],
+              "failed_sessions": st["sessions"]["failed"]}
+    for alias, want in nested.items():
+        assert st[alias] == want, alias
+    # facade stats expose the shared registry snapshot
+    assert set(agg.stats()["metrics"]) == {"counters", "gauges",
+                                           "histograms"}
 
 
 def test_static_byzantine_config_reaches_sessions():

@@ -177,3 +177,92 @@ def test_service_batch_on_mesh_matches_sim_executor_8dev():
     r = _run_sub(_SERVICE_MESH)
     assert r.returncode == 0, r.stdout[-4000:] + r.stderr[-4000:]
     assert "SERVICE MESH==SIM" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# Wire-account reset semantics (Transport.bytes_sent / last_bytes)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("transport", ["full", "digest"])
+def test_sim_wire_account_resets_per_transport(transport):
+    """``bytes_sent`` starts at 0, accumulates while ONE transport
+    instance executes, and never leaks across executions — every
+    ``sim_batch`` call builds a fresh SimTransport, so its account is
+    exactly one execution's bytes."""
+    import jax.numpy as jnp
+    from repro.core.engine import (SimTransport, execute_chunks, sim_batch)
+    rng = np.random.default_rng(0)
+    n, S, T = 8, 3, 64
+    cfg = AggConfig(n_nodes=n, cluster_size=4, redundancy=3,
+                    transport=transport)
+    plan = compile_plan(cfg)
+    xs = rng.normal(size=(S, n, T)).astype(np.float32) * 0.1
+    want = plan.wire_bytes(T, S=S)
+    for _ in range(2):               # fresh account on every invocation
+        _, tp = sim_batch(plan, xs, SessionMeta.build(S, n, seed=cfg.seed))
+        assert tp.bytes_sent == want
+    # a REUSED instance accumulates across executions instead
+    tp = SimTransport(plan, S=S)
+    assert tp.bytes_sent == 0        # nothing dispatched yet
+    flat = jnp.asarray(xs).reshape(S * n, T)
+    for k in (1, 2):
+        execute_chunks(plan, tp, [flat],
+                       SessionMeta.build(S, n, seed=cfg.seed))
+        assert tp.bytes_sent == k * want
+
+
+def test_wire_account_accumulates_across_chunks():
+    """A chunked execution books every chunk on one account: two Tc
+    chunks through one digest transport equal the analytic
+    ``wire_bytes(2*Tc, chunks=2)`` (the digest set ships per chunk)."""
+    import jax.numpy as jnp
+    from repro.core.engine import SimTransport, execute_chunks
+    rng = np.random.default_rng(1)
+    n, S, Tc = 8, 2, 32
+    cfg = AggConfig(n_nodes=n, cluster_size=4, redundancy=3,
+                    transport="digest")
+    plan = compile_plan(cfg)
+    tp = SimTransport(plan, S=S)
+    chunks = [jnp.asarray(rng.normal(size=(S * n, Tc)).astype(np.float32))
+              for _ in range(2)]
+    execute_chunks(plan, tp, chunks, SessionMeta.build(S, n, seed=cfg.seed))
+    assert tp.bytes_sent == plan.wire_bytes(2 * Tc, S=S, chunks=2)
+    assert tp.bytes_sent != plan.wire_bytes(2 * Tc, S=S)  # digest set x2
+
+
+_MESH_WIRE = """
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.engine import MeshTransport, sim_batch
+from repro.core.plan import AggConfig, SessionMeta, compile_plan
+from repro.runtime import compat
+
+rng = np.random.default_rng(2)
+n, S, T = 8, 3, 64
+mesh = compat.make_mesh((n,), ("data",))
+for transport in ("full", "digest"):
+    cfg = AggConfig(n_nodes=n, cluster_size=4, redundancy=3,
+                    transport=transport)
+    plan = compile_plan(cfg)
+    mt = MeshTransport(mesh, ("data",))
+    assert mt.last_bytes is None        # no dispatch yet -> no account
+    xs = jnp.asarray(rng.normal(size=(S, n, T)).astype(np.float32) * 0.1)
+    want = plan.wire_bytes(T, S=S)
+    for _ in range(2):                  # per-execution, not cumulative
+        mt.execute(plan, xs, SessionMeta.build(S, n, seed=cfg.seed))
+        assert mt.last_bytes == want, (transport, mt.last_bytes, want)
+    _, tp = sim_batch(plan, xs, SessionMeta.build(S, n, seed=cfg.seed))
+    assert tp.bytes_sent == want        # mesh account == sim account
+print("MESH WIRE OK")
+"""
+
+
+@pytest.mark.mesh
+@pytest.mark.slow
+def test_mesh_wire_account_none_before_dispatch_8dev():
+    """``MeshTransport.last_bytes`` is None until the first execute,
+    then carries exactly one execution's account (equal to the sim
+    transport's for the same plan), on both wire transports."""
+    r = _run_sub(_MESH_WIRE)
+    assert r.returncode == 0, r.stdout[-4000:] + r.stderr[-4000:]
+    assert "MESH WIRE OK" in r.stdout

@@ -1,0 +1,348 @@
+"""Observability layer: metrics registry semantics, the trace flight
+recorder, and the exactness chain
+
+    round events  ==  batch event  ==  AggPlan.wire_bytes
+                  ==  executed Transport.bytes_sent
+                  ==  analytic schedule_cost
+
+plus deterministic byte-identical JSONL replay under chaos (the
+obs-lane / chaos-lane anchor).
+"""
+import hashlib
+
+import numpy as np
+import pytest
+
+from repro.core.engine import sim_batch
+from repro.core.plan import (AggConfig, SessionMeta, compile_plan,
+                             hop_wire_words)
+from repro.core.schedules import schedule_cost
+from repro.obs import (MetricsRegistry, SVC_STATS_DEPRECATED,
+                       SVC_STATS_KEYS, SVC_STATS_VERSION, TickClock,
+                       TraceRecorder, prometheus_text, stats_table)
+from repro.obs.trace import read_jsonl, to_jsonl
+from repro.runtime.chaos import ChaosConfig, ChaosError
+from repro.runtime.fault import SessionFaultPlan
+from repro.runtime.resilience import RetryPolicy
+from repro.service import (AggregationService, BatchingConfig,
+                           SessionParams)
+from repro.service.session import SessionState
+
+RNG = np.random.default_rng(31)
+N, ELEMS = 8, 16
+
+
+def _params(**kw):
+    return SessionParams(n_nodes=N, elems=ELEMS, cluster_size=4,
+                         redundancy=3, **kw)
+
+
+def _service(S=4, vals=None, params=None, batching=None, **kw):
+    svc = AggregationService(
+        params or _params(),
+        batching=batching or BatchingConfig(max_batch=S, max_age=1e9),
+        **kw)
+    for i in range(S):
+        s = svc.open(now=0.0)
+        for slot in range(N):
+            s.contribute(slot, vals[i, slot])
+        svc.seal(s.sid, now=0.0)
+    return svc
+
+
+def _vals(S=4):
+    return RNG.normal(size=(S, N, ELEMS)).astype(np.float32) * 0.3
+
+
+# ---------------------------------------------------------------------------
+# Metrics registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_counters_gauges_histograms():
+    reg = MetricsRegistry()
+    c = reg.counter("x.count")
+    c.inc()
+    c.inc(4)
+    assert c.value == 5
+    assert reg.counter("x.count") is c          # same handle, same series
+    g = reg.gauge("x.depth")
+    g.set(2.0)
+    g.track_max(7.0)
+    g.track_max(3.0)
+    assert g.value == 7.0
+    h = reg.histogram("x.lat")
+    for v in (1.0, 3.0):
+        h.observe(v)
+    snap = reg.snapshot()
+    assert snap["counters"] == {"x.count": 5}
+    assert snap["gauges"] == {"x.depth": 7.0}
+    assert snap["histograms"]["x.lat"] == {
+        "count": 2, "total": 4.0, "min": 1.0, "max": 3.0, "mean": 2.0}
+    reg.reset()
+    assert c.value == 0 and g.value == 0.0      # handles stay live
+    assert reg.snapshot()["histograms"]["x.lat"]["count"] == 0
+
+
+def test_registry_labels_key_distinct_series():
+    reg = MetricsRegistry()
+    a = reg.counter("q.flushes", reason="size")
+    b = reg.counter("q.flushes", reason="age")
+    assert a is not b
+    a.inc(2)
+    b.inc()
+    assert reg.snapshot()["counters"] == {
+        "q.flushes{reason=age}": 1, "q.flushes{reason=size}": 2}
+
+
+def test_disabled_registry_hands_out_noops():
+    reg = MetricsRegistry(enabled=False)
+    c = reg.counter("x")
+    c.inc(100)
+    reg.histogram("h").observe(1.0)
+    reg.gauge("g").set(5.0)
+    assert c.value == 0
+    assert reg.snapshot() == {"counters": {}, "gauges": {},
+                              "histograms": {}}
+
+
+def test_exporters_render_every_series():
+    reg = MetricsRegistry()
+    reg.counter("executor.batches_run").inc(3)
+    reg.counter("queue.flushes", reason="size").inc()
+    reg.histogram("stage.seconds", stage="reveal").observe(0.001)
+    prom = prometheus_text(reg)
+    assert "repro_executor_batches_run 3" in prom
+    assert 'repro_queue_flushes{reason="size"} 1' in prom
+    assert 'repro_stage_seconds_count{stage="reveal"} 1' in prom
+    table = stats_table(reg)
+    assert "executor.batches_run" in table and "n=1" in table
+
+
+# ---------------------------------------------------------------------------
+# Trace recorder
+# ---------------------------------------------------------------------------
+
+
+def test_recorder_ring_jsonl_and_tick_clock(tmp_path):
+    path = tmp_path / "t.jsonl"
+    rec = TraceRecorder(capacity=3, clock=TickClock(), sink=str(path))
+    for i in range(5):
+        rec.event("tick", i=i)
+    rec.event("other")
+    rec.close()
+    assert rec.events_recorded == 6
+    ring = rec.events()
+    assert len(ring) == 3                       # bounded ring, oldest out
+    assert [e["ts"] for e in ring] == [3.0, 4.0, 5.0]
+    assert rec.events("other") == [{"ts": 5.0, "kind": "other"}]
+    # the sink saw everything (it streams; the ring only buffers)
+    disk = read_jsonl(str(path))
+    assert len(disk) == 6
+    assert disk[0] == {"ts": 0.0, "kind": "tick", "i": 0}
+    # canonical serialization round-trips byte-for-byte
+    assert to_jsonl(disk) == path.read_text()
+
+
+# ---------------------------------------------------------------------------
+# hop_wire_words: one formula behind plan, engine, trace and analytics
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("transport,backup", [("full", True),
+                                              ("digest", True),
+                                              ("digest", False)])
+def test_hop_wire_words_matches_plan_and_schedule_cost(transport, backup):
+    T = 48
+    cfg = AggConfig(n_nodes=16, cluster_size=4, redundancy=3,
+                    schedule="tree", transport=transport,
+                    digest_backup=backup)
+    plan = compile_plan(cfg)
+    words = [hop_wire_words(cfg, rnd, T) for rnd in plan.rounds]
+    total = 4 * sum(w["payload"] + w["digest"] + w["backup"]
+                    for w in words)
+    assert total == plan.wire_bytes(T)
+    cost = schedule_cost("tree", 4, 4, 3, payload_bytes=4 * T,
+                         digest=transport == "digest",
+                         digest_bytes=4 * cfg.digest_words,
+                         digest_backup=backup)
+    assert total == cost["bytes_total"]
+
+
+# ---------------------------------------------------------------------------
+# Executor integration: flight-recorder events + registry views
+# ---------------------------------------------------------------------------
+
+
+def test_batch_and_round_events_reconcile_with_engine_account():
+    S, vals = 4, _vals(4)
+    rec = TraceRecorder(clock=TickClock())
+    svc = _service(S=S, vals=vals, recorder=rec)
+    assert svc.pump(now=1.0) == S
+    (b,) = rec.events("batch")
+    rounds = rec.events("round")
+    assert b["rows"] == S and b["sids"] == [0, 1, 2, 3] and b["fresh"]
+    assert len(rounds) == b["rounds"]
+    # summed round events == the batch event == the plan's byte account
+    assert sum(r["bytes"] for r in rounds) == b["bytes"]
+    for r in rounds:
+        assert r["bytes"] == (r["payload_bytes"] + r["digest_bytes"]
+                              + r["backup_bytes"])
+    plan = compile_plan(_params().agg_config())
+    assert b["bytes"] == plan.wire_bytes(b["padded"], S=S)
+    # == the analytic account
+    cost = schedule_cost("ring", N // 4, 4, 3,
+                         payload_bytes=4 * b["padded"])
+    assert b["bytes"] == S * cost["bytes_total"]
+    # == the engine's executed trace-time account, bit for bit
+    xs = np.zeros((S, N, b["padded"]), np.float32)
+    _, tp = sim_batch(plan, xs, SessionMeta.build(S, N, seed=plan.cfg.seed))
+    assert tp.bytes_sent == b["bytes"]
+    # registry agrees with all of the above
+    assert svc.executor.wire_bytes == b["bytes"]
+    assert svc.stats["wire"]["bytes_sent"] == b["bytes"]
+    # stage spans were recorded host-side around the dispatch
+    hists = svc.metrics.snapshot()["histograms"]
+    for stage in ("admission_wait", "plan_compile", "reveal"):
+        assert hists[f"stage.seconds{{stage={stage}}}"]["count"] == 1, stage
+    # flush event precedes the batch event
+    kinds = [e["kind"] for e in rec.events()]
+    assert kinds.index("flush") < kinds.index("batch")
+
+
+def test_round_events_model_fault_population_on_digest():
+    vals = _vals(1)
+    rec = TraceRecorder(clock=TickClock())
+    svc = _service(S=1, vals=vals, params=_params(transport="digest"),
+                   recorder=rec)
+    svc.get(0).inject_fault(SessionFaultPlan(byzantine_slots=(2,),
+                                             byzantine_mode="mismatch"))
+    svc.drain()
+    assert svc.get(0).state is SessionState.REVEALED
+    rounds = rec.events("round")
+    assert rounds
+    for r in rounds:
+        assert r["fault_population"] == {"mismatch": 1}
+        assert r["vote_disagreements"] == 1
+        assert r["digest_mismatches"] == 1
+        assert r["digest_bytes"] > 0
+
+
+def test_resilience_ladder_events_retry_bisect_quarantine():
+    vals = _vals(2)
+    rec = TraceRecorder(clock=TickClock())
+    # one injected dispatch failure -> retry -> recovery
+    svc = _service(S=2, vals=vals, recorder=rec,
+                   retry=RetryPolicy(max_attempts=2, base_backoff_s=0),
+                   chaos=ChaosConfig(mode="dispatch", times=1))
+    svc.drain()
+    (chaos,) = rec.events("chaos")
+    (retry,) = rec.events("retry")
+    assert chaos["mode"] == "dispatch" and chaos["attempt"] == 1
+    assert retry["attempt"] == 1 and "chaos" in retry["error"]
+    assert [e["attempt"] for e in rec.events("batch")] == [2]
+    # unbounded chaos -> the whole ladder: retries exhaust, the batch
+    # bisects, both halves quarantine; the trace reconstructs it all
+    rec2 = TraceRecorder(clock=TickClock())
+    svc2 = _service(S=2, vals=vals, recorder=rec2,
+                    retry=RetryPolicy(max_attempts=2, base_backoff_s=0),
+                    chaos=ChaosConfig(mode="dispatch"))
+    with pytest.raises(ChaosError):
+        svc2.drain()
+    (bisect,) = rec2.events("bisect")
+    assert bisect["left"] == [0] and bisect["right"] == [1]
+    assert [sorted(e["sids"]) for e in rec2.events("quarantine")] \
+        == [[0], [1]]
+    assert not rec2.events("batch")             # nothing ever executed
+    assert svc2.stats["resilience"]["quarantined"] == 2
+
+
+def test_queue_protection_events_shed_and_expire():
+    vals = _vals(4)
+    rec = TraceRecorder(clock=TickClock())
+    svc = _service(S=4, vals=vals, recorder=rec,
+                   batching=BatchingConfig(max_batch=2, max_age=1e9,
+                                           max_pending_rows=3))
+    # 4 sealed rows > watermark 3: the newest arrival was shed
+    (shed,) = rec.events("shed")
+    assert shed["sid"] == 3 and shed["limit"] == 3
+    svc.drain()
+    assert svc.get(3).state is SessionState.EXPIRED
+
+
+# ---------------------------------------------------------------------------
+# svc.stats schema: canonical nested keys + deprecated aliases
+# ---------------------------------------------------------------------------
+
+
+def test_svc_stats_schema_and_aliases():
+    vals = _vals(2)
+    svc = _service(S=2, vals=vals)
+    svc.drain()
+    st = svc.stats
+    assert st["schema"] == SVC_STATS_VERSION
+    assert set(SVC_STATS_KEYS) | set(SVC_STATS_DEPRECATED) == set(st)
+    assert st["sessions"] == {"opened": 2, "run": 2, "failed": 0,
+                              "pending": 0}
+    assert st["batches"] == {"run": 1, "sizes": (2,)}
+    assert set(st["caches"]) == {"executor", "plan"}
+    assert st["wire"]["bytes_sent"] == svc.executor.wire_bytes > 0
+    assert set(st["metrics"]) == {"counters", "gauges", "histograms"}
+    # every deprecated top-level key aliases its nested value exactly
+    assert st["sessions_opened"] == st["sessions"]["opened"]
+    assert st["sessions_run"] == st["sessions"]["run"]
+    assert st["failed_sessions"] == st["sessions"]["failed"]
+    assert st["pending"] == st["sessions"]["pending"]
+    assert st["batches_run"] == st["batches"]["run"]
+    assert st["batch_sizes"] == st["batches"]["sizes"]
+    assert st["executor_cache"] == st["caches"]["executor"]
+    assert st["plan_cache"] == st["caches"]["plan"]
+
+
+# ---------------------------------------------------------------------------
+# Deterministic byte-identical replay under chaos (chaos-lane anchor)
+# ---------------------------------------------------------------------------
+
+
+def _chaos_run(path, vals):
+    rec = TraceRecorder(clock=TickClock(), sink=str(path))
+    svc = _service(
+        S=8, vals=vals, recorder=rec,
+        batching=BatchingConfig(max_batch=4, max_age=1e9),
+        retry=RetryPolicy(max_attempts=2, base_backoff_s=0),
+        chaos=ChaosConfig(mode="dispatch", p=0.35, seed=0))
+    try:
+        svc.drain()
+    except ChaosError:
+        pass
+    rec.close()
+    return rec
+
+
+@pytest.mark.chaos
+def test_chaos_trace_replays_byte_identical(tmp_path):
+    """Same chaos seed + TickClock + zero backoff => the two runs write
+    byte-for-byte identical JSONL (pinned by digest), and every executed
+    batch's summed round events reconcile with the engine + analytic
+    byte accounts."""
+    vals = _vals(8)
+    a, b = tmp_path / "a.jsonl", tmp_path / "b.jsonl"
+    rec = _chaos_run(a, vals)
+    _chaos_run(b, vals)
+    assert rec.events_recorded > 0
+    da = hashlib.sha256(a.read_bytes()).hexdigest()
+    db = hashlib.sha256(b.read_bytes()).hexdigest()
+    assert da == db
+    events = read_jsonl(str(a))
+    batches = [e for e in events if e["kind"] == "batch"]
+    assert batches                              # some dispatches executed
+    assert any(e["kind"] == "retry" for e in events)  # and chaos fired
+    for bt in batches:
+        rsum = sum(e["bytes"] for e in events
+                   if e["kind"] == "round" and e["unit"] == bt["unit"]
+                   and e["attempt"] == bt["attempt"])
+        assert rsum == bt["bytes"]
+        # unfaulted cells: the analytic account holds exactly
+        cost = schedule_cost("ring", N // 4, 4, 3,
+                             payload_bytes=4 * bt["padded"])
+        assert bt["bytes"] == bt["rows"] * cost["bytes_total"]
