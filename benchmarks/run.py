@@ -13,9 +13,19 @@ future PRs diff against.
 
 Row-naming rule: a bench row's name ends in a unit suffix that states
 what the numeric column means — ``_us`` for microseconds per call
-(lower is better) and ``_sps`` for sessions per second (higher is
-better).  Unsuffixed duplicates of the service rows are the pre-PR-7
-legacy names, kept one release; new rows MUST carry a suffix.
+(lower is better), ``_sps`` for sessions per second (higher is
+better), ``_bytes`` for wire bytes moved, and ``_pct`` for relative
+overhead percentages.  Every row MUST carry a suffix: the unsuffixed
+pre-PR-7 duplicates of the service rows served their one deprecation
+release and are gone (PR 8).
+
+``--guard NAME`` (repeatable) makes the run a regression gate: after
+the bench, NAME's fresh value is compared against the value already
+committed in the ``--json`` trajectory file, and the run exits 1 if a
+higher-is-better row (``_sps``) dropped more than 10% (or a
+lower-is-better ``_us`` row rose more than 10%).  The fresh value is
+still merged, so an intentional regression is committed by rerunning
+after review — the gate is on the DIFF, not the file.
 """
 import argparse
 import contextlib
@@ -69,7 +79,13 @@ def main() -> None:
     ap.add_argument("--transport", choices=("sim", "mesh"), default="sim",
                     help="service bench executor transport (mesh needs "
                          "one device per protocol node)")
+    ap.add_argument("--guard", action="append", default=[], metavar="NAME",
+                    help="regression gate: exit 1 if this row regresses "
+                         ">10%% vs its committed --json value (repeatable)")
     args = ap.parse_args()
+    if args.guard and not args.json_path:
+        ap.error("--guard needs --json (the committed trajectory file "
+                 "to diff against)")
 
     from benchmarks import (comm_cost, crypto_breakdown, kernels,
                             lower_bound, obs_overhead, secure_allreduce,
@@ -102,10 +118,31 @@ def main() -> None:
                 rows = json.load(f)
         except (OSError, ValueError):
             pass
-        rows.update(parse_rows(tee.getvalue()))
+        committed = dict(rows)
+        fresh = parse_rows(tee.getvalue())
+        rows.update(fresh)
         with open(args.json_path, "w") as f:
             json.dump(rows, f, indent=2, sort_keys=True)
             f.write("\n")
+        for name in args.guard:
+            if name not in fresh:
+                print(f"GUARD {name}: row not produced by this run",
+                      file=sys.stderr)
+                ok = False
+                continue
+            base = committed.get(name)
+            if base is None or base == 0:
+                print(f"GUARD {name}: no committed baseline, "
+                      f"recorded {fresh[name]:.0f}", file=sys.stderr)
+                continue
+            # higher-is-better unless the unit suffix says microseconds
+            ratio = (fresh[name] / base if not name.endswith("_us")
+                     else base / fresh[name])
+            verdict = "OK" if ratio >= 0.9 else "REGRESSION"
+            print(f"GUARD {name}: {base:.0f} -> {fresh[name]:.0f} "
+                  f"({ratio:.2f}x) {verdict}", file=sys.stderr)
+            if ratio < 0.9:
+                ok = False
     sys.exit(0 if ok else 1)
 
 

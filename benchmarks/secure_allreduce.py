@@ -85,14 +85,18 @@ def run(full: bool = False) -> None:
                                   digest_backup=digest)
                 tag = f"{sched}{'_digest' if digest else ''}"
                 extra = ";backup=eager" if digest else ""
-                print(f"secure_agg_cost_g{g}c{c}_{tag},0,"
+                # numeric column = total modeled wire bytes (_bytes unit
+                # suffix per the run.py naming rule) — these rows used to
+                # serialize a literal 0 and degenerate the trajectory
+                print(f"secure_agg_cost_g{g}c{c}_{tag}_bytes,"
+                      f"{k['bytes_total']:.0f},"
                       f"rounds={k['rounds']};"
                       f"MB_per_node={k['bytes_per_node']/1e6:.2f}{extra}")
 
     # --- full vs digest wire transport: engine wall time + the bytes the
-    # compiled plan actually moves (Transport.bytes_sent).  Row names keep
-    # the historical secure_agg_sim_<sched>_n16 for the full transport so
-    # the trajectory file stays diffable; digest rows ride next to them.
+    # compiled plan actually moves (Transport.bytes_sent); every row
+    # carries the run.py unit suffix (_us), digest rows ride next to the
+    # full-transport ones.
     n = 16
     T = 1 << 14
     rng = np.random.default_rng(0)
@@ -107,7 +111,7 @@ def run(full: bool = False) -> None:
             err = float(jnp.max(jnp.abs(f(xs)[0] - xs.sum(0))))
             mb = _modeled_bytes(cfg, T) / 1e6
             tag = "" if transport == "full" else "_digest"
-            print(f"secure_agg_sim_{sched}{tag}_n{n},{us:.0f},"
+            print(f"secure_agg_sim_{sched}{tag}_n{n}_us,{us:.0f},"
                   f"transport={transport};moved_MB={mb:.2f};"
                   f"max_err={err:.2e}")
 
@@ -140,9 +144,9 @@ def run(full: bool = False) -> None:
     us_fac = float(np.median(t_fac)) * 1e6
     us_dir = float(np.median(t_dir)) * 1e6
     ovh = 100.0 * (us_fac - us_dir) / us_dir
-    print(f"secure_agg_facade_dispatch_n{n},{us_fac:.0f},"
+    print(f"secure_agg_facade_dispatch_n{n}_us,{us_fac:.0f},"
           f"direct_execute_chunks={us_dir:.0f}us;overhead_pct={ovh:.1f}")
-    print(f"secure_agg_facade_direct_n{n},{us_dir:.0f},"
+    print(f"secure_agg_facade_direct_n{n}_us,{us_dir:.0f},"
           f"jit_engine_sim_batch_T{T}")
 
     # --- per-stage hot path at T=1M, fused ops vs the seed jnp path ---
@@ -155,21 +159,21 @@ def run(full: bool = False) -> None:
 
     us_mask = time_call(lambda z: mask_encrypt_op(z, 3, 7, 2.0 ** 20, 1.0), x)
     us_mask_old = time_call(lambda z: _legacy_mask(z, 3), x)
-    print(f"secure_agg_hotpath_mask_T1M,{us_mask:.0f},"
+    print(f"secure_agg_hotpath_mask_T1M_us,{us_mask:.0f},"
           f"legacy={us_mask_old:.0f}us;speedup={us_mask_old/us_mask:.2f}x")
-    print(f"secure_agg_hotpath_mask_legacy_T1M,{us_mask_old:.0f},threefry")
+    print(f"secure_agg_hotpath_mask_legacy_T1M_us,{us_mask_old:.0f},threefry")
 
     us_un = time_call(lambda a: unmask_decrypt_op(a, n_nodes, 7, 2.0 ** 20),
                       agg)
     us_un_old = time_call(lambda a: _legacy_unmask(a, n_nodes), agg)
-    print(f"secure_agg_hotpath_unmask_n{n_nodes}_T1M,{us_un:.0f},"
+    print(f"secure_agg_hotpath_unmask_n{n_nodes}_T1M_us,{us_un:.0f},"
           f"legacy={us_un_old:.0f}us;speedup={us_un_old/us_un:.2f}x")
-    print(f"secure_agg_hotpath_unmask_legacy_n{n_nodes}_T1M,{us_un_old:.0f},"
+    print(f"secure_agg_hotpath_unmask_legacy_n{n_nodes}_T1M_us,{us_un_old:.0f},"
           f"unrolled_threefry_chain")
 
     us_v = time_call(lambda *c: vote_combine_op(c, acc), *copies)
     us_v_old = time_call(lambda *c: _legacy_vote(jnp.stack(c), acc), *copies)
-    print(f"secure_agg_hotpath_vote_r{r}_T1M,{us_v:.0f},"
+    print(f"secure_agg_hotpath_vote_r{r}_T1M_us,{us_v:.0f},"
           f"legacy={us_v_old:.0f}us;speedup={us_v_old/us_v:.2f}x")
-    print(f"secure_agg_hotpath_vote_legacy_r{r}_T1M,{us_v_old:.0f},"
+    print(f"secure_agg_hotpath_vote_legacy_r{r}_T1M_us,{us_v_old:.0f},"
           f"stacked_sort")

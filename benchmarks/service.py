@@ -12,12 +12,21 @@ numeric column (higher is better); ``service_executor_*`` rows carry
 us/batch.  A full-service row (admission queue + python session
 bookkeeping included) closes the loop.
 
-Every row is emitted twice: under its legacy name and under the
-unit-suffixed name (``_us`` / ``_sps`` — the naming rule lives in
-``benchmarks/run.py``); the legacy keys are kept one release.
-``service_stage_*_us`` rows are the per-stage timing means read off the
-service's obs registry (``stage.seconds`` histograms) for the sim and
-mesh executors.
+Rows carry the unit-suffixed names only (``_us`` / ``_sps`` — the
+naming rule lives in ``benchmarks/run.py``; the unsuffixed pre-PR-7
+duplicates are gone).  ``service_stage_*_us`` rows are the per-stage
+timing means read off the service's obs registry (``stage.seconds``
+histograms) for the sim and mesh executors.
+
+The mesh throughput rows are the PR-8 streaming story:
+
+  * ``service_throughput_mesh_seq_S*_sps`` — the sequential executor
+    (``StreamConfig(depth=1)``: pack, dispatch, block, reveal, repeat)
+    — the "before";
+  * ``service_throughput_mesh_S*_sps``     — the streaming executor
+    (depth=2 double-buffered slots, non-blocking issue, reveal at
+    settlement) over the SAME pre-built sealed batches — the row the
+    ``make bench-stream`` regression guard watches.
 """
 from __future__ import annotations
 
@@ -41,12 +50,30 @@ def _cfg() -> AggConfig:
 
 
 def _emit(name: str, unit: str, value: float, derived: str) -> None:
-    """Print one bench row under its legacy name (kept one release) AND
-    the unit-suffixed name — ``_us`` = microseconds per call, ``_sps`` =
-    sessions per second (see the naming rule in ``benchmarks/run.py``).
-    The suffixed keys are what future PRs should diff against."""
-    print(f"{name},{value:.0f},{derived}")
+    """Print one bench row under its unit-suffixed name — ``_us`` =
+    microseconds per call, ``_sps`` = sessions per second (see the
+    naming rule in ``benchmarks/run.py``)."""
     print(f"{name}_{unit},{value:.0f},{derived}")
+
+
+def _sealed_batches(params, S: int, n_batches: int, start: int = 0) -> list:
+    """Pre-built sealed batches so the timed region measures the
+    executor (pack -> dispatch -> reveal), not numpy fill."""
+    from repro.service.session import Session, derive_session_seed
+    rng = np.random.default_rng(0)
+    vals = rng.normal(size=(N_NODES, T)).astype(np.float32) * 0.1
+    out, sid = [], start
+    for _ in range(n_batches):
+        batch = []
+        for _ in range(S):
+            s = Session(sid, params, derive_session_seed(7, sid))
+            for slot in range(N_NODES):
+                s.contribute(slot, vals[slot])
+            s.seal(0.0)
+            batch.append(s)
+            sid += 1
+        out.append(batch)
+    return out
 
 
 def _stage_rows(prefix: str, registry, derived: str) -> None:
@@ -94,8 +121,52 @@ def _run_mesh(full: bool) -> None:
         per_s = S * 1e6 / us
         _emit(f"service_executor_mesh_S{S}_T{T}", "us", us,
               f"sessions_per_s={per_s:.0f};shard_map_{N_NODES}dev")
-        _emit(f"service_throughput_mesh_S{S}", "sps", per_s,
-              f"sessions_per_s;shard_map_{N_NODES}dev")
+
+    # --- executor throughput, sequential vs streaming, over the SAME
+    # pre-built sealed batches.  depth=1 is the pre-PR-8 dispatch (pack,
+    # dispatch, block, reveal, one batch at a time); depth=2 is the
+    # double-buffered pipeline (non-blocking issue, reveal at slot
+    # settlement).  service_throughput_mesh_S64_sps is the row the
+    # `make bench-stream` regression guard watches. ---
+    import time as _time
+
+    from repro.service import (BatchedExecutor, SessionParams,
+                               StreamConfig)
+    params = SessionParams(n_nodes=N_NODES, elems=T, cluster_size=CLUSTER,
+                           redundancy=R)
+    n_batches = 8 if full else 6
+    passes = 4                # min-over-passes: the CI host is noisy at
+    variants = (("mesh_seq", 1), ("mesh", 2))     # the ms scale
+    for S in S_SWEEP:
+        execs, best = {}, {}
+        for tag, depth in variants:
+            ex = BatchedExecutor(transport="mesh",
+                                 mesh=compat.node_mesh(N_NODES),
+                                 stream=StreamConfig(depth=depth))
+            (warm,) = _sealed_batches(params, S, 1, start=10_000_000)
+            ex.execute(warm, padded_elems=T)      # compile outside timing
+            execs[tag], best[tag] = ex, float("inf")
+        # passes INTERLEAVE the variants so a host-speed swing between
+        # windows (this container drifts up to ~40% at the ms scale)
+        # hits sequential and streaming alike — the seq/stream ratio is
+        # honest even when the absolute numbers wander
+        for p in range(passes):
+            for tag, depth in variants:
+                ex = execs[tag]
+                batches = _sealed_batches(params, S, n_batches,
+                                          start=(1 + p) * n_batches * S)
+                t0 = _time.monotonic()
+                for b in batches:
+                    if depth > 1:
+                        ex.execute_async(b, padded_elems=T)
+                    else:
+                        ex.execute(b, padded_elems=T)
+                ex.flush()
+                best[tag] = min(best[tag], _time.monotonic() - t0)
+        for tag, depth in variants:
+            _emit(f"service_throughput_{tag}_S{S}", "sps",
+                  S * n_batches / best[tag],
+                  f"sessions_per_s;depth={depth};shard_map_{N_NODES}dev")
 
     # --- per-stage timing on the mesh executor (obs registry) ---
     from repro.service import (AggregationService, BatchingConfig,

@@ -83,10 +83,10 @@ def main():
         got = agg.result(sid)
         exact += bool(np.allclose(got, want, atol=1e-3))
     st = agg.stats()["service"]
-    print(f"polls revealed: {st['sessions_run']}, exact tallies: "
+    print(f"polls revealed: {st['sessions']['run']}, exact tallies: "
           f"{exact}/{args.polls}")
-    print(f"batches: {st['batches_run']} (sizes {st['batch_sizes']}), "
-          f"final epoch: {st['epoch']}")
+    print(f"batches: {st['batches']['run']} "
+          f"(sizes {st['batches']['sizes']}), final epoch: {st['epoch']}")
     sample = agg.result(0).astype(int)
     print(f"poll 0 tally: {sample.tolist()} yes of {n_slots} voters")
     assert exact == args.polls

@@ -76,7 +76,7 @@ class SecureAggregator:
                  wire: Optional[Wire] = None,
                  runtime: Optional[Runtime] = None,
                  batching=None, epochs=None, retry=None, breaker=None,
-                 chaos=None, metrics=None, recorder=None):
+                 chaos=None, metrics=None, recorder=None, stream=None):
         if cfg is None:
             if topology is None:
                 raise ConfigError(
@@ -106,6 +106,7 @@ class SecureAggregator:
         self._retry = retry
         self._breaker = breaker
         self._chaos = chaos
+        self._stream = stream
         self._svc = None
 
     # -- config / plan ------------------------------------------------------
@@ -127,7 +128,7 @@ class SecureAggregator:
                                 batching=self._batching, epochs=self._epochs,
                                 retry=self._retry, breaker=self._breaker,
                                 chaos=self._chaos, metrics=self.metrics,
-                                recorder=self.recorder)
+                                recorder=self.recorder, stream=self._stream)
 
     # -- one-shot aggregation ----------------------------------------------
     def allreduce(self, tree):
@@ -217,6 +218,63 @@ class SecureAggregator:
         self._fns[key] = fn
         return fn
 
+    def allreduce_batched(self, xs):
+        """Batched one-shot: S independent aggregations in ONE dispatch.
+
+        ``xs`` is an ``(S, n_nodes, ...)`` array — S sessions' per-node
+        payloads (trailing axes flatten to T elements per node).
+        Returns the ``(S, ...)`` revealed per-session aggregates, each
+        row bit-identical to ``allreduce`` of that row alone (rows are
+        independent sessions sharing this config's pad seed).  Bulk
+        callers skip the session service entirely: this shares the
+        donated batch-slot executable of the streaming executor
+        (``core.engine.build_batch_executable``), so one facade verb
+        and the service dispatch the same compiled program."""
+        from repro.service.executor import StreamConfig
+        backend = self.backend
+        if backend == "manual":
+            raise ConfigError(
+                "allreduce_batched runs a batched device dispatch, which "
+                "has no 'manual' backend — use Runtime(backend='sim') or "
+                "Runtime(backend='mesh', mesh=...)")
+        xs = jnp.asarray(xs)
+        n = self.cfg.n_nodes
+        if xs.ndim < 2 or xs.shape[1] != n:
+            raise ConfigError(
+                f"allreduce_batched wants (S, n_nodes={n}, ...) per-node "
+                f"payloads, got shape {xs.shape}")
+        S = int(xs.shape[0])
+        if S == 0 or xs.size == 0:
+            return xs[:, 0]
+        tail = xs.shape[2:]
+        T = int(np.prod(tail, dtype=np.int64)) if tail else 1
+        dtype = jnp.result_type(xs)
+        key = ("batched", backend, S, T)
+        fn = self._fns.get(key)
+        if fn is not None:
+            self._c_fn_hits.inc()
+            fresh = False
+        else:
+            self._c_fn_misses.inc()
+            fresh = True
+            stream = self._stream or StreamConfig()
+            fn = _engine.build_batch_executable(
+                self.plan(), backend=backend, mesh=self.runtime.mesh,
+                dp_axes=self.runtime.dp_axes, impl=self.cfg.kernel_impl,
+                donate=stream.resolve_donate())
+            self._fns[key] = fn
+        seeds = jnp.full((S,), self.cfg.seed, dtype=jnp.uint32)
+        offsets = jnp.zeros((S,), dtype=jnp.uint32)
+        out = fn(xs.reshape(S, n, T).astype(jnp.float32), seeds,
+                 offsets, {})
+        self._c_bytes.inc(self.plan().wire_bytes(T, S=S))
+        if self.recorder is not None:
+            from repro.obs.trace import record_batch_trace
+            record_batch_trace(self.recorder, self.plan(), padded=T,
+                               rows=S, masks={}, unit=0, attempt=1,
+                               backend=backend, sids=(), fresh=fresh)
+        return jnp.reshape(out, (S,) + tail).astype(dtype)
+
     # -- session service ----------------------------------------------------
     @property
     def service(self):
@@ -271,7 +329,7 @@ class SecureAggregator:
                 mesh=self.runtime.mesh, dp_axes=self.runtime.dp_axes,
                 retry=self._retry, breaker=self._breaker,
                 chaos=self._chaos, metrics=self.metrics,
-                recorder=self.recorder)
+                recorder=self.recorder, stream=self._stream)
         return self._svc
 
     def seal(self, sid: int, now=None) -> None:

@@ -371,6 +371,46 @@ def sim_batch(plan: AggPlan, xs: jax.Array, meta: SessionMeta, *,
     return out.reshape((S, T) if reveal_only else (S, n, T)), tp
 
 
+def build_batch_executable(plan: AggPlan, *, backend: str = "sim",
+                           mesh=None, dp_axes: Sequence[str] = ("data",),
+                           impl: Optional[str] = None,
+                           donate: bool = False):
+    """The one jitted batch-reveal executable the service executor and
+    the facade's batched one-shot share:
+
+        fn(xs, seeds, offsets, fault_masks) -> (S, T) revealed rows
+
+    with ``xs`` (S, n, T) per-session/per-node payloads.  ``backend``
+    picks the substrate (sim oracle or ``MeshTransport`` over a real dp
+    mesh with the distributed reveal).  ``donate=True`` donates the
+    ``xs`` batch-slot buffer to the computation
+    (``jax.jit(donate_argnums=(0,))``) so XLA reuses it for
+    intermediates — callers must re-stage ``xs`` per call (the
+    streaming executor's double-buffered slots exist exactly so packing
+    the next slot never touches a donated buffer).  Donation is a
+    no-op (with a UserWarning) on the CPU backend, so callers gate it
+    on ``jax.default_backend()``."""
+    if backend == "mesh":
+        mt = MeshTransport(mesh, dp_axes, impl=impl)
+
+        def raw(xs, seeds, offsets, fault_masks):
+            meta = SessionMeta(seeds=seeds, offsets=offsets,
+                               fault_masks=fault_masks)
+            return mt.execute(plan, xs, meta, reveal_only=True)
+    else:
+        def raw(xs, seeds, offsets, fault_masks):
+            meta = SessionMeta(seeds=seeds, offsets=offsets,
+                               fault_masks=fault_masks)
+            S, n, T = xs.shape
+            tp = SimTransport(plan, S=S, impl=impl)
+            flat = xs.reshape(S * n, T).astype(jnp.float32)
+            (out,) = execute_chunks(plan, tp, [flat], meta,
+                                    reveal_only=True)
+            return out
+
+    return jax.jit(raw, donate_argnums=(0,) if donate else ())
+
+
 def manual_allreduce(x: jax.Array, cfg, dp_axes: Sequence[str]) -> jax.Array:
     """Exact-sum allreduce of ``x`` over ``dp_axes`` via the paper
     schedule; call inside a shard_map manual over ``dp_axes``.  The
@@ -487,13 +527,16 @@ class ManualTransport(Transport):
     masks are constant-array lookups, the unmask loop lives in-kernel)."""
 
     def __init__(self, plan: AggPlan, dp_axes: Sequence[str], S: int = 1,
-                 impl: Optional[str] = None):
+                 impl: Optional[str] = None, shard_reveal: bool = False):
         self.plan = plan
         self.dp_axes = tuple(dp_axes)
         self.S = S
         self.bytes_sent = 0
         self.impl = backend.resolve(
             impl if impl is not None else plan.cfg.kernel_impl)
+        # distributed reveal: each rank decrypts only its 1/n slice of
+        # the revealed sessions (see ``reveal_rows``) instead of all S
+        self.shard_reveal = shard_reveal
         self._nid = flat_node_id(self.dp_axes)
 
     def node_ids(self) -> jax.Array:
@@ -530,8 +573,29 @@ class ManualTransport(Transport):
         return jnp.where(part, voted, acc)
 
     def reveal_rows(self, accs: list, meta: SessionMeta):
-        # SPMD: every rank decrypts its own (identical) copy
-        return accs, self.expand(meta.seeds), self.expand(meta.offsets)
+        seeds = self.expand(meta.seeds)
+        offs = self.expand(meta.offsets)
+        if not self.shard_reveal:
+            # SPMD: every rank decrypts its own (identical) copy
+            return accs, seeds, offs
+        # Distributed reveal: after the voted rounds every rank holds the
+        # identical (S, T) aggregate, so decrypting all S rows on every
+        # rank is n-fold redundant work.  Unmask is elementwise per row,
+        # so each rank decrypts only rows [nid*S_loc, (nid+1)*S_loc) with
+        # the matching seed/offset slice — bit-identical per row — and
+        # the shard_map concatenates the slices back ((n*S_loc, T); the
+        # caller slices off the zero-pad tail past S).
+        n = self.plan.n_nodes
+        s_loc = -(-self.S // n)
+        pad = n * s_loc - self.S
+        start = self._nid.astype(jnp.int32) * s_loc
+
+        def sl(a):
+            if pad:
+                a = jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+            return jax.lax.dynamic_slice_in_dim(a, start, s_loc, axis=0)
+
+        return [sl(a) for a in accs], sl(seeds), sl(offs)
 
 
 # ---------------------------------------------------------------------------
@@ -570,7 +634,14 @@ class MeshTransport:
                 *, reveal_only: bool = False) -> jax.Array:
         """xs: (S, n_nodes, T) per-session/per-node payloads ->
         (S, n_nodes, T) per-node results, or (S, T) with
-        ``reveal_only`` (one revealed copy per session)."""
+        ``reveal_only`` (one revealed copy per session).
+
+        ``reveal_only`` runs the *distributed* reveal: after the voted
+        rounds every rank holds the identical (S, T) aggregate, so each
+        rank threshold-decrypts only its 1/n slice of the sessions
+        (``ManualTransport.shard_reveal``) and the out_specs concatenate
+        the slices — n-fold less unmask work than replicated decrypt,
+        bit-identical per row to the sim oracle."""
         S, n, T = xs.shape
         assert n == plan.n_nodes == self.n_devices, \
             (n, plan.n_nodes, self.n_devices)
@@ -578,16 +649,14 @@ class MeshTransport:
         inner: list = []
 
         def body(xl, seeds, offsets, masks):
-            tp = ManualTransport(plan, self.dp_axes, S=S, impl=self.impl)
+            tp = ManualTransport(plan, self.dp_axes, S=S, impl=self.impl,
+                                 shard_reveal=reveal_only)
             inner.append(tp)
             run_tp = tp if self.wrap_inner is None else self.wrap_inner(tp)
             m = SessionMeta(seeds=seeds, offsets=offsets,
                             fault_masks=dict(masks))
-            (out,) = execute_chunks(plan, run_tp, [xl[:, 0, :]], m)
-            # reveal_only: every rank decrypted the identical aggregate
-            # with identical per-session keys, so the (S, T) output is
-            # replicated over the dp axes — return one copy instead of
-            # gathering all n
+            (out,) = execute_chunks(plan, run_tp, [xl[:, 0, :]], m,
+                                    reveal_only=reveal_only)
             return out if reveal_only else out[:, None, :]
 
         shard = P(None, self.dp_axes, None)
@@ -596,10 +665,13 @@ class MeshTransport:
             body, mesh=self.mesh,
             in_specs=(shard, rep, rep, {k: P(None, None)
                                         for k in mask_keys}),
-            out_specs=P(None, None) if reveal_only else shard,
+            # reveal_only: each rank returns its (S_loc, T) decrypted
+            # slice; concatenating over the dp axes gives (n*S_loc, T)
+            # with the real sessions in rows [:S]
+            out_specs=P(self.dp_axes, None) if reveal_only else shard,
             check_vma=False)
         out = fn(xs.astype(jnp.float32), meta.seeds, meta.offsets,
                  dict(meta.fault_masks))
         if inner:
             self.last_bytes = inner[-1].bytes_sent
-        return out
+        return out[:S] if reveal_only else out

@@ -49,7 +49,8 @@ from repro.launch.mesh import make_host_mesh
 from repro.obs import DEFAULT_REGISTRY, TraceRecorder, stats_table
 from repro.obs.export import prometheus_text
 from repro.runtime.chaos import CHAOS_MODES, ChaosConfig
-from repro.service import BatchingConfig, EpochManager, RetryPolicy
+from repro.service import (BatchingConfig, EpochManager, RetryPolicy,
+                           StreamConfig)
 from repro.service.session import SessionState
 
 
@@ -109,6 +110,10 @@ def main() -> None:
                          "--xla_force_host_platform_device_count=N)")
     ap.add_argument("--data", type=int, default=1)
     ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--pipeline-depth", type=int, default=2,
+                    help="in-flight streaming batch slots (1 = the "
+                         "sequential pre-PR-8 dispatch; 2 = "
+                         "double-buffered pack/device overlap)")
     # resilience: deadlines, shedding, retry, deterministic chaos
     ap.add_argument("--ttl", type=float, default=None,
                     help="session deadline in seconds (EXPIRED past it)")
@@ -167,7 +172,8 @@ def main() -> None:
             times=args.chaos_times),
         metrics=DEFAULT_REGISTRY,
         recorder=(None if args.trace_out is None
-                  else TraceRecorder(sink=args.trace_out)))
+                  else TraceRecorder(sink=args.trace_out)),
+        stream=StreamConfig(depth=args.pipeline_depth))
     print(f"service: g={snap.n_clusters} clusters x c={args.cluster_size} "
           f"-> {snap.n_nodes} slots, T={args.elems}, r={args.redundancy}, "
           f"transport={args.transport}")
@@ -175,12 +181,12 @@ def main() -> None:
     out = run_load(agg, em, sessions=args.sessions, elems=args.elems,
                    churn_every=args.churn_every,
                    stats_interval=args.stats_interval)
-    hist = collections.Counter(out["stats"]["batch_sizes"])
+    hist = collections.Counter(out["stats"]["batches"]["sizes"])
     print(f"{out['sessions']} sessions in {out['wall_s']:.2f}s "
           f"({out['sessions_per_s']:.1f} sessions/s), "
           f"revealed {out['revealed']}/{out['sessions']}, "
           f"exact results: {out['exact']}/{out['revealed']}")
-    print(f"batches: {out['stats']['batches_run']} "
+    print(f"batches: {out['stats']['batches']['run']} "
           f"(size histogram {dict(sorted(hist.items()))}), "
           f"final epoch: {out['stats']['epoch']}")
     res, qm = out["stats"]["resilience"], out["stats"]["queue"]

@@ -46,12 +46,17 @@ M_BATCHES = "executor.batches_run"
 M_SESSIONS = "executor.sessions_run"
 M_FN_HITS = "executor.fn_cache.hits"
 M_FN_MISSES = "executor.fn_cache.misses"
+M_FN_BUCKET_HITS = "executor.fn_cache.bucket_hits"  # ran on a larger-S
+#   compiled shape bucket while the exact shape warmed in background
 M_RETRIES = "executor.retries"
 M_BISECTIONS = "executor.bisections"
 M_QUARANTINED = "executor.quarantined"
 M_DEADLINE_HITS = "executor.deadline_hits"
 M_DEGRADED = "executor.degraded_batches"
 M_WIRE_BYTES = "executor.wire_bytes"          # modeled == engine account
+# streaming pipeline: high-watermark of concurrently in-flight batch
+# slots (1 = sequential; == StreamConfig.depth when overlap happened)
+G_PIPELINE_DEPTH = "executor.pipeline_depth"
 # admission queue
 M_FLUSHES = "queue.flushes"                   # labeled reason=size|age|...
 M_MAX_QUEUE_AGE = "queue.max_queue_age"       # gauge (track_max)
@@ -63,24 +68,28 @@ M_DROPPED = "queue.dropped_sessions"
 M_FACADE_FN_HITS = "facade.fn_cache.hits"
 M_FACADE_FN_MISSES = "facade.fn_cache.misses"
 M_FACADE_BYTES = "facade.bytes_sent"
-# per-batch stage timing (histogram, labeled stage=...)
+# per-batch stage timing (histogram, labeled stage=...).  Sequential
+# dispatch times pack + dispatch + the blocking device sync as one
+# ``device_dispatch`` span; the streaming executor splits it:
+# ``pack_overlap`` is the host-side pack + non-blocking dispatch issue
+# (overlapped with the previous batch's device work — JAX async
+# dispatch) and ``device_dispatch`` becomes the blocking wait at reveal.
 H_STAGE = "stage.seconds"
-STAGES = ("admission_wait", "plan_compile", "device_dispatch", "reveal")
+STAGES = ("admission_wait", "plan_compile", "device_dispatch", "reveal",
+          "pack_overlap")
 
 # ---------------------------------------------------------------------------
 # svc.stats schema (pinned by tests/test_api.py)
 # ---------------------------------------------------------------------------
 
-SVC_STATS_VERSION = 1
+SVC_STATS_VERSION = 2
 # canonical nested shape of AggregationService.stats
 SVC_STATS_KEYS = ("schema", "sessions", "batches", "queue", "caches",
                   "resilience", "wire", "epoch", "metrics")
-# pre-PR-7 top-level keys, kept one release as silent aliases of the
-# nested values (same objects — documented-deprecated, no warning: the
-# api-lane runs tier-1 under -W error::DeprecationWarning)
-SVC_STATS_DEPRECATED = ("sessions_opened", "sessions_run", "batches_run",
-                        "pending", "batch_sizes", "executor_cache",
-                        "plan_cache", "failed_sessions")
+# The pre-PR-7 flat top-level aliases ("sessions_run", "batch_sizes",
+# ...) were kept one release and removed in PR 8 (schema version 2):
+# read the nested keys instead (st["sessions"]["run"], ...).
+SVC_STATS_DEPRECATED: tuple = ()
 
 
 # ---------------------------------------------------------------------------

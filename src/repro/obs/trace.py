@@ -109,6 +109,28 @@ def _mask_population(masks: dict) -> dict:
     return {mode: int(m.sum()) for mode, m in masks.items()}
 
 
+# Per-(plan cfg, padded) round-event payload skeleton: the per-round
+# ``hop_wire_words`` splits are static per plan/padded-length, so they
+# are computed ONCE here instead of once per hop per executed batch —
+# the recorder hot path then only scales by the row count.  Keyed by
+# the (hashable, frozen) AggConfig — the same identity ``compile_plan``
+# memoizes plans under — plus the padded length; bounded like the plan
+# cache.
+_ROUND_WORDS_CACHE: dict = {}
+
+
+def _round_words(plan: AggPlan, padded: int) -> list:
+    key = (plan.cfg, padded)
+    rows = _ROUND_WORDS_CACHE.get(key)
+    if rows is None:
+        rows = [hop_wire_words(plan.cfg, rnd, padded)
+                for rnd in plan.rounds]
+        if len(_ROUND_WORDS_CACHE) > 256:
+            _ROUND_WORDS_CACHE.clear()
+        _ROUND_WORDS_CACHE[key] = rows
+    return rows
+
+
 def record_batch_trace(rec: TraceRecorder, plan: AggPlan, *, padded: int,
                        rows: int, masks: dict, unit: int, attempt: int,
                        backend: str, sids: tuple, fresh: bool) -> None:
@@ -133,13 +155,16 @@ def record_batch_trace(rec: TraceRecorder, plan: AggPlan, *, padded: int,
               sids=list(sids), rows=rows, padded=padded,
               schedule=cfg.schedule, transport=cfg.transport,
               bytes=total, rounds=len(plan.rounds), fresh=fresh)
-    parsed = [(mode, parse_mode(mode), m) for mode, m in masks.items()]
+    # mask populations are constant across rounds: sum each mode once
+    parsed = [(mode, parse_mode(mode), int(m.sum()))
+              for mode, m in masks.items()]
+    words = _round_words(plan, padded)   # static per (plan, padded)
     for ri, rnd in enumerate(plan.rounds):
-        w = hop_wire_words(cfg, rnd, padded)
-        active = {mode: int(m.sum()) for mode, (base, frm), m in parsed
+        w = words[ri]
+        active = {mode: pop for mode, (base, frm), pop in parsed
                   if ri >= frm}
         mismatches = sum(
-            int(m.sum()) for mode, (base, frm), m in parsed
+            pop for mode, (base, frm), pop in parsed
             if ri >= frm and base in ("mismatch", "equivocate"))
         rec.event("round", unit=unit, attempt=attempt, round=ri,
                   payload_bytes=4 * w["payload"] * rows,

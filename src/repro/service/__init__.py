@@ -28,7 +28,7 @@ from repro.core.plan import plan_cache_stats
 from repro.runtime.resilience import CircuitBreaker, RetryPolicy
 from repro.service.epochs import EpochManager, EpochSnapshot
 from repro.service.executor import (AdmissionQueue, BatchedExecutor,
-                                    BatchingConfig)
+                                    BatchingConfig, StreamConfig)
 from repro.service.session import (LifecycleError, Session, SessionParams,
                                    SessionState, derive_session_seed)
 
@@ -36,7 +36,7 @@ __all__ = [
     "AdmissionQueue", "AggregationService", "BatchedExecutor",
     "BatchingConfig", "CircuitBreaker", "EpochManager", "EpochSnapshot",
     "LifecycleError", "RetryPolicy", "Session", "SessionParams",
-    "SessionState", "derive_session_seed",
+    "SessionState", "StreamConfig", "derive_session_seed",
 ]
 
 
@@ -59,7 +59,8 @@ class AggregationService:
                  dp_axes: Sequence[str] = ("data",),
                  retry: Optional[RetryPolicy] = None,
                  breaker: Optional[CircuitBreaker] = None,
-                 chaos=None, metrics=None, recorder=None):
+                 chaos=None, metrics=None, recorder=None,
+                 stream: Optional[StreamConfig] = None):
         if epochs is not None:
             snap = epochs.current()
             assert snap.n_nodes == default_params.n_nodes, \
@@ -71,7 +72,8 @@ class AggregationService:
                                         transport=transport, mesh=mesh,
                                         dp_axes=dp_axes, retry=retry,
                                         breaker=breaker, chaos=chaos,
-                                        metrics=metrics, recorder=recorder)
+                                        metrics=metrics, recorder=recorder,
+                                        stream=stream)
         self.queue = AdmissionQueue(self.executor, batching,
                                     pre_execute=self._merge_epoch_faults)
         self._sessions: dict[int, Session] = {}
@@ -188,9 +190,9 @@ class AggregationService:
           * ``metrics``  — the raw registry snapshot;
           * ``schema``   — this schema's version.
 
-        The pre-PR-7 top-level keys (``SVC_STATS_DEPRECATED``) remain
-        one release as aliases of the nested values — same objects, no
-        warning (documented-deprecated only)."""
+        Schema version 2: the pre-PR-7 flat top-level aliases
+        (``sessions_run``, ``batch_sizes``, ...) served their one
+        deprecation release and are gone — read the nested keys."""
         from repro.obs.metrics import SVC_STATS_VERSION
         queue = self.queue.metrics
         caches = {"executor": self.executor.cache_stats,
@@ -215,14 +217,5 @@ class AggregationService:
             "epoch": (self.epochs.current().epoch
                       if self.epochs is not None else None),
             "metrics": self.metrics.snapshot(),
-            # deprecated aliases (SVC_STATS_DEPRECATED) — one release
-            "sessions_opened": sessions["opened"],
-            "sessions_run": sessions["run"],
-            "batches_run": batches["run"],
-            "pending": sessions["pending"],
-            "batch_sizes": batches["sizes"],
-            "executor_cache": caches["executor"],
-            "plan_cache": caches["plan"],
-            "failed_sessions": sessions["failed"],
         }
         return out

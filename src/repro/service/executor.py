@@ -20,6 +20,20 @@ stream — is a protocol parameter and rides in ``SessionParams.transport``
 Every protocol stage is ONE batched kernel dispatch over all S rows,
 and all masking modes run batched (pairwise pads are fused in-kernel).
 
+Dispatch is a *streaming pipeline* (:class:`StreamConfig`): up to
+``depth`` batch slots are in flight at once — ``execute_async`` packs
+and issues a slot without blocking on the device result (JAX async
+dispatch), so packing batch k+1 overlaps the device aggregating batch
+k, and the host sync moves to slot *settlement* (the next issue once
+the ring is full, or ``flush()``).  Off-CPU backends donate the packed
+slot buffer to the executable (``donate_argnums``), which is why the
+slots are double-buffered: the slot being packed is never the one the
+device owns.  An executable-cache miss warms in the background (AOT
+``lower().compile()`` on a worker thread) while traffic keeps flowing
+on an already-compiled larger-S shape bucket — bit-identical for the
+real rows because batch rows are independent sessions.  ``depth=1``
+reproduces the historical sequential dispatch exactly.
+
 Long payloads chunk across batch *rows*: a session whose payload
 exceeds ``BatchingConfig.max_row_elems`` contributes several (n, T_row)
 rows whose pad-stream counter offsets continue where the previous row
@@ -68,6 +82,8 @@ zero-contribution elements that are sliced off at reveal.
 """
 from __future__ import annotations
 
+import collections
+import concurrent.futures
 import dataclasses
 import time
 from typing import Callable, Optional, Sequence
@@ -76,7 +92,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import (MeshTransport, SimTransport, execute_chunks)
+from repro.core.engine import (MeshTransport, SimTransport,
+                               build_batch_executable, execute_chunks)
 from repro.core.plan import (SessionMeta, compile_plan, fault_masks_of,
                              _require)
 from repro.obs import metrics as M
@@ -125,6 +142,57 @@ class BatchingConfig:
         return self.padded_elems(elems), 1
 
 
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Streaming-pipeline knobs of :class:`BatchedExecutor`.
+
+    ``depth`` is the number of in-flight batch slots: 1 reproduces the
+    historical fully-sequential dispatch; 2 double-buffers (pack slot
+    k+1 while the device aggregates slot k — JAX async dispatch defers
+    the host sync to reveal time).  ``donate`` donates the packed
+    ``(S, n, T)`` slot buffer to the executable
+    (``jax.jit(donate_argnums=(0,))``); ``None`` auto-enables it off
+    the CPU backend, where XLA ignores donation (with a UserWarning).
+    ``async_compile`` makes an executable-cache miss warm in the
+    background (AOT ``lower().compile()`` on a worker thread) while
+    traffic keeps flowing on an already-compiled larger-S shape bucket
+    — rows pad with zero-contribution dummies, which is bit-identical
+    for the real rows because batch rows are independent sessions."""
+
+    depth: int = 2
+    donate: Optional[bool] = None
+    async_compile: bool = True
+
+    def resolve_donate(self) -> bool:
+        if self.donate is None:
+            return jax.default_backend() != "cpu"
+        return self.donate
+
+
+class _Slot:
+    """One in-flight streaming dispatch: the device result future plus
+    everything the deferred completion (reveal / account / retry) needs."""
+
+    __slots__ = ("sessions", "padded", "unit", "backend", "degraded",
+                 "revealed", "owner", "fresh", "rows", "masks",
+                 "t_issue", "error", "buf")
+
+    def __init__(self, sessions, padded, unit, backend, degraded):
+        self.sessions = sessions
+        self.padded = padded
+        self.unit = unit
+        self.backend = backend
+        self.degraded = degraded
+        self.revealed = None          # device array until _settle syncs
+        self.owner = None
+        self.fresh = False
+        self.rows = 0
+        self.masks = {}
+        self.t_issue = 0.0
+        self.error: Optional[Exception] = None
+        self.buf = None               # pack buffer, recycled at settle
+
+
 class BatchedExecutor:
     """Runs batches of sealed sessions through one engine execution.
 
@@ -144,7 +212,8 @@ class BatchedExecutor:
                  breaker: Optional[CircuitBreaker] = None,
                  chaos=None,
                  metrics: Optional[M.MetricsRegistry] = None,
-                 recorder: Optional[TraceRecorder] = None):
+                 recorder: Optional[TraceRecorder] = None,
+                 stream: Optional[StreamConfig] = None):
         _require(transport in ("sim", "mesh"),
                  f"unknown executor transport {transport!r}; pick 'sim' "
                  "(single-device oracle) or 'mesh' (shard_map over a dp "
@@ -165,7 +234,20 @@ class BatchedExecutor:
         if chaos is not None and isinstance(chaos, ChaosConfig):
             chaos = ChaosSchedule(chaos)
         self.chaos: Optional[ChaosSchedule] = chaos
+        self.stream = stream if stream is not None else StreamConfig()
+        self._donate = self.stream.resolve_donate()
         self._fns: dict = {}
+        # streaming pipeline state: in-flight slots (issued, not yet
+        # settled), unit errors deferred to flush(), and the background
+        # AOT warm pool (lazily built on the first bucketed miss)
+        self._ring: collections.deque = collections.deque()
+        self._errors: list[Exception] = []
+        self._warming: dict = {}
+        self._pool: Optional[concurrent.futures.ThreadPoolExecutor] = None
+        # recycled host pack buffers, keyed by (rows, n, padded): a
+        # settled slot's buffer is refilled in place instead of
+        # re-faulting megabytes of fresh pages every batch
+        self._buf_pool: dict = {}
         # every counter lives on the metrics registry (one source of
         # truth obs.export can render); the legacy attribute names stay
         # as read-only properties.  A private registry by default —
@@ -182,6 +264,8 @@ class BatchedExecutor:
         self._c_sessions = m.counter(M.M_SESSIONS)
         self._c_fn_hits = m.counter(M.M_FN_HITS)
         self._c_fn_misses = m.counter(M.M_FN_MISSES)
+        self._c_fn_bucket = m.counter(M.M_FN_BUCKET_HITS)
+        self._g_depth = m.gauge(M.G_PIPELINE_DEPTH)
         self._c_retries = m.counter(M.M_RETRIES)
         self._c_bisections = m.counter(M.M_BISECTIONS)
         self._c_quarantined = m.counter(M.M_QUARANTINED)
@@ -254,6 +338,7 @@ class BatchedExecutor:
         """Compiled-executable cache account (plan compilation has its
         own shared memo — see ``core.plan.plan_cache_stats``)."""
         return {"hits": self.fn_cache_hits, "misses": self.fn_cache_misses,
+                "bucket_hits": self._c_fn_bucket.value,
                 "size": len(self._fns)}
 
     @property
@@ -272,60 +357,101 @@ class BatchedExecutor:
                         if self.breaker is not None else None),
         }
 
+    def _build_fn(self, template: Session, backend: str):
+        """The shared jitted batch executable (see
+        ``core.engine.build_batch_executable``) with the executor's
+        donation policy applied."""
+        plan = self._plan_of(template)
+        return build_batch_executable(
+            plan, backend=backend, mesh=self.mesh, dp_axes=self.dp_axes,
+            impl=self.kernel_impl, donate=self._donate)
+
+    def _drain_warmed(self) -> None:
+        """Promote finished background AOT compiles into the cache (a
+        failed warm is dropped — the next exact-shape miss recompiles
+        synchronously and surfaces the error on the dispatch path)."""
+        if not self._warming:
+            return
+        for key in [k for k, f in self._warming.items() if f.done()]:
+            fut = self._warming.pop(key)
+            try:
+                self._fns[key] = fut.result()
+            except Exception:
+                pass
+
+    def _warm_async(self, key, template: Session, padded: int, S: int,
+                    modes: frozenset, backend: str) -> None:
+        """Kick off an AOT ``lower().compile()`` of the exact shape on
+        the worker thread (XLA releases the GIL during the build, so the
+        pump loop keeps flowing on the bucket executable meanwhile)."""
+        if key in self._warming:
+            return
+        if self._pool is None:
+            self._pool = concurrent.futures.ThreadPoolExecutor(
+                max_workers=1)
+        fn = self._build_fn(template, backend)
+        n = template.params.n_nodes
+        f32, u32 = jnp.float32, jnp.uint32
+
+        def build():
+            return fn.lower(
+                jax.ShapeDtypeStruct((S, n, padded), f32),
+                jax.ShapeDtypeStruct((S,), u32),
+                jax.ShapeDtypeStruct((S,), u32),
+                {m: jax.ShapeDtypeStruct((S, n), jnp.bool_)
+                 for m in modes}).compile()
+
+        self._warming[key] = self._pool.submit(build)
+
     def _compiled(self, template: Session, padded: int, S: int,
-                  modes: frozenset, backend: str) -> tuple[Callable, bool]:
-        """(jitted fn, fresh) — ``fresh`` marks a cache miss, which the
-        stage timer attributes to ``plan_compile`` (jax.jit is lazy, so
-        the XLA build cost lands on the miss's first dispatch)."""
+                  modes: frozenset,
+                  backend: str) -> tuple[Callable, bool, int]:
+        """(executable, fresh, S_exec) — ``fresh`` marks a synchronous
+        cache miss, which the stage timer attributes to ``plan_compile``
+        (jax.jit is lazy, so the XLA build cost lands on the miss's
+        first dispatch).  ``S_exec >= S`` is the row count the returned
+        executable was compiled for: on a miss with ``async_compile``
+        the exact shape warms in the background and the dispatch runs
+        on the smallest already-compiled larger-S bucket (the caller
+        pads with dummy rows and slices the first S back out)."""
         # fault PATTERNS are runtime (S, n) masks, so churn/missing-slot
         # variation never retraces; only the set of fault MODES present
         # (<= 8 combinations) and the dispatch backend are part of the
         # executable's identity (the degrade ladder adds "sim" entries
         # next to a mesh executor's primaries)
-        key = (template.params.batch_key(padded), S, modes, backend)
+        bk = template.params.batch_key(padded)
+        key = (bk, S, modes, backend)
+        self._drain_warmed()
         fn = self._fns.get(key)
         if fn is not None:
             self._c_fn_hits.inc()
-            return fn, False
-        else:
-            self._c_fn_misses.inc()
-            cfg = template.params.agg_config(self.kernel_impl)
-            plan = compile_plan(cfg)
-            if backend == "mesh":
-                mt = MeshTransport(self.mesh, self.dp_axes,
-                                   impl=self.kernel_impl)
-
-                @jax.jit
-                def fn(xs, seeds, offsets, fault_masks):
-                    meta = SessionMeta(seeds=seeds, offsets=offsets,
-                                       fault_masks=fault_masks)
-                    return mt.execute(plan, xs, meta, reveal_only=True)
-            else:
-                @jax.jit
-                def fn(xs, seeds, offsets, fault_masks):
-                    meta = SessionMeta(seeds=seeds, offsets=offsets,
-                                       fault_masks=fault_masks)
-                    S_, n, T = xs.shape
-                    tp = SimTransport(plan, S=S_)
-                    flat = xs.reshape(S_ * n, T).astype(jnp.float32)
-                    (out,) = execute_chunks(plan, tp, [flat], meta,
-                                            reveal_only=True)
-                    return out
-
-            self._fns[key] = fn
-        return fn, True
+            return fn, False, S
+        self._c_fn_misses.inc()
+        if self.stream.async_compile and self.stream.depth > 1:
+            buckets = [k[1] for k in self._fns
+                       if k[0] == bk and k[2] == modes and k[3] == backend
+                       and k[1] > S]
+            if buckets:
+                self._c_fn_bucket.inc()
+                self._warm_async(key, template, padded, S, modes, backend)
+                S_exec = min(buckets)
+                return (self._fns[(bk, S_exec, modes, backend)],
+                        False, S_exec)
+        fn = self._build_fn(template, backend)
+        self._fns[key] = fn
+        return fn, True, S
 
     # -- one dispatch attempt ----------------------------------------------
-    def _attempt(self, sessions: Sequence[Session], padded: int,
-                 backend: str, fault: Optional[ChaosConfig],
-                 unit: int = 0, attempt: int = 1):
-        """Pack + dispatch one batch once; returns (revealed, owner)
-        WITHOUT touching session state (the caller reveals after the
-        deadline check, so a failed/too-slow attempt stays retriable).
-        A completed attempt books its stage span, its wire bytes, and
-        the batch/round flight-recorder events — all host-side, after
-        the ``np.asarray`` device sync, so the jitted program is
-        untouched."""
+    def _dispatch(self, sessions: Sequence[Session], padded: int,
+                  backend: str, fault: Optional[ChaosConfig]):
+        """Pack + issue one batch WITHOUT the host sync: returns
+        ``(revealed, owner, fresh, rows, masks)`` where ``revealed`` is
+        the (possibly still in-flight) device result of the first
+        ``rows`` real rows (bucketed dispatches pad with dummy rows —
+        the caller slices ``[:rows]`` after its ``np.asarray`` sync) and
+        ``masks`` are the real rows' fault masks (what the trace
+        records).  Session state is untouched, so a failed attempt
+        stays retriable."""
         if fault is not None and fault.mode == "dispatch":
             raise ChaosError(
                 f"chaos: injected dispatch failure "
@@ -333,43 +459,116 @@ class BatchedExecutor:
         if fault is not None and fault.mode == "slow":
             time.sleep(fault.slow_s)
         n_nodes = sessions[0].params.n_nodes
-        rows, seeds, offsets, owner = [], [], [], []
+        seeds, offsets, owner = [], [], []
         for i, s in enumerate(sessions):
-            for j, mat in enumerate(s.payload_rows(padded)):
-                rows.append(mat)
+            for j in range(s.n_rows(padded)):
                 seeds.append(s.seed)
                 offsets.append((s.pad_offset + j * padded) & _MASK32)
                 owner.append(i)
-        xs = np.stack(rows)                      # (R, n, padded)
+        R = len(owner)
         owner = np.asarray(owner)
         sess_masks = fault_masks_of(
             [s.fault.specs() for s in sessions], n_nodes)
         masks = {m: v[owner] for m, v in sess_masks.items()}  # per row
         if fault is not None and fault.mode == "compile":
             raise ChaosError("chaos: injected compile failure")
-        t0 = self._clock()
         if fault is not None and fault.mode == "hop":
             fresh = False                        # eager run, no jit cache
+            xs = np.stack([mat for s in sessions
+                           for mat in s.payload_rows(padded)])
             revealed = self._chaos_hop_run(sessions[0], xs, seeds, offsets,
                                            masks, backend, fault)
+            return revealed, owner, fresh, R, masks, None
+        fn, fresh, S_exec = self._compiled(sessions[0], padded, R,
+                                           frozenset(masks), backend)
+        # pack straight into a recycled (S_exec, n, padded) slot buffer
+        # — fill_payload_rows writes every byte of the real rows, so no
+        # pre-zeroing; the buffer returns to the pool once this batch
+        # settles (its executable is done reading the staged copy)
+        xs = self._buf_take((S_exec, n_nodes, padded))
+        r = 0
+        for s in sessions:
+            r += s.fill_payload_rows(xs, r, padded)
+        dm = masks
+        if S_exec > R:
+            # shape-bucket dispatch: dummy zero rows (zero payload, zero
+            # seed/offset, no faults) — batch rows are independent
+            # sessions, so the real rows' outputs are bit-identical and
+            # the dummies are sliced off after the sync
+            pad = S_exec - R
+            xs[R:] = 0.0
+            seeds = list(seeds) + [0] * pad
+            offsets = list(offsets) + [0] * pad
+            dm = {m: np.concatenate(
+                [v, np.zeros((pad, n_nodes), v.dtype)])
+                for m, v in masks.items()}
+        if backend == "mesh":
+            # stage the batch pre-sharded over the dp axes: device_put
+            # to the executable's input sharding is one strided copy,
+            # while handing jit a replicated/device-0 array makes XLA
+            # reshard inside the program (measurably slower on a
+            # thread-starved host)
+            from jax.sharding import NamedSharding, PartitionSpec
+            xs_dev = jax.device_put(xs, NamedSharding(
+                self.mesh, PartitionSpec(None, self.dp_axes, None)))
         else:
-            fn, fresh = self._compiled(sessions[0], padded, len(rows),
-                                       frozenset(masks), backend)
-            revealed = fn(
-                jnp.asarray(xs),
-                jnp.asarray(seeds, dtype=jnp.uint32),
-                jnp.asarray(offsets, dtype=jnp.uint32),
-                {k: jnp.asarray(v) for k, v in masks.items()})
-        revealed = np.asarray(revealed)          # host sync: span ends here
-        stage = "plan_compile" if fresh else "device_dispatch"
-        self._h_stage[stage].observe(self._clock() - t0)
+            xs_dev = jnp.asarray(xs)
+        revealed = fn(
+            xs_dev,
+            jnp.asarray(seeds, dtype=jnp.uint32),
+            jnp.asarray(offsets, dtype=jnp.uint32),
+            {k: jnp.asarray(v) for k, v in dm.items()})
+        return revealed, owner, fresh, R, masks, xs
+
+    def _buf_take(self, shape) -> np.ndarray:
+        """A pooled float32 pack buffer (fresh if the pool is dry)."""
+        pool = self._buf_pool.get(shape)
+        if pool:
+            return pool.pop()
+        return np.empty(shape, np.float32)
+
+    def _buf_give(self, buf) -> None:
+        """Return a settled slot's pack buffer to the pool.  Only
+        called after the batch's host sync — the staged device copy is
+        complete by then, so refilling the buffer cannot race the
+        executable.  The pool is capped per shape (depth + a retry's
+        worth of slack); overflow buffers just drop to the GC."""
+        if buf is not None:
+            pool = self._buf_pool.setdefault(buf.shape, [])
+            if len(pool) < max(self.stream.depth, 1) + 2:
+                pool.append(buf)
+
+    def _account(self, sessions: Sequence[Session], padded: int, rows: int,
+                 masks: dict, unit: int, attempt: int, backend: str,
+                 fresh: bool) -> None:
+        """Book one completed attempt's wire bytes and flight-recorder
+        events — all host-side, after the device sync, so the jitted
+        program is untouched.  The streaming path defers this to slot
+        settlement (the account describes an execution that finished)."""
         plan = self._plan_of(sessions[0])
-        self._c_wire.inc(plan.wire_bytes(padded, S=len(rows)))
+        self._c_wire.inc(plan.wire_bytes(padded, S=rows))
         if self.recorder is not None:
             record_batch_trace(
-                self.recorder, plan, padded=padded, rows=len(rows),
+                self.recorder, plan, padded=padded, rows=rows,
                 masks=masks, unit=unit, attempt=attempt, backend=backend,
                 sids=tuple(s.sid for s in sessions), fresh=fresh)
+
+    def _attempt(self, sessions: Sequence[Session], padded: int,
+                 backend: str, fault: Optional[ChaosConfig],
+                 unit: int = 0, attempt: int = 1):
+        """One SYNCHRONOUS dispatch: pack, execute, block, account.
+        Returns (revealed, owner) without touching session state (the
+        caller reveals after the deadline check, so a failed/too-slow
+        attempt stays retriable)."""
+        t0 = self._clock()
+        revealed, owner, fresh, R, masks, buf = self._dispatch(
+            sessions, padded, backend, fault)
+        revealed = np.asarray(revealed)[:R]      # host sync: span ends here
+        self._buf_give(buf)
+        stage = "plan_compile" if fresh else "device_dispatch"
+        self._h_stage[stage].observe(self._clock() - t0)
+        self._account(sessions, padded, R, masks, unit, attempt, backend,
+                      fresh)
         return revealed, owner
 
     def _chaos_hop_run(self, template: Session, xs, seeds, offsets, masks,
@@ -397,18 +596,27 @@ class BatchedExecutor:
         return out
 
     # -- retry / bisect / quarantine ladder ---------------------------------
-    def _run_unit(self, sessions: list[Session],
-                  padded: int) -> Optional[Exception]:
+    def _run_unit(self, sessions: list[Session], padded: int,
+                  start_attempt: int = 1,
+                  prior_error: Optional[Exception] = None,
+                  salt: Optional[int] = None) -> Optional[Exception]:
         """Drive one retry unit to a terminal state: every session ends
         REVEALED or FAILED (never AGGREGATING).  Returns the first
-        triggering error if any session was quarantined, else None."""
+        triggering error if any session was quarantined, else None.
+
+        The streaming path re-enters here after a slot's non-blocking
+        attempt 1 already failed at settlement: ``start_attempt=2``
+        continues the SAME unit (``salt`` keeps the backoff jitter and
+        trace unit id stable) with ``prior_error`` standing in as the
+        last error if the remaining budget is empty."""
         policy = self.retry
-        self._units += 1
-        salt = self._units
+        if salt is None:
+            self._units += 1
+            salt = self._units
         rec = self.recorder
         sids = tuple(s.sid for s in sessions)
-        last: Optional[Exception] = None
-        for attempt in range(1, policy.max_attempts + 1):
+        last: Optional[Exception] = prior_error
+        for attempt in range(start_attempt, policy.max_attempts + 1):
             backend = self.transport
             degraded = False
             if (self.breaker is not None and backend == "mesh"
@@ -515,6 +723,7 @@ class BatchedExecutor:
         sessions = list(sessions)
         for s in sessions:
             s.mark_aggregating()
+        self._g_depth.track_max(1.0)
         try:
             err = self._run_unit(sessions, padded)
         except BaseException:
@@ -527,6 +736,197 @@ class BatchedExecutor:
         if err is not None and all(s.state is SessionState.FAILED
                                    for s in sessions):
             raise err
+
+    # -- streaming pipeline (overlapped dispatch) ---------------------------
+    def execute_async(self, sessions: Sequence[Session],
+                      padded_elems: Optional[int] = None) -> None:
+        """Issue one batch into the streaming ring without blocking on
+        its device result.
+
+        Same batch-key/lifecycle contract as :meth:`execute`, but the
+        dispatch is only *issued* here (JAX async dispatch — the packed
+        slot goes to the device and the host returns immediately, timed
+        as the ``pack_overlap`` stage); the host sync, the reveal, and
+        the retry ladder run when the slot is settled — at the next
+        issue once the ring holds ``StreamConfig.depth`` slots, or at
+        :meth:`flush`.  Unit failures NEVER raise here: a failed slot
+        re-enters the retry -> bisect -> quarantine ladder at
+        settlement (after draining every other in-flight slot), and an
+        all-failed unit's error is deferred to the next :meth:`flush`."""
+        if not sessions:
+            return
+        padded = padded_elems or max(s.params.elems for s in sessions)
+        key0 = sessions[0].params.batch_key(padded)
+        _require(all(s.params.batch_key(padded) == key0 for s in sessions),
+                 "batch mixes incompatible sessions (distinct batch "
+                 "keys); group sessions per AdmissionQueue.submit key")
+        sessions = list(sessions)
+        for s in sessions:
+            s.mark_aggregating()
+        try:
+            while len(self._ring) >= max(self.stream.depth, 1):
+                self._flush_one()
+        except BaseException:
+            self._abort_ring()
+            for s in sessions:
+                if s.state is SessionState.AGGREGATING:
+                    s.fail("executor aborted mid-batch")
+            raise
+        self._ring.append(self._issue(sessions, padded))
+        self._g_depth.track_max(float(len(self._ring)))
+
+    def flush(self) -> None:
+        """Settle every in-flight streaming slot (reveal / retry /
+        quarantine), then re-raise the FIRST deferred all-failed unit
+        error — mirroring :meth:`execute`'s raise-only-when-no-session-
+        survived contract, shifted to the drain point."""
+        try:
+            while self._ring:
+                self._flush_one()
+        except BaseException:
+            self._abort_ring()
+            raise
+        if self._errors:
+            err = self._errors[0]
+            self._errors.clear()
+            raise err
+
+    def _abort_ring(self) -> None:
+        """Unexpected escape mid-drain: never leave ring sessions
+        wedged in AGGREGATING."""
+        while self._ring:
+            slot = self._ring.popleft()
+            for s in slot.sessions:
+                if s.state is SessionState.AGGREGATING:
+                    s.fail("executor aborted mid-batch")
+
+    def _issue(self, sessions: list, padded: int) -> _Slot:
+        """Attempt 1 of a new retry unit, issued without blocking: the
+        breaker/chaos decisions and the host-side pack + dispatch run
+        now (the ``pack_overlap`` span — overlapped with the previous
+        slot's device work), exceptions are captured on the slot."""
+        self._units += 1
+        salt = self._units
+        backend = self.transport
+        degraded = False
+        if (self.breaker is not None and backend == "mesh"
+                and not self.breaker.allow_primary()):
+            backend, degraded = "sim", True
+        fault = (self.chaos.decide(sessions, backend)
+                 if self.chaos is not None else None)
+        rec = self.recorder
+        if fault is not None and rec is not None:
+            rec.event("chaos", unit=salt, attempt=1, mode=fault.mode,
+                      backend=backend, sids=[s.sid for s in sessions])
+        slot = _Slot(sessions, padded, salt, backend, degraded)
+        slot.t_issue = time.monotonic()
+        t0 = self._clock()
+        try:
+            (slot.revealed, slot.owner, slot.fresh, slot.rows,
+             slot.masks, slot.buf) = self._dispatch(sessions, padded,
+                                                    backend, fault)
+        except Exception as e:
+            slot.error = e
+        self._h_stage["pack_overlap"].observe(self._clock() - t0)
+        return slot
+
+    def _settle(self, slot: _Slot) -> Optional[Exception]:
+        """Complete one issued slot: host sync (the streaming
+        ``device_dispatch`` span is just this blocking wait), deadline
+        check, account, breaker feed, reveal.  Returns the attempt's
+        error instead of raising (the caller owns the drain-then-retry
+        ordering); session state is only touched on success."""
+        policy = self.retry
+        rec = self.recorder
+        try:
+            if slot.error is not None:
+                raise slot.error
+            t0 = self._clock()
+            revealed = np.asarray(slot.revealed)[:slot.rows]  # host sync
+            self._buf_give(slot.buf)
+            slot.buf = None
+            stage = "plan_compile" if slot.fresh else "device_dispatch"
+            self._h_stage[stage].observe(self._clock() - t0)
+            if (policy.deadline_s is not None
+                    and time.monotonic() - slot.t_issue
+                    > policy.deadline_s):
+                self._c_deadline.inc()
+                raise DeadlineExceeded(
+                    f"batch attempt exceeded the "
+                    f"{policy.deadline_s}s deadline")
+        except Exception as e:
+            self._record_breaker(rec, slot.backend, failed=True)
+            return e
+        self._account(slot.sessions, slot.padded, slot.rows, slot.masks,
+                      slot.unit, 1, slot.backend, slot.fresh)
+        self._record_breaker(rec, slot.backend, failed=False)
+        if slot.degraded:
+            self._c_degraded.inc()
+            if rec is not None:
+                rec.event("degrade", unit=slot.unit, attempt=1,
+                          sids=[s.sid for s in slot.sessions])
+        t1 = self._clock()
+        for i, s in enumerate(slot.sessions):
+            s.reveal(revealed[slot.owner == i].reshape(-1))
+        self._h_stage["reveal"].observe(self._clock() - t1)
+        self._c_batches.inc()
+        self._c_sessions.inc(len(slot.sessions))
+        return None
+
+    def _retry_continuation(self, slot: _Slot,
+                            e: Exception) -> Optional[Exception]:
+        """Re-enter the retry ladder for a slot whose non-blocking
+        attempt 1 failed: book the retry (same unit id, same jitter
+        salt as a sequential attempt-1 failure would), then continue
+        the unit synchronously from attempt 2."""
+        policy = self.retry
+        rec = self.recorder
+        if policy.max_attempts > 1:
+            self._c_retries.inc()
+            delay = policy.backoff_s(1, salt=slot.unit)
+            if rec is not None:
+                rec.event("retry", unit=slot.unit, attempt=1,
+                          backend=slot.backend, delay=delay,
+                          error=repr(e)[:200])
+            if delay > 0:
+                policy.sleep(delay)
+        return self._run_unit(slot.sessions, slot.padded,
+                              start_attempt=2, prior_error=e,
+                              salt=slot.unit)
+
+    def _flush_one(self) -> None:
+        """Settle the oldest in-flight slot.  On failure, FIRST drain
+        every other in-flight slot (the retry/bisect ladder re-dispatches
+        synchronously — no donated buffer or device queue state may be
+        shared with still-in-flight work), then run the failed slots'
+        retry continuations in issue order."""
+        pending = [self._ring.popleft()]
+        try:
+            err = self._settle(pending[0])
+            if err is None:
+                return
+            failures = [(pending[0], err)]
+            while self._ring:        # drain in-flight before re-dispatch
+                nxt = self._ring.popleft()
+                pending.append(nxt)
+                e2 = self._settle(nxt)
+                if e2 is None:
+                    pending.remove(nxt)
+                else:
+                    failures.append((nxt, e2))
+            for sl, e in failures:
+                unit_err = self._retry_continuation(sl, e)
+                pending.remove(sl)
+                if unit_err is not None and all(
+                        s.state is SessionState.FAILED
+                        for s in sl.sessions):
+                    self._errors.append(unit_err)
+        except BaseException:
+            for sl in pending:
+                for s in sl.sessions:
+                    if s.state is SessionState.AGGREGATING:
+                        s.fail("executor aborted mid-batch")
+            raise
 
 
 class AdmissionQueue:
@@ -687,7 +1087,12 @@ class AdmissionQueue:
                                 rows=self._rows(key, batch))
         if self.pre_execute is not None:
             self.pre_execute(batch)
-        self.executor.execute(batch, padded_elems=key[-1])
+        if self.executor.stream.depth > 1:
+            # streaming: issue without blocking; pump() drains the ring
+            # (and re-raises deferred unit errors) after its key sweep
+            self.executor.execute_async(batch, padded_elems=key[-1])
+        else:
+            self.executor.execute(batch, padded_elems=key[-1])
         self.batch_sizes.append(len(batch))
         if len(self.batch_sizes) > 4096:   # bounded history
             del self.batch_sizes[:-2048]
@@ -750,6 +1155,16 @@ class AdmissionQueue:
                 q = self._pending.get(key, [])
             if not q:
                 self._pending.pop(key, None)
+        # drain the streaming ring: every issued batch settles (reveal /
+        # retry / quarantine) before pump returns, so callers still see
+        # only terminal sessions after a pump — a deferred all-failed
+        # unit error joins the per-key errors under the same
+        # first-error-wins contract
+        try:
+            self.executor.flush()
+        except Exception as e:
+            if first_err is None:
+                first_err = e
         if first_err is not None:
             raise first_err
         return ran

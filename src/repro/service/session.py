@@ -207,6 +207,33 @@ class Session:
         return [full[:, j * row_elems:(j + 1) * row_elems]
                 for j in range(k)]
 
+    def fill_payload_rows(self, out: np.ndarray, start: int,
+                          row_elems: int) -> int:
+        """Write this session's payload rows into
+        ``out[start:start + k]`` ((·, n_nodes, row_elems) float32) in
+        place — same values as :meth:`payload_rows`, no intermediate
+        (n_nodes, padded) allocation.  Every byte of the target rows is
+        written (missing slots and the pad tail are zero-filled), so
+        the caller may hand over a recycled batch-slot buffer without
+        pre-zeroing it.  Returns ``k``, the rows consumed."""
+        self._require(SessionState.SEALED, SessionState.AGGREGATING)
+        k = self.n_rows(row_elems)
+        e = self.params.elems
+        for slot in range(self.params.n_nodes):
+            vec = self._contrib.get(slot)
+            for j in range(k):
+                row = out[start + j, slot]
+                if vec is None:
+                    row[:] = 0
+                    continue
+                lo = j * row_elems
+                n = min(e, lo + row_elems) - lo
+                if n > 0:
+                    row[:n] = vec[lo:lo + n]
+                if n < row_elems:
+                    row[max(n, 0):] = 0
+        return k
+
     def mark_aggregating(self) -> None:
         self._require(SessionState.SEALED)
         self.state = SessionState.AGGREGATING

@@ -63,8 +63,9 @@ def test_facade_signatures_are_pinned():
                     "wire: 'Optional[Wire]' = None, "
                     "runtime: 'Optional[Runtime]' = None, "
                     "batching=None, epochs=None, retry=None, breaker=None, "
-                    "chaos=None, metrics=None, recorder=None)",
+                    "chaos=None, metrics=None, recorder=None, stream=None)",
         "allreduce": "(self, tree)",
+        "allreduce_batched": "(self, xs)",
         "open_session": "(self, elems: 'int', *, params=None, now=None, "
                         "ttl=None)",
         "seal": "(self, sid: 'int', now=None) -> 'None'",
@@ -227,6 +228,37 @@ def test_facade_pytree_payload_matches_flat():
         agg.allreduce(jnp.zeros((n + 1, 8), jnp.float32))
 
 
+def test_allreduce_batched_rows_match_single_allreduce():
+    """The facade's batched one-shot: each of the S rows reveals
+    bit-identical to ``allreduce`` of that row alone, trailing axes
+    flatten/unflatten, a repeat call hits the shared executable cache,
+    and the bad-shape / manual-backend negatives raise ConfigError."""
+    n, T, S = 16, 48, 5
+    cfg = AggConfig(n_nodes=n, cluster_size=4, redundancy=3, clip=2.0)
+    xs = (RNG.normal(size=(S, n, T)) * 0.2).astype(np.float32)
+    agg = SecureAggregator(cfg)
+    got = np.asarray(agg.allreduce_batched(xs))
+    assert got.shape == (S, T)
+    for i in range(S):
+        # allreduce replicates the revealed aggregate per node (n, T);
+        # the batched one-shot returns it once per session (S, T)
+        assert np.array_equal(got[i], np.asarray(agg.allreduce(xs[i]))[0]), i
+    # trailing axes flatten to T per node and unflatten on the way out
+    shaped = np.asarray(agg.allreduce_batched(xs.reshape(S, n, 8, 6)))
+    assert shaped.shape == (S, 8, 6)
+    assert np.array_equal(shaped.reshape(S, T), got)
+    misses = agg.stats()["fn_cache"]["misses"]
+    assert np.array_equal(np.asarray(agg.allreduce_batched(xs)), got)
+    assert agg.stats()["fn_cache"]["misses"] == misses  # cached repeat
+    assert np.asarray(agg.allreduce_batched(
+        np.zeros((0, n, T), np.float32))).shape == (0, T)
+    with pytest.raises(ConfigError, match="per-node"):
+        agg.allreduce_batched(np.zeros((S, n + 1, T), np.float32))
+    with pytest.raises(ConfigError, match="manual"):
+        SecureAggregator(cfg, runtime=Runtime(backend="manual")) \
+            .allreduce_batched(xs)
+
+
 def test_shared_plan_cache_across_facades_and_executor():
     """Two facades + the service executor over the same config compile
     ONE plan (the module-wide memo) — repeated shapes never recompile."""
@@ -296,14 +328,15 @@ def test_facade_sessions_match_direct_service():
     expect = vals.sum(1)
     expect[1] -= vals[1, 2]
     assert np.abs(got - expect).max() < 1e-3
-    assert agg.stats()["service"]["sessions_run"] == S
+    assert agg.stats()["service"]["sessions"]["run"] == S
     assert agg.service is not None
 
 
 def test_service_stats_schema_snapshot_is_pinned():
     """The one documented ``svc.stats`` shape (obs.metrics schema
-    constants): canonical nested keys + the deprecated top-level
-    aliases, kept one release with byte-identical values."""
+    constants): schema v2 — the canonical nested keys only (the flat
+    pre-PR-7 aliases served their one deprecation release and are
+    gone)."""
     from repro.obs import (SVC_STATS_DEPRECATED, SVC_STATS_KEYS,
                            SVC_STATS_VERSION)
     n, elems, S = 8, 20, 2
@@ -321,24 +354,12 @@ def test_service_stats_schema_snapshot_is_pinned():
     assert SVC_STATS_KEYS == ("schema", "sessions", "batches", "queue",
                               "caches", "resilience", "wire", "epoch",
                               "metrics")
-    assert SVC_STATS_DEPRECATED == (
-        "sessions_opened", "sessions_run", "batches_run", "pending",
-        "batch_sizes", "executor_cache", "plan_cache", "failed_sessions")
-    assert set(st) == set(SVC_STATS_KEYS) | set(SVC_STATS_DEPRECATED)
-    assert st["schema"] == SVC_STATS_VERSION == 1
+    assert SVC_STATS_DEPRECATED == ()
+    assert set(st) == set(SVC_STATS_KEYS)
+    assert st["schema"] == SVC_STATS_VERSION == 2
     assert st["sessions"] == {"opened": S, "run": S, "failed": 0,
                               "pending": 0}
     assert st["batches"]["run"] == 1
-    nested = {"sessions_opened": st["sessions"]["opened"],
-              "sessions_run": st["sessions"]["run"],
-              "batches_run": st["batches"]["run"],
-              "pending": st["sessions"]["pending"],
-              "batch_sizes": st["batches"]["sizes"],
-              "executor_cache": st["caches"]["executor"],
-              "plan_cache": st["caches"]["plan"],
-              "failed_sessions": st["sessions"]["failed"]}
-    for alias, want in nested.items():
-        assert st[alias] == want, alias
     # facade stats expose the shared registry snapshot
     assert set(agg.stats()["metrics"]) == {"counters", "gauges",
                                            "histograms"}
@@ -414,6 +435,15 @@ for transport in ("full", "digest"):
             (transport, masking)
         assert np.abs(np.asarray(dist)[0] - xs.sum(0)).max() < 1e-3
 print("FACADE MESH==SIM")
+
+# batched one-shot on the mesh == the sim rows, bit for bit
+cfg = AggConfig(n_nodes=n, cluster_size=4, redundancy=3, clip=2.0)
+xb = (rng.normal(size=(3, n, T)) * 0.2).astype(np.float32)
+sim_b = SecureAggregator(cfg).allreduce_batched(xb)
+dist_b = SecureAggregator(
+    cfg, runtime=Runtime(backend="mesh", mesh=mesh)).allreduce_batched(xb)
+assert np.array_equal(np.asarray(sim_b), np.asarray(dist_b))
+print("FACADE BATCHED MESH==SIM")
 """
 
 
@@ -427,3 +457,4 @@ def test_facade_mesh_backend_bit_identical_to_sim_8dev():
                        capture_output=True, text=True, timeout=900)
     assert r.returncode == 0, r.stdout[-4000:] + r.stderr[-4000:]
     assert "FACADE MESH==SIM" in r.stdout
+    assert "FACADE BATCHED MESH==SIM" in r.stdout

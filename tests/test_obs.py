@@ -281,22 +281,16 @@ def test_svc_stats_schema_and_aliases():
     svc.drain()
     st = svc.stats
     assert st["schema"] == SVC_STATS_VERSION
-    assert set(SVC_STATS_KEYS) | set(SVC_STATS_DEPRECATED) == set(st)
+    # schema v2: the flat pre-PR-7 aliases are gone — the nested keys
+    # ARE the stats surface
+    assert SVC_STATS_DEPRECATED == ()
+    assert set(st) == set(SVC_STATS_KEYS)
     assert st["sessions"] == {"opened": 2, "run": 2, "failed": 0,
                               "pending": 0}
     assert st["batches"] == {"run": 1, "sizes": (2,)}
     assert set(st["caches"]) == {"executor", "plan"}
     assert st["wire"]["bytes_sent"] == svc.executor.wire_bytes > 0
     assert set(st["metrics"]) == {"counters", "gauges", "histograms"}
-    # every deprecated top-level key aliases its nested value exactly
-    assert st["sessions_opened"] == st["sessions"]["opened"]
-    assert st["sessions_run"] == st["sessions"]["run"]
-    assert st["failed_sessions"] == st["sessions"]["failed"]
-    assert st["pending"] == st["sessions"]["pending"]
-    assert st["batches_run"] == st["batches"]["run"]
-    assert st["batch_sizes"] == st["batches"]["sizes"]
-    assert st["executor_cache"] == st["caches"]["executor"]
-    assert st["plan_cache"] == st["caches"]["plan"]
 
 
 # ---------------------------------------------------------------------------

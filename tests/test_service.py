@@ -14,7 +14,9 @@ from repro.core.plan import AggConfig
 from repro.runtime.fault import FaultPlanError, SessionFaultPlan
 from repro.runtime.resilience import RetryPolicy
 from repro.service import (AggregationService, BatchingConfig, EpochManager,
-                           LifecycleError, SessionParams, SessionState)
+                           LifecycleError, SessionParams, SessionState,
+                           StreamConfig)
+from repro.service.session import Session, derive_session_seed
 
 RNG = np.random.default_rng(11)
 
@@ -158,7 +160,7 @@ def test_size_watermark_flushes_full_batches():
         _params(), batching=BatchingConfig(max_batch=4, max_age=1e9))
     sessions = [_fill(svc) for _ in range(10)]
     assert svc.pump(now=0.0) == 8          # two full batches of 4
-    assert svc.stats["batch_sizes"] == (4, 4)
+    assert svc.stats["batches"]["sizes"] == (4, 4)
     assert svc.queue.depth() == 2
     assert sessions[7].state is SessionState.REVEALED
     assert sessions[8].state is SessionState.SEALED
@@ -171,7 +173,7 @@ def test_age_watermark_flushes_partial_batches():
     _fill(svc, now=2.0)
     assert svc.pump(now=3.0) == 0          # young partial batch waits
     assert svc.pump(now=5.0) == 2          # oldest aged out: flush both
-    assert svc.stats["batch_sizes"] == (2,)
+    assert svc.stats["batches"]["sizes"] == (2,)
 
 
 def test_incompatible_sessions_never_share_a_batch():
@@ -184,7 +186,7 @@ def test_incompatible_sessions_never_share_a_batch():
         other.contribute(slot, np.full(16, 0.5, np.float32))
     svc.seal(other.sid)
     assert svc.pump(force=True) == 2
-    assert sorted(svc.stats["batch_sizes"]) == [1, 1]  # two separate batches
+    assert sorted(svc.stats["batches"]["sizes"]) == [1, 1]  # two separate batches
 
 
 def test_pad_bucket_rounds_up_payload_length():
@@ -254,7 +256,7 @@ def test_executor_failure_fails_batch_not_wedges(monkeypatch):
     assert res["quarantined"] == 1
     assert res["dead_letter"] == ((s.sid, repr(RuntimeError(
         "injected executor failure"))),)
-    assert svc.stats["failed_sessions"] == 1
+    assert svc.stats["sessions"]["failed"] == 1
     svc.evict(s.sid)
 
 
@@ -288,6 +290,101 @@ def test_fault_patterns_share_one_compiled_executable():
         want = vals.sum(0) - vals[victim]
         assert np.allclose(s.result, want, atol=1e-4)
     assert len(svc.executor._fns) == 1
+
+
+# ---------------------------------------------------------------------------
+# Streaming pipeline: overlapped dispatch == sequential, bucket fallback
+# ---------------------------------------------------------------------------
+
+
+def _batch_vals(S, n=8, elems=16):
+    return RNG.normal(size=(S, n, elems)).astype(np.float32) * 0.3
+
+
+def _run_stream(vals, depth, **kw):
+    """S sessions (fresh service => sids 0..S-1, so runs at different
+    depths share pad keys) through max_batch=4 groups at ``depth``."""
+    S, n, elems = vals.shape
+    svc = AggregationService(
+        SessionParams(n_nodes=n, elems=elems, cluster_size=4, redundancy=3),
+        batching=BatchingConfig(max_batch=4, max_age=1e9),
+        stream=StreamConfig(depth=depth), **kw)
+    sessions = []
+    for i in range(S):
+        s = svc.open(now=0.0)
+        for slot in range(n):
+            s.contribute(slot, vals[i, slot])
+        svc.seal(s.sid, now=0.0)
+        sessions.append(s)
+    assert svc.pump(force=True) == S
+    return svc, np.stack([s.result for s in sessions])
+
+
+def test_streaming_depths_bit_identical_to_sequential():
+    """The overlapped ring is a scheduling change only: depths 2 and 3
+    reveal bit-identical to the depth-1 sequential dispatch, and the
+    pipeline-depth watermark proves batches really overlapped."""
+    vals = _batch_vals(S=12)               # three batches of 4
+    _, ref = _run_stream(vals, depth=1)
+    for depth in (2, 3):
+        svc, got = _run_stream(vals, depth=depth)
+        assert np.array_equal(got, ref), depth
+        g = svc.metrics.snapshot()["gauges"]["executor.pipeline_depth"]
+        assert g == float(depth)
+
+
+def test_shape_bucket_fallback_pads_rows_bit_identical():
+    """An exact-shape executable miss with ``async_compile`` dispatches
+    on the smallest already-compiled larger-S bucket (dummy zero rows,
+    sliced off after the sync) while the exact shape warms in the
+    background — the real rows are bit-identical to the sequential
+    run, and the warmed executable is promoted into the cache."""
+    vals = _batch_vals(S=7)
+    _, ref = _run_stream(vals, depth=1)    # batches of 4 and 3 rows
+    svc, got = _run_stream(vals[:4], depth=2)      # warm the S=4 shape
+    assert np.array_equal(got, ref[:4])
+    ex = svc.executor
+    assert ex.cache_stats["bucket_hits"] == 0
+
+    # a 3-session batch now misses the exact shape but finds the S=4
+    # bucket; dummy-row padding must not perturb the real rows
+    sessions = []
+    for i in range(4, 7):
+        s = svc.open(now=0.0)
+        for slot in range(8):
+            s.contribute(slot, vals[i, slot])
+        svc.seal(s.sid, now=0.0)
+        sessions.append(s)
+    assert svc.pump(force=True) == 3
+    assert np.array_equal(np.stack([s.result for s in sessions]), ref[4:])
+    assert ex.cache_stats["bucket_hits"] == 1
+    for f in list(ex._warming.values()):   # let the background AOT land
+        f.result(timeout=60)
+    ex._drain_warmed()
+    assert any(k[1] == 3 for k in ex._fns), "exact shape never promoted"
+    snap = svc.metrics.snapshot()["counters"]
+    assert snap["executor.fn_cache.bucket_hits"] == 1
+
+
+def test_fill_payload_rows_matches_payload_rows():
+    """The in-place pack path covers every byte: equal to the
+    allocating ``payload_rows`` even over a dirty recycled buffer, with
+    missing slots and the chunked pad tail zero-filled."""
+    params = SessionParams(n_nodes=8, elems=40, cluster_size=4,
+                           redundancy=3)
+    s = Session(3, params, derive_session_seed(9, 3))
+    vals = RNG.normal(size=(8, 40)).astype(np.float32)
+    for slot in range(8):
+        if slot != 5:                      # one missing slot
+            s.contribute(slot, vals[slot])
+    s.seal(0.0)
+    row_elems = 16                         # 40 elems -> 3 chunked rows
+    k = s.n_rows(row_elems)
+    assert k == 3
+    dirty = np.full((k + 1, 8, row_elems), np.nan, np.float32)
+    assert s.fill_payload_rows(dirty, 1, row_elems) == k
+    assert np.array_equal(dirty[1:], np.stack(s.payload_rows(row_elems)))
+    assert np.all(np.isnan(dirty[0]))      # rows before start untouched
 
 
 # ---------------------------------------------------------------------------
