@@ -6,8 +6,8 @@
 PY := PYTHONPATH=src python
 
 .PHONY: test api-lane kernel-lane service-lane mesh-lane adversary-lane \
-    chaos-lane obs-lane bench-service bench-service-mesh bench-stream \
-    bench-obs bench
+    chaos-lane obs-lane tune-lane bench-service bench-service-mesh \
+    bench-stream bench-obs bench-tune bench
 
 test:
 	$(PY) -m pytest -x -q
@@ -62,6 +62,15 @@ chaos-lane:
 obs-lane:
 	$(PY) -m pytest tests/test_obs.py -q
 
+# self-tuning planner lane: the golden decision table, the
+# predicted==executed wire-byte pin, and the config-path bugfix
+# regressions (XLA_FLAGS import purity, schedule ConfigError, the
+# deprecated digest_ratio approximation) — run warnings-as-errors so
+# the tuner can never score through the deprecated path
+tune-lane:
+	PYTHONPATH=src python -W error::DeprecationWarning -m pytest \
+	    tests/test_tune.py -q
+
 bench-service:
 	$(PY) -m benchmarks.run --only service --json BENCH_service.json
 
@@ -92,6 +101,14 @@ bench-stream:
 # disabled registry on the batched dispatch path
 bench-obs:
 	$(PY) -m benchmarks.run --only obs_overhead --json BENCH_service.json
+
+# tuner decision trajectory + resolution-overhead gate: the headline
+# decision's predicted bytes may not regress (grow) >10% vs the value
+# committed in BENCH_secure_agg.json, and a cache-hit resolution must
+# stay within 2% of dispatching the winning config directly
+bench-tune:
+	$(PY) -m benchmarks.run --only tune --json BENCH_secure_agg.json \
+	    --guard tuner_decision_n16_T1024_S8_bytes
 
 bench:
 	$(PY) -m benchmarks.run

@@ -23,7 +23,8 @@ release and are gone (PR 8).
 the bench, NAME's fresh value is compared against the value already
 committed in the ``--json`` trajectory file, and the run exits 1 if a
 higher-is-better row (``_sps``) dropped more than 10% (or a
-lower-is-better ``_us`` row rose more than 10%).  The fresh value is
+lower-is-better ``_us`` / ``_bytes`` row rose more than 10% — wire
+bytes regress upward exactly like latencies do).  The fresh value is
 still merged, so an intentional regression is committed by rerunning
 after review — the gate is on the DIFF, not the file.
 """
@@ -89,7 +90,7 @@ def main() -> None:
 
     from benchmarks import (comm_cost, crypto_breakdown, kernels,
                             lower_bound, obs_overhead, secure_allreduce,
-                            service)
+                            service, tune)
     table = {
         "comm_cost": comm_cost.run,                # paper Fig 3a/3b
         "crypto_breakdown": crypto_breakdown.run,  # paper Fig 3c/3d
@@ -99,6 +100,7 @@ def main() -> None:
         "service": functools.partial(              # multi-session load gen
             service.run, transport=args.transport),
         "obs_overhead": obs_overhead.run,          # metrics/trace cost gate
+        "tune": tune.run,                          # tuner decisions + gate
     }
     names = [args.only] if args.only else list(table)
     tee = _Tee(sys.stdout)
@@ -136,8 +138,10 @@ def main() -> None:
                       f"recorded {fresh[name]:.0f}", file=sys.stderr)
                 continue
             # higher-is-better unless the unit suffix says microseconds
-            ratio = (fresh[name] / base if not name.endswith("_us")
-                     else base / fresh[name])
+            # or wire bytes (both regress upward)
+            lower_is_better = name.endswith(("_us", "_bytes"))
+            ratio = (base / fresh[name] if lower_is_better
+                     else fresh[name] / base)
             verdict = "OK" if ratio >= 0.9 else "REGRESSION"
             print(f"GUARD {name}: {base:.0f} -> {fresh[name]:.0f} "
                   f"({ratio:.2f}x) {verdict}", file=sys.stderr)

@@ -35,6 +35,7 @@ exposes both cache accounts plus the modeled wire bytes.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional
 
 import jax
@@ -68,7 +69,18 @@ class SecureAggregator:
     deterministic fault injection in tests).  ``metrics`` shares a
     :class:`~repro.obs.MetricsRegistry` (default: a private one) and
     ``recorder`` attaches a :class:`~repro.obs.TraceRecorder` flight
-    recorder — both are threaded through to the session service."""
+    recorder — both are threaded through to the session service.
+
+    ``tune`` turns on the self-tuning planner (``repro.tune``): pass
+    ``"auto"`` (exact-cost oracle), ``"probe"`` (oracle + one measured
+    dispatch per finalist), or a ready :class:`~repro.tune.Tuner`.
+    With tuning on, the schedule/transport/digest/chunk knobs and the
+    service pad become *hints*: each verb resolves the workload
+    signature ``(n_nodes, T, S, churn, byzantine budget)`` to the
+    cheapest config by exact wire bytes, memoized per signature (a
+    repeat resolution is one dict lookup).  Policy knobs — masking,
+    clip, seeds, the byzantine spec, the kernel engine — are never
+    touched.  ``stats()["tuner"]`` shows the decision/cache counters."""
 
     def __init__(self, cfg: Optional[AggConfig] = None, *,
                  topology: Optional[Topology] = None,
@@ -76,7 +88,8 @@ class SecureAggregator:
                  wire: Optional[Wire] = None,
                  runtime: Optional[Runtime] = None,
                  batching=None, epochs=None, retry=None, breaker=None,
-                 chaos=None, metrics=None, recorder=None, stream=None):
+                 chaos=None, metrics=None, recorder=None, stream=None,
+                 tune=None):
         if cfg is None:
             if topology is None:
                 raise ConfigError(
@@ -108,6 +121,25 @@ class SecureAggregator:
         self._chaos = chaos
         self._stream = stream
         self._svc = None
+        if tune is None:
+            self._tuner = None
+        elif isinstance(tune, str):
+            if tune not in ("auto", "probe"):
+                raise ConfigError(
+                    f"unknown tune mode {tune!r}; pick 'auto' (exact "
+                    "cost oracle), 'probe' (oracle + measured "
+                    "finalists), or pass a repro.tune.Tuner")
+            from repro.tune import Tuner
+            self._tuner = Tuner(probe=tune == "probe",
+                                metrics=self.metrics)
+        elif hasattr(tune, "decide"):
+            self._tuner = tune
+        else:
+            raise ConfigError(
+                f"tune= wants 'auto', 'probe', or a repro.tune.Tuner, "
+                f"got {type(tune).__name__}")
+        self._tune_decisions: dict = {}   # (T, S) -> TuneDecision
+        self._tuned_rows: Optional[dict] = None  # service pad overrides
 
     # -- config / plan ------------------------------------------------------
     @property
@@ -128,7 +160,28 @@ class SecureAggregator:
                                 batching=self._batching, epochs=self._epochs,
                                 retry=self._retry, breaker=self._breaker,
                                 chaos=self._chaos, metrics=self.metrics,
-                                recorder=self.recorder, stream=self._stream)
+                                recorder=self.recorder, stream=self._stream,
+                                tune=self._tuner)
+
+    # -- self-tuning --------------------------------------------------------
+    def _tune_decision(self, T: int, S: int = 1):
+        """Tuned decision for this workload shape, memoized per facade
+        so a repeated dispatch pays one dict lookup (the tuner's own
+        module-wide memo backs the first resolution per process)."""
+        key = (T, S)
+        d = self._tune_decisions.get(key)
+        if d is None:
+            d = self._tuner.resolve(self.cfg, T, S)
+            self._tune_decisions[key] = d
+        return d
+
+    def _plan_for(self, T: int, S: int = 1):
+        """(plan, decision) a verb should execute: the tuned winner when
+        tuning is on, else this config's own plan (decision None)."""
+        if self._tuner is None:
+            return self.plan(), None
+        d = self._tune_decision(T, S)
+        return compile_plan(d.config), d
 
     # -- one-shot aggregation ----------------------------------------------
     def allreduce(self, tree):
@@ -164,27 +217,29 @@ class SecureAggregator:
         T = sum(int(np.prod(s[1:], dtype=np.int64)) for s, _ in shapes)
         if T == 0:
             return tree          # every leaf zero-size: nothing moves
-        fn = self._executable(backend, treedef, tuple(shapes))
-        self._c_bytes.inc(self.plan().wire_bytes(T))
+        plan, _ = self._plan_for(T)
+        fn = self._executable(backend, treedef, tuple(shapes), plan)
+        self._c_bytes.inc(plan.wire_bytes(T))
         if self.recorder is not None:
             from repro.obs.trace import record_batch_trace
-            record_batch_trace(self.recorder, self.plan(), padded=T,
+            record_batch_trace(self.recorder, plan, padded=T,
                                rows=1, masks={}, unit=0, attempt=1,
                                backend=backend, sids=(), fresh=False)
         return jax.tree.unflatten(treedef, fn(leaves))
 
-    def _executable(self, backend: str, treedef, shapes):
+    def _executable(self, backend: str, treedef, shapes, plan):
         """One jitted executable per (backend, payload structure): pack,
         engine run and unpack all trace into one cached call, so a
         repeated shape costs a dict lookup plus the jit dispatch — the
         facade's plan-cache-hit overhead the benchmark row tracks."""
+        # the tuned plan is a pure function of the payload shape (the
+        # signature's T), so the shape key stays sound with tuning on
         key = (backend, treedef, shapes)
         fn = self._fns.get(key)
         if fn is not None:
             self._c_fn_hits.inc()
             return fn
         self._c_fn_misses.inc()
-        plan = self.plan()
         n = self.cfg.n_nodes
         seed = self.cfg.seed
         mt = None
@@ -249,6 +304,7 @@ class SecureAggregator:
         tail = xs.shape[2:]
         T = int(np.prod(tail, dtype=np.int64)) if tail else 1
         dtype = jnp.result_type(xs)
+        plan, _ = self._plan_for(T, S)
         key = ("batched", backend, S, T)
         fn = self._fns.get(key)
         if fn is not None:
@@ -259,7 +315,7 @@ class SecureAggregator:
             fresh = True
             stream = self._stream or StreamConfig()
             fn = _engine.build_batch_executable(
-                self.plan(), backend=backend, mesh=self.runtime.mesh,
+                plan, backend=backend, mesh=self.runtime.mesh,
                 dp_axes=self.runtime.dp_axes, impl=self.cfg.kernel_impl,
                 donate=stream.resolve_donate())
             self._fns[key] = fn
@@ -267,10 +323,10 @@ class SecureAggregator:
         offsets = jnp.zeros((S,), dtype=jnp.uint32)
         out = fn(xs.reshape(S, n, T).astype(jnp.float32), seeds,
                  offsets, {})
-        self._c_bytes.inc(self.plan().wire_bytes(T, S=S))
+        self._c_bytes.inc(plan.wire_bytes(T, S=S))
         if self.recorder is not None:
             from repro.obs.trace import record_batch_trace
-            record_batch_trace(self.recorder, self.plan(), padded=T,
+            record_batch_trace(self.recorder, plan, padded=T,
                                rows=S, masks={}, unit=0, attempt=1,
                                backend=backend, sids=(), fresh=fresh)
         return jnp.reshape(out, (S,) + tail).astype(dtype)
@@ -297,10 +353,24 @@ class SecureAggregator:
         ``contribute(...)`` then :meth:`seal` / :meth:`pump` /
         :meth:`result` (or the service object directly)."""
         from repro.service import SessionParams
+        decision = None
         if params is None:
-            params = SessionParams.from_config(self.cfg, elems)
-        session = self._service(params).open(params=params, now=now,
-                                             ttl=ttl)
+            if self._tuner is not None:
+                # tuned sessions: resolve at the service's batch width
+                # (the S the executor will actually dispatch) and derive
+                # the params from the WINNING config, so the executor's
+                # plan — and its wire account — is the tuned one
+                decision = self._tune_decision(elems,
+                                               self._batch_rows())
+                params = SessionParams.from_config(decision.config, elems)
+            else:
+                params = SessionParams.from_config(self.cfg, elems)
+        svc = self._service(params)
+        if decision is not None and self._tuned_rows is not None:
+            # the padded length is part of the batch key, so tuned and
+            # untuned sessions of the same elems can never share a batch
+            self._tuned_rows[elems] = decision.padded_elems
+        session = svc.open(params=params, now=now, ttl=ttl)
         byz = self.cfg.byzantine
         if byz.corrupt_ranks:
             from repro.runtime.fault import SessionFaultPlan
@@ -308,6 +378,14 @@ class SecureAggregator:
                 byzantine_slots=tuple(byz.corrupt_ranks),
                 byzantine_mode=byz.mode))
         return session
+
+    def _batch_rows(self) -> int:
+        """The batch width S the executor dispatches at — the tuned
+        workload signature's S on the service path."""
+        if self._batching is not None:
+            return self._batching.max_batch
+        from repro.service import BatchingConfig
+        return BatchingConfig.max_batch
 
     def _service(self, default_params):
         if self._svc is None:
@@ -319,10 +397,16 @@ class SecureAggregator:
                     "'manual' backend — use Runtime(backend='sim') or "
                     "Runtime(backend='mesh', mesh=...) for open_session "
                     "(manual is the inside-shard_map allreduce path)")
+            batching = self._batching or BatchingConfig()
+            if self._tuner is not None:
+                # give the service a live tuned-pad map this facade
+                # fills as sessions open (plain dict by design)
+                batching = dataclasses.replace(batching, tuned={})
+                self._tuned_rows = batching.tuned
             self._svc = AggregationService(
                 default_params,
                 epochs=self._epochs,
-                batching=self._batching or BatchingConfig(),
+                batching=batching,
                 kernel_impl=self.cfg.kernel_impl,
                 base_seed=self.cfg.seed,
                 transport="mesh" if backend == "mesh" else "sim",
@@ -355,8 +439,12 @@ class SecureAggregator:
         """Analytic per-run communication account of this config at
         ``elems`` float32 payload elements (rounds, total bytes, bytes
         per node) — ``schedules.schedule_cost`` with the exact digest
-        parameters, equal to the engine's executed wire bytes."""
+        parameters, equal to the engine's executed wire bytes.  With
+        tuning on, the account describes the TUNED config this facade
+        would execute for ``elems`` (at S=1)."""
         cfg = self.cfg
+        if self._tuner is not None:
+            cfg = self._tune_decision(elems).config
         return schedule_cost(cfg.schedule, cfg.n_clusters, cfg.cluster_size,
                              cfg.redundancy, payload_bytes=4 * elems,
                              digest=cfg.transport == "digest",
@@ -384,6 +472,8 @@ class SecureAggregator:
             "bytes_sent": self._c_bytes.value,
             "metrics": self.metrics.snapshot(),
         }
+        if self._tuner is not None:
+            out["tuner"] = self._tuner.stats()
         if self._svc is not None:
             out["service"] = self._svc.stats
             brk = self._svc.executor.breaker

@@ -71,19 +71,12 @@ _DEFAULT_SEED = 0x5EC0A66
 # ---------------------------------------------------------------------------
 
 
-class ConfigError(ValueError):
-    """An invalid protocol-config knob (or knob combination).
-
-    Raised eagerly at construction time by :class:`Topology` /
-    :class:`Security` / :class:`Wire` / :class:`Runtime` /
-    :class:`AggConfig` — a real exception, not an ``assert``, so the
-    checks survive ``python -O`` and the message always says which knob
-    to fix."""
-
-
-def _require(cond: bool, msg: str) -> None:
-    if not cond:
-        raise ConfigError(msg)
+# ConfigError/_require live in core.schedules (the import root of the
+# config stack — schedules cannot import this module back) and are
+# re-exported here: `from repro.core.plan import ConfigError` stays the
+# canonical spelling for the facade, the service, and the tests.
+ConfigError = SCH.ConfigError
+_require = SCH._require
 
 
 @dataclasses.dataclass(frozen=True)
@@ -107,10 +100,11 @@ class Topology:
                  f"unknown schedule {self.schedule!r}; pick one of "
                  f"{sorted(SCH.SCHEDULES)}")
         g = self.n_nodes // self.cluster_size
-        _require(self.schedule != "butterfly" or g == 1 or g & (g - 1) == 0,
-                 f"schedule='butterfly' needs a power-of-two cluster "
-                 f"count, got g={g} (= n_nodes/cluster_size); use 'ring' "
-                 "or 'tree', or adjust the committee shape")
+        _require(self.schedule not in ("tree", "butterfly") or g == 1
+                 or g & (g - 1) == 0,
+                 f"schedule={self.schedule!r} needs a power-of-two "
+                 f"cluster count, got g={g} (= n_nodes/cluster_size); "
+                 "use 'ring', or adjust the committee shape")
 
     @property
     def n_clusters(self) -> int:

@@ -17,7 +17,27 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import Optional
+
+
+class ConfigError(ValueError):
+    """An invalid protocol-config knob (or knob combination).
+
+    Raised eagerly at construction time by the config sections in
+    ``core.plan`` (:class:`Topology` / :class:`Security` / :class:`Wire`
+    / :class:`Runtime` / :class:`AggConfig`) and by the schedule
+    builders below — a real exception, not an ``assert``, so the checks
+    survive ``python -O`` and the message always says which knob to fix.
+    Defined here (the import root of the config stack) and re-exported
+    by ``core.plan`` / ``repro.api``, so programmatic callers like the
+    tuner's candidate enumeration can catch one exception type
+    everywhere."""
+
+
+def _require(cond: bool, msg: str) -> None:
+    if not cond:
+        raise ConfigError(msg)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,7 +57,10 @@ def ring_schedule(g: int) -> list[Round]:
 
 
 def tree_schedule(g: int) -> list[Round]:
-    assert g & (g - 1) == 0, "tree schedule requires power-of-two clusters"
+    _require(g >= 1 and g & (g - 1) == 0,
+             f"schedule='tree' needs a power-of-two cluster count, got "
+             f"g={g} (= n_nodes/cluster_size); use 'ring', or adjust "
+             "n_nodes/cluster_size so their ratio is a power of two")
     k = int(math.log2(g))
     rounds = []
     # reduce: at level l, cluster i with i % 2^(l+1) == 2^l sends to i - 2^l
@@ -60,7 +83,10 @@ def tree_schedule(g: int) -> list[Round]:
 
 
 def butterfly_schedule(g: int) -> list[Round]:
-    assert g & (g - 1) == 0, "butterfly requires power-of-two clusters"
+    _require(g >= 1 and g & (g - 1) == 0,
+             f"schedule='butterfly' needs a power-of-two cluster count, "
+             f"got g={g} (= n_nodes/cluster_size); use 'ring', or adjust "
+             "n_nodes/cluster_size so their ratio is a power of two")
     k = int(math.log2(g))
     return [Round(tuple(i ^ (1 << l) for i in range(g)), combine="add")
             for l in range(k)]
@@ -80,26 +106,45 @@ def get_schedule(name: str, g: int) -> list[Round]:
 
 
 def schedule_cost(name: str, g: int, c: int, r: int, payload_bytes: int,
-                  digest: bool = False, digest_ratio: int = 1024,
+                  digest: bool = False, digest_ratio: Optional[int] = None,
                   digest_bytes: Optional[int] = None,
-                  digest_backup: bool = False) -> dict:
+                  digest_backup: bool = False,
+                  digest_words: int = 16) -> dict:
     """Analytic per-step communication cost of the cluster phase (per node
     and total), used by benchmarks and napkin math in EXPERIMENTS §Perf.
 
-    ``digest_bytes`` pins the exact digest size (``digest_words * 4``)
-    instead of the ``digest_ratio`` approximation; ``digest_backup`` adds
-    the compiled shift-1 backup payload each receiving member fetches
-    eagerly (``AggConfig.digest_backup``).  With both set, the analytic
-    total equals ``Transport.bytes_sent`` of the executed plan bit for
-    bit — the conformance suite pins that equality."""
+    The digest term is EXACT by default: each voted copy ships
+    ``digest_words * 4`` bytes (``AggConfig.digest_words``, default 16),
+    the same account the engine's ``Transport.bytes_sent`` accumulates —
+    so the analytic total equals the executed plan bit for bit (the
+    conformance suite pins that equality).  ``digest_bytes`` pins the
+    digest size directly (overrides ``digest_words``); ``digest_backup``
+    adds the compiled shift-1 backup payload each receiving member
+    fetches eagerly (``AggConfig.digest_backup``).
+
+    ``digest_ratio`` is the legacy payload-proportional approximation
+    (``d = payload_bytes // digest_ratio``); it silently diverged from
+    the engine's fixed-width digests and is deprecated — passing it
+    emits a ``DeprecationWarning`` and the tuner refuses to score with
+    it (``tests/test_tune.py`` pins both)."""
     rounds = get_schedule(name, g)
     active_recv = sum(sum(1 for s in rnd.recv_from if s is not None)
                       for rnd in rounds)  # cluster-level receives
     if digest:
         # each receiving member: 1 full payload + r digest copies to vote
         # on (+ the eager backup payload when compiled in)
-        d = (payload_bytes // digest_ratio if digest_bytes is None
-             else digest_bytes)
+        if digest_bytes is not None:
+            d = digest_bytes
+        elif digest_ratio is not None:
+            warnings.warn(
+                "schedule_cost(digest_ratio=...) is the legacy "
+                "payload-proportional digest approximation and diverges "
+                "from the engine's exact digest_words * 4 account; pass "
+                "digest_words= (or digest_bytes=) instead",
+                DeprecationWarning, stacklevel=2)
+            d = payload_bytes // digest_ratio
+        else:
+            d = 4 * digest_words
         per_member = payload_bytes + r * d
         if digest_backup:
             per_member += payload_bytes

@@ -1,7 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
-                           + os.environ.get("XLA_FLAGS", ""))
-
 """Multi-pod dry-run (deliverable e): lower + compile every
 (architecture x input-shape x mesh) cell, print memory/cost analysis, and
 emit the roofline terms (deliverable g) into reports/dryrun/*.json.
@@ -12,25 +8,29 @@ Usage:
     python -m repro.launch.dryrun --all          # every runnable cell, both meshes
     python -m repro.launch.dryrun --all --subprocess   # isolate cells
 
-The 512 forced host devices exist ONLY here (smoke tests/benches see 1).
+The forced host devices (512 by default, ``--host-devices``) exist ONLY
+in the CLI entry point: ``main()`` applies the XLA_FLAGS override before
+jax initializes its backends, and *importing* this module mutates
+nothing (smoke tests/benches see 1 device).
 """
-import argparse  # noqa: E402
-import dataclasses  # noqa: E402
-import json  # noqa: E402
-import subprocess  # noqa: E402
-import sys  # noqa: E402
-import time  # noqa: E402
-import traceback  # noqa: E402
+import argparse
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import time
+import traceback
 
-import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
+import jax
+import jax.numpy as jnp
 
-from repro.configs import SHAPES, get_config, list_archs, supported_shapes  # noqa: E402
-from repro.core.plan import AggConfig  # noqa: E402
-from repro.launch import steps as ST  # noqa: E402
-from repro.launch.mesh import dp_axes_of, make_production_mesh  # noqa: E402
-from repro.roofline import analysis as RA  # noqa: E402
-from repro.roofline import hw  # noqa: E402
+from repro.configs import SHAPES, get_config, list_archs, supported_shapes
+from repro.core.plan import AggConfig
+from repro.launch import steps as ST
+from repro.launch.mesh import dp_axes_of, make_production_mesh
+from repro.roofline import analysis as RA
+from repro.roofline import hw
 
 REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                           "reports", "dryrun")
@@ -148,7 +148,13 @@ def main():
     ap.add_argument("--subprocess", action="store_true",
                     help="run each cell in a fresh process")
     ap.add_argument("--out-dir", default=REPORT_DIR)
+    ap.add_argument("--host-devices", type=int, default=512, metavar="N",
+                    help="force N XLA host-platform devices for the "
+                         "production meshes (0 = leave XLA_FLAGS alone)")
     args = ap.parse_args()
+    if args.host_devices:
+        from repro.launch.hillclimb import force_host_devices
+        force_host_devices(args.host_devices)
     os.makedirs(args.out_dir, exist_ok=True)
 
     if not args.all:

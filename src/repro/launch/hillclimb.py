@@ -1,32 +1,47 @@
-import os
-os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
-                           + os.environ.get("XLA_FLAGS", ""))
-
 """§Perf hillclimb driver: lower+analyze named variants of the three
 chosen cells and append results to reports/perf/.
 
     python -m repro.launch.hillclimb --cell secure_olmo
-    python -m repro.launch.hillclimb --cell moe_train
-    python -m repro.launch.hillclimb --cell llama4_prefill
+    python -m repro.launch.hillclimb --cell moe_train --host-devices 512
+
+Importing this module has no side effects: the host-device-count
+override (``XLA_FLAGS=--xla_force_host_platform_device_count=N``) is
+applied by ``main()`` behind the explicit ``--host-devices`` flag, and
+only as long as jax has not been initialized yet.  It used to happen at
+import time, which silently corrupted the XLA setup of every process
+that imported the module for reuse (the tuner's micro-probe report path
+does) — ``tests/test_tune.py`` pins that importing leaves ``XLA_FLAGS``
+untouched.
 """
-import argparse  # noqa: E402
-import dataclasses  # noqa: E402
-import json  # noqa: E402
-import time  # noqa: E402
+import argparse
+import dataclasses
+import json
+import os
+import time
 
-import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
+import jax
+import jax.numpy as jnp
 
-from repro.configs import SHAPES, get_config  # noqa: E402
-from repro.configs.base import MoEConfig  # noqa: E402
-from repro.core.plan import AggConfig  # noqa: E402
-from repro.launch import steps as ST  # noqa: E402
-from repro.launch.dryrun import run_cell  # noqa: E402
-from repro.launch.mesh import make_production_mesh  # noqa: E402
-from repro.roofline import analysis as RA  # noqa: E402
+from repro.configs import SHAPES, get_config
+from repro.configs.base import MoEConfig  # noqa: F401 (cell configs)
+from repro.core.plan import AggConfig
+from repro.launch import steps as ST
+from repro.launch.dryrun import run_cell  # noqa: F401 (cell drivers)
+from repro.launch.mesh import make_production_mesh
+from repro.roofline import analysis as RA
 
 PERF_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                         "reports", "perf")
+
+
+def force_host_devices(n: int) -> None:
+    """Prepend ``--xla_force_host_platform_device_count=n`` to
+    ``XLA_FLAGS`` — an explicit, opt-in process mutation (the production
+    mesh wants one host device per simulated chip).  Must run before
+    jax initializes its backends to have any effect."""
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={n} "
+        + os.environ.get("XLA_FLAGS", ""))
 
 
 def analyze_custom(cfg, shape, mesh, build_fn, tag):
@@ -180,7 +195,14 @@ CELLS = {
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--cell", required=True, choices=sorted(CELLS))
-    CELLS[ap.parse_args().cell]()
+    ap.add_argument("--host-devices", type=int, default=None, metavar="N",
+                    help="force N XLA host-platform devices (the cells "
+                         "need one per simulated chip, e.g. 512); mutates "
+                         "this process's XLA_FLAGS, so it is opt-in")
+    args = ap.parse_args()
+    if args.host_devices is not None:
+        force_host_devices(args.host_devices)
+    CELLS[args.cell]()
 
 
 if __name__ == "__main__":

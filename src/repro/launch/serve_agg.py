@@ -100,6 +100,12 @@ def main() -> None:
     ap.add_argument("--cluster-size", type=int, default=4)
     ap.add_argument("--redundancy", type=int, default=3)
     ap.add_argument("--schedule", default="ring")
+    ap.add_argument("--tune", choices=("auto", "probe"), default=None,
+                    help="self-tuning planner (repro.tune): resolve "
+                         "schedule/transport/digest/chunk/pad per "
+                         "workload signature with the exact wire-byte "
+                         "oracle ('probe' adds one measured dispatch "
+                         "per finalist); --schedule becomes a hint")
     ap.add_argument("--churn-every", type=int, default=0)
     ap.add_argument("--impl", default=None,
                     help="kernel engine override (pallas/pallas_interpret/jnp)")
@@ -173,7 +179,8 @@ def main() -> None:
         metrics=DEFAULT_REGISTRY,
         recorder=(None if args.trace_out is None
                   else TraceRecorder(sink=args.trace_out)),
-        stream=StreamConfig(depth=args.pipeline_depth))
+        stream=StreamConfig(depth=args.pipeline_depth),
+        tune=args.tune)
     print(f"service: g={snap.n_clusters} clusters x c={args.cluster_size} "
           f"-> {snap.n_nodes} slots, T={args.elems}, r={args.redundancy}, "
           f"transport={args.transport}")
@@ -199,6 +206,16 @@ def main() -> None:
           f"degraded={out['degraded']}")
     print(f"wire: {out['stats']['wire']['bytes_sent']} modeled bytes "
           f"over {out['stats']['batches']['run']} batches")
+    if args.tune is not None:
+        ts = agg.stats()["tuner"]
+        d = agg._tune_decision(args.elems, args.batch)
+        c = d.config
+        print(f"tuner: {c.schedule}/{c.transport} words={c.digest_words} "
+              f"backup={c.digest_backup} pad={d.padded_elems} "
+              f"predicted={d.predicted_bytes}B/batch "
+              f"(-{100 * d.saving_vs_default:.1f}% vs ring/full default; "
+              f"{ts['decisions']} decisions, {ts['cache_hits']} cache "
+              f"hits, {ts['probes']} probes)")
     if agg.recorder is not None:
         agg.recorder.close()
         print(f"trace: {agg.recorder.events_recorded} events -> "

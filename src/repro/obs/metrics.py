@@ -68,6 +68,10 @@ M_DROPPED = "queue.dropped_sessions"
 M_FACADE_FN_HITS = "facade.fn_cache.hits"
 M_FACADE_FN_MISSES = "facade.fn_cache.misses"
 M_FACADE_BYTES = "facade.bytes_sent"
+# self-tuning planner (repro.tune)
+M_TUNER_DECISIONS = "tuner.decisions"        # fresh grid scans
+M_TUNER_CACHE_HITS = "tuner.cache_hits"      # decision-memo hits
+M_TUNER_PROBES = "tuner.probes"              # measured micro-dispatches
 # per-batch stage timing (histogram, labeled stage=...).  Sequential
 # dispatch times pack + dispatch + the blocking device sync as one
 # ``device_dispatch`` span; the streaming executor splits it:

@@ -114,6 +114,14 @@ class BatchingConfig:
     max_batch: int = 8            # size watermark, in batch ROWS (S)
     max_age: float = 0.05         # age watermark, in `now` units
     pad_buckets: tuple[int, ...] = (64, 256, 1024, 4096, 16384)
+    # per-batch-key tuned pads: {payload elems -> padded row elems},
+    # written by the facade's tuner (``SecureAggregator(tune=...)``) so
+    # tuned sessions pad to the tuner's kernel-lane-tight row instead
+    # of the coarse buckets above — the padded length is part of the
+    # batch key, so tuned and untuned sessions never share a batch.
+    # The mapping is consulted before the buckets and is deliberately a
+    # plain mutable dict: decisions arrive one signature at a time
+    tuned: Optional[dict] = None
     # payloads longer than this chunk across multiple batch rows (the
     # per-session counter offsets keep chunked == monolithic); None
     # keeps the historical behavior (one row, padded to a multiple of
@@ -128,6 +136,10 @@ class BatchingConfig:
     session_ttl: Optional[float] = None
 
     def padded_elems(self, elems: int) -> int:
+        if self.tuned is not None:
+            hit = self.tuned.get(elems)
+            if hit is not None:
+                return hit
         for b in self.pad_buckets:
             if elems <= b:
                 return b

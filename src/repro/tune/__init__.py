@@ -1,0 +1,11 @@
+"""Self-tuning planner: workload signature -> winning protocol config,
+scored with the exact wire-byte oracle.  See ``tune/planner.py`` for
+the model and ``README.md`` §Auto-tuning for the decision flow."""
+from repro.tune.planner import (TuneDecision, Tuner, clear_tuner_cache,
+                                expected_retransmit_bytes,
+                                tuner_cache_stats)
+from repro.tune.signature import WorkloadSignature
+
+__all__ = ["TuneDecision", "Tuner", "WorkloadSignature",
+           "clear_tuner_cache", "expected_retransmit_bytes",
+           "tuner_cache_stats"]

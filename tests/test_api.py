@@ -63,7 +63,8 @@ def test_facade_signatures_are_pinned():
                     "wire: 'Optional[Wire]' = None, "
                     "runtime: 'Optional[Runtime]' = None, "
                     "batching=None, epochs=None, retry=None, breaker=None, "
-                    "chaos=None, metrics=None, recorder=None, stream=None)",
+                    "chaos=None, metrics=None, recorder=None, stream=None, "
+                    "tune=None)",
         "allreduce": "(self, tree)",
         "allreduce_batched": "(self, xs)",
         "open_session": "(self, elems: 'int', *, params=None, now=None, "

@@ -1,0 +1,410 @@
+"""The self-tuning planner (``repro.tune``) and the config-path bug
+sweep that rode along with it (PR 9).
+
+Four layers of pinning:
+
+  * a GOLDEN DECISION TABLE: the tuner's winning config per workload
+    signature, including the adaptive digest-backup flip along the
+    byzantine-budget axis — any model change is a deliberate diff of
+    this table;
+  * EXACTNESS: the decision's ``predicted_bytes`` equals the executed
+    service wire account (``Transport.bytes_sent``) bit for bit, and
+    never exceeds the ring/full default's bytes;
+  * the BUGFIX REGRESSIONS: importing the launch drivers no longer
+    mutates ``XLA_FLAGS`` (the forcing is an explicit ``main()`` flag),
+    the schedule builders raise :class:`ConfigError` instead of bare
+    ``assert`` (they must survive ``python -O`` and be catchable by the
+    tuner's candidate enumeration), and ``schedule_cost``'s legacy
+    ``digest_ratio`` approximation warns — the tuner scores the exact
+    form only;
+  * the CACHE SURFACE: module-wide decision memo hit/miss/size counters
+    next to the plan cache, mirrored in ``stats()["tuner"]``.
+
+This file is the ``make tune-lane`` gate and runs under
+``-W error::DeprecationWarning`` there: nothing in the tuner's scoring
+path may touch the deprecated digest approximation.
+"""
+import os
+import subprocess
+import sys
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.api import SecureAggregator, Topology
+from repro.core.byzantine import ByzantineSpec
+from repro.core.plan import AggConfig, ConfigError, Security, Wire, \
+    compile_plan
+from repro.core.schedules import get_schedule, schedule_cost
+from repro.service import BatchingConfig
+from repro.tune import (Tuner, WorkloadSignature, clear_tuner_cache,
+                        expected_retransmit_bytes, tuner_cache_stats)
+from repro.tune.planner import pad_candidates
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(autouse=True)
+def _fresh_tuner_cache():
+    clear_tuner_cache()
+    yield
+    clear_tuner_cache()
+
+
+def _cfg(n=16, cluster=4, budget=0):
+    cfg = AggConfig.compose(Topology(n_nodes=n, cluster_size=cluster),
+                            Security(), Wire())
+    if budget:
+        cfg = cfg.replace(
+            byzantine=ByzantineSpec(corrupt_ranks=tuple(range(budget))))
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# golden decision table
+# ---------------------------------------------------------------------------
+
+# (n, cluster, T, S, budget, churn) ->
+#     (schedule, transport, words, backup, padded, predicted, baseline)
+GOLDEN = [
+    # clean committee: tree + narrow digest, detect-only, lane-tight pad
+    ((16, 4, 1024, 8, 0, 0.0),
+     ("tree", "digest", 8, False, 1024, 804864, 4718592)),
+    # one corrupt rank: the security floor widens the digest, but the
+    # expected replay cost is still below one eager backup per receive
+    ((16, 4, 1024, 8, 1, 0.0),
+     ("tree", "digest", 16, False, 1024, 823296, 4718592)),
+    # two corrupt ranks: the replay cascade crosses the threshold — the
+    # compiled backup stream is now expected-cost-cheaper (the adaptive
+    # digest-backup tradeoff, decided instead of defaulted)
+    ((16, 4, 1024, 8, 2, 0.0),
+     ("tree", "digest", 16, True, 1024, 1609728, 4718592)),
+    # budget > n/4: widest digest, backup stays on
+    ((16, 4, 1024, 8, 5, 0.0),
+     ("tree", "digest", 32, True, 1024, 1646592, 4718592)),
+    # churn pressure alone drives the same ladder
+    ((16, 4, 1024, 8, 0, 0.05),
+     ("tree", "digest", 16, False, 1024, 823296, 4718592)),
+    ((16, 4, 1024, 8, 0, 0.25),
+     ("tree", "digest", 16, True, 1024, 1609728, 4718592)),
+    # tiny payload: the service's 64-bucket beats the 128 lane quantum
+    ((16, 4, 8, 1, 0, 0.0),
+     ("tree", "digest", 8, False, 64, 8448, 36864)),
+    # g=3 clusters: tree/butterfly infeasible (ConfigError, skipped) —
+    # ring wins; pad 1152 not the coarse 4096 bucket
+    ((12, 4, 1100, 4, 0, 0.0),
+     ("ring", "digest", 8, False, 1152, 451584, 4718592)),
+    # wide batch: per-row decision scales linearly with S
+    ((16, 4, 1000, 64, 0, 0.0),
+     ("tree", "digest", 8, False, 1024, 6438912, 37748736)),
+    # long payload: a chunk covering the padded row wins (one digest
+    # set; smaller chunks multiply the digest term)
+    ((16, 4, 200000, 2, 0, 0.0),
+     ("tree", "digest", 8, False, 200064, 38416896, 245366784)),
+    # big committee: log-depth tree crushes the g-1 ring rotation
+    ((64, 4, 4096, 16, 0, 0.0),
+     ("tree", "digest", 8, False, 4096, 31641600, 754974720)),
+]
+
+
+@pytest.mark.parametrize("sig_row,want", GOLDEN,
+                         ids=[f"n{k[0]}_T{k[2]}_S{k[3]}_b{k[4]}_ch{k[5]}"
+                              for k, _ in GOLDEN])
+def test_golden_decisions(sig_row, want):
+    n, cluster, T, S, budget, churn = sig_row
+    cfg = _cfg(n, cluster, budget)
+    tuner = Tuner(churn_rate=churn)
+    d = tuner.resolve(cfg, T, S)
+    got = (d.config.schedule, d.config.transport, d.config.digest_words,
+           d.config.digest_backup, d.padded_elems, d.predicted_bytes,
+           d.baseline_bytes)
+    assert got == want
+    # the tuned config is never worse than the ring/full default, and
+    # the ranking score is at least the honest-path bytes
+    assert d.predicted_bytes <= d.baseline_bytes
+    assert d.expected_bytes >= d.predicted_bytes
+    assert 0.0 <= d.saving_vs_default < 1.0
+    # policy knobs come from the base config untouched
+    assert d.config.byzantine == cfg.byzantine
+    assert d.config.seed == cfg.seed
+    assert d.config.masking == cfg.masking
+
+
+def test_backup_flip_is_monotone_in_budget():
+    """Once the byzantine budget turns the backup on, more corruption
+    never turns it back off."""
+    flipped = False
+    for budget in range(0, 8):
+        d = Tuner().resolve(_cfg(budget=budget), 1024, 8)
+        if flipped:
+            assert d.config.digest_backup
+        flipped = flipped or d.config.digest_backup
+    assert flipped
+
+
+def test_expected_retransmit_model():
+    cfg = _cfg().replace(transport="digest", digest_backup=False)
+    plan = compile_plan(cfg)
+    clean = WorkloadSignature(16, 1024, 8)
+    assert expected_retransmit_bytes(plan, 1024, clean) == 0.0
+    one = expected_retransmit_bytes(
+        plan, 1024, WorkloadSignature(16, 1024, 8, byzantine_budget=1))
+    two = expected_retransmit_bytes(
+        plan, 1024, WorkloadSignature(16, 1024, 8, byzantine_budget=2))
+    assert 0.0 < one < two
+    # q -> 1 saturates (the clamp) instead of dividing by zero
+    sat = expected_retransmit_bytes(
+        plan, 1024, WorkloadSignature(16, 1024, 8, byzantine_budget=16,
+                                      churn_rate=1.0))
+    assert np.isfinite(sat) and sat > two
+
+
+def test_pad_candidates():
+    assert pad_candidates(1100) == (1152, 4096)   # lane-tight + bucket
+    assert pad_candidates(8) == (64, 128)
+    assert pad_candidates(1024) == (1024,)        # axes coincide
+    assert all(p % 64 == 0 for p in pad_candidates(200000))
+    assert min(pad_candidates(200000)) == 200064
+
+
+# ---------------------------------------------------------------------------
+# exactness: predicted == executed
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sig_row,want", GOLDEN,
+                         ids=[f"n{k[0]}_T{k[2]}_S{k[3]}_b{k[4]}_ch{k[5]}"
+                              for k, _ in GOLDEN])
+def test_golden_predicted_equals_engine_executed(sig_row, want):
+    """EVERY golden decision, executed: the tuned config's engine run
+    at (padded, S) accounts exactly ``predicted_bytes`` on
+    ``Transport.bytes_sent`` — the oracle is the account, not an
+    estimate of it."""
+    from repro.core.engine import sim_batch
+    from repro.core.plan import SessionMeta
+    n, cluster, T, S, budget, churn = sig_row
+    d = Tuner(churn_rate=churn).resolve(_cfg(n, cluster, budget), T, S)
+    plan = compile_plan(d.config)
+    xs = np.zeros((S, n, d.padded_elems), np.float32)
+    _, tp = sim_batch(plan, xs, SessionMeta.build(S, n, seed=d.config.seed))
+    assert tp.bytes_sent == d.predicted_bytes
+    assert tp.bytes_sent <= d.baseline_bytes
+
+
+
+@pytest.mark.parametrize("n,cluster,elems,S", [
+    (16, 4, 1000, 4),     # tree/digest, tuned pad 1024
+    (12, 4, 1100, 2),     # ring fallback (g=3), tuned pad 1152
+])
+def test_predicted_bytes_equal_executed(n, cluster, elems, S):
+    """The acceptance pin: drive one full batch through the facade's
+    session service with tuning on and compare the executor's wire
+    account — ``Transport.bytes_sent`` — against the decision's
+    ``predicted_bytes``.  Equal bit for bit, and at most the ring/full
+    default's bytes."""
+    agg = SecureAggregator(
+        topology=Topology(n_nodes=n, cluster_size=cluster), tune="auto",
+        batching=BatchingConfig(max_batch=S))
+    rng = np.random.default_rng(7)
+    # stay inside the default quantization range clip=1.0
+    vals = rng.integers(0, 2, size=(S, n, elems)).astype(np.float32)
+    sids = []
+    for s_idx in range(S):
+        s = agg.open_session(elems)
+        for slot in range(n):
+            s.contribute(slot, vals[s_idx, slot])
+        agg.seal(s.sid)
+        sids.append(s.sid)
+    assert agg.drain() == S
+    d = agg._tune_decision(elems, S)
+    st = agg.stats()
+    executed = st["service"]["wire"]["bytes_sent"]
+    assert executed == d.predicted_bytes
+    assert executed <= d.baseline_bytes
+    # tuning changed the wire account, never the math
+    for s_idx, sid in enumerate(sids):
+        np.testing.assert_allclose(np.asarray(agg.result(sid)),
+                                   vals[s_idx].sum(0), atol=1e-3)
+    # the facade surfaces the tuner counters
+    assert st["tuner"]["decisions"] == 1
+    assert st["tuner"]["cache"]["size"] == 1
+
+
+def test_tuned_one_shot_matches_untuned():
+    xs = (np.random.default_rng(3).normal(size=(16, 600))
+          .astype(np.float32) * 0.3)
+    plain = SecureAggregator(topology=Topology(n_nodes=16))
+    tuned = SecureAggregator(topology=Topology(n_nodes=16), tune="auto")
+    np.testing.assert_allclose(np.asarray(tuned.allreduce(xs)),
+                               np.asarray(plain.allreduce(xs)), atol=1e-4)
+    # the one-shot verb accounted the TUNED plan's bytes
+    d = tuned._tune_decision(600)
+    want = compile_plan(d.config).wire_bytes(600)
+    assert tuned.stats()["bytes_sent"] == want
+    assert want < plain.stats()["bytes_sent"]
+
+
+def test_cost_reports_tuned_config():
+    plain = SecureAggregator(topology=Topology(n_nodes=16))
+    tuned = SecureAggregator(topology=Topology(n_nodes=16), tune="auto")
+    assert tuned.cost(1024)["bytes_total"] \
+        < plain.cost(1024)["bytes_total"]
+
+
+# ---------------------------------------------------------------------------
+# cache surface
+# ---------------------------------------------------------------------------
+
+def test_decision_memo_is_module_wide():
+    cfg = _cfg()
+    t1 = Tuner()
+    d1 = t1.resolve(cfg, 512, 2)
+    assert t1.resolve(cfg, 512, 2) is d1
+    assert t1.stats()["decisions"] == 1
+    assert t1.stats()["cache_hits"] == 1
+    # a sibling tuner (same process) shares the memo, like compile_plan
+    t2 = Tuner()
+    assert t2.resolve(cfg, 512, 2) is d1
+    assert tuner_cache_stats() == {"hits": 2, "misses": 1, "size": 1}
+    # knobs the tuner overrides anyway don't fragment the cache...
+    assert t1.resolve(cfg.replace(schedule="butterfly"), 512, 2) is d1
+    # ...but a different signature does
+    assert t1.resolve(cfg, 513, 2) is not d1
+    assert tuner_cache_stats()["size"] == 2
+
+
+def test_facade_memoizes_per_shape():
+    """A repeated dispatch resolves through a facade-local dict — the
+    < 2% overhead path ``benchmarks/tune_overhead`` gates."""
+    agg = SecureAggregator(topology=Topology(n_nodes=16), tune="auto")
+    d1 = agg._tune_decision(777, 4)
+    d2 = agg._tune_decision(777, 4)
+    assert d1 is d2
+    # one real resolution; the repeat never re-entered the tuner
+    assert agg.stats()["tuner"]["decisions"] == 1
+    assert agg.stats()["tuner"]["cache_hits"] == 0
+
+
+def test_tune_arg_validation():
+    with pytest.raises(ConfigError, match="unknown tune mode"):
+        SecureAggregator(topology=Topology(n_nodes=8), tune="fastest")
+    with pytest.raises(ConfigError, match="repro.tune.Tuner"):
+        SecureAggregator(topology=Topology(n_nodes=8), tune=42)
+    # a ready tuner is taken as-is (shared decision memo across facades)
+    t = Tuner(churn_rate=0.1)
+    agg = SecureAggregator(topology=Topology(n_nodes=8), tune=t)
+    assert agg._tuner is t
+    # derive() carries the tuner to the sibling facade
+    assert agg.derive(n_nodes=4)._tuner is t
+
+
+def test_signature_validation():
+    with pytest.raises(ConfigError, match="n_nodes"):
+        WorkloadSignature(0, 128)
+    with pytest.raises(ConfigError, match="churn_rate"):
+        WorkloadSignature(8, 128, churn_rate=1.5)
+    with pytest.raises(ConfigError, match="byzantine_budget"):
+        WorkloadSignature(8, 128, byzantine_budget=9)
+    sig = WorkloadSignature.of(_cfg(budget=3), 128, 4)
+    assert sig.byzantine_budget == 3
+    assert sig.corruption_rate() == pytest.approx(3 / 16)
+
+
+# ---------------------------------------------------------------------------
+# probe (measured) mode
+# ---------------------------------------------------------------------------
+
+def test_probe_mode_runs_measured_finalists():
+    tuner = Tuner(probe=True, probe_finalists=2, probe_rows=1)
+    d = tuner.resolve(_cfg(), 64, 1)
+    assert d.probed
+    assert tuner.stats()["probes"] == 2
+    # the probed pick is still drawn from the byte-score finalists
+    assert d.predicted_bytes <= d.baseline_bytes
+
+
+# ---------------------------------------------------------------------------
+# bugfix regressions the tuner would trip over
+# ---------------------------------------------------------------------------
+
+def test_launch_imports_do_not_mutate_xla_flags():
+    """PR 9 regression pin: ``repro.launch.dryrun`` / ``hillclimb`` set
+    ``--xla_force_host_platform_device_count`` at IMPORT time, so any
+    import (the tuner's probe report writes into the hillclimb perf
+    dir) silently reconfigured the process's device topology.  The
+    forcing is now an explicit ``force_host_devices`` call behind the
+    drivers' ``--host-devices`` flag."""
+    code = (
+        "import os\n"
+        "before = os.environ.get('XLA_FLAGS')\n"
+        "import repro.launch.dryrun\n"
+        "import repro.launch.hillclimb\n"
+        "after = os.environ.get('XLA_FLAGS')\n"
+        "assert after == before, (before, after)\n"
+        "from repro.launch.hillclimb import force_host_devices\n"
+        "force_host_devices(4)\n"
+        "flags = os.environ['XLA_FLAGS']\n"
+        "assert '--xla_force_host_platform_device_count=4' in flags\n"
+        "print('import clean')\n")
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr
+    assert "import clean" in out.stdout
+
+
+@pytest.mark.parametrize("name", ["tree", "butterfly"])
+def test_schedule_builders_raise_config_error(name):
+    """Bare ``assert g & (g - 1) == 0`` became a typed, actionable
+    :class:`ConfigError` — it survives ``python -O`` and the tuner's
+    candidate enumeration catches it to skip infeasible shapes."""
+    with pytest.raises(ConfigError, match="power-of-two"):
+        get_schedule(name, 3)
+    with pytest.raises(ConfigError, match="power-of-two"):
+        Topology(n_nodes=12, cluster_size=4, schedule=name)
+    # feasible shapes still build
+    assert len(get_schedule(name, 4)) > 0
+
+
+def test_non_pow2_committee_still_tunes():
+    """The whole point of the typed error: a g=3 committee doesn't kill
+    the tuner, it just prunes tree/butterfly from the grid."""
+    d = Tuner().resolve(_cfg(n=12, cluster=4), 256, 2)
+    assert d.config.schedule == "ring"
+    assert d.candidates_scored > 0
+
+
+def test_schedule_cost_digest_ratio_deprecated():
+    with pytest.warns(DeprecationWarning, match="digest_ratio"):
+        legacy = schedule_cost("ring", 4, 4, 3, 4096, digest=True,
+                               digest_ratio=32)
+    assert legacy["bytes_total"] > 0
+    # the exact default equals the explicitly pinned digest size, and
+    # neither warns
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        exact = schedule_cost("ring", 4, 4, 3, 4096, digest=True,
+                              digest_words=8)
+        pinned = schedule_cost("ring", 4, 4, 3, 4096, digest=True,
+                               digest_bytes=32)
+    assert exact == pinned
+
+
+def test_tuner_never_touches_deprecated_path():
+    """The tuner's scoring is exact-form only; a DeprecationWarning
+    anywhere in a fresh decision is a failure (tune-lane also runs this
+    whole file under ``-W error::DeprecationWarning``)."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        Tuner().resolve(_cfg(), 300, 3)
+
+
+def test_batching_config_tuned_pads():
+    """The service honors the tuner's pad map, and the padded length is
+    part of the batch key — tuned and untuned sessions never mix."""
+    bc = BatchingConfig(tuned={1100: 1152})
+    assert bc.padded_elems(1100) == 1152
+    assert bc.padded_elems(1101) == 4096   # unmapped -> coarse buckets
+    assert BatchingConfig().padded_elems(1100) == 4096
