@@ -6,8 +6,9 @@
 PY := PYTHONPATH=src python
 
 .PHONY: test api-lane kernel-lane service-lane mesh-lane adversary-lane \
-    chaos-lane obs-lane tune-lane bench-service bench-service-mesh \
-    bench-stream bench-obs bench-tune bench
+    chaos-lane obs-lane tune-lane funcs-lane bench-service \
+    bench-service-mesh bench-stream bench-obs bench-tune bench-funcs \
+    bench
 
 test:
 	$(PY) -m pytest -x -q
@@ -71,6 +72,15 @@ tune-lane:
 	PYTHONPATH=src python -W error::DeprecationWarning -m pytest \
 	    tests/test_tune.py -q
 
+# secure-function layer lane: plan/pad arithmetic, every function
+# pinned against the numpy oracle (engine, facade verbs, service
+# sessions), the adversary-grid bit-identity, the cost == executed
+# bytes chain, and the observed-churn tuner pins — warnings-as-errors
+# like tune-lane, and the mesh subprocess cell rides along
+funcs-lane:
+	PYTHONPATH=src python -W error::DeprecationWarning -m pytest \
+	    tests/test_funcs.py -q
+
 bench-service:
 	$(PY) -m benchmarks.run --only service --json BENCH_service.json
 
@@ -109,6 +119,13 @@ bench-obs:
 bench-tune:
 	$(PY) -m benchmarks.run --only tune --json BENCH_secure_agg.json \
 	    --guard tuner_decision_n16_T1024_S8_bytes
+
+# secure-function trajectory + wire gate: the median bisection's
+# steps=1024 byte row may not grow >10% vs the committed value (the
+# histogram==sum equality row rides in the same run)
+bench-funcs:
+	$(PY) -m benchmarks.run --only funcs --json BENCH_secure_agg.json \
+	    --guard funcs_median_steps1024_bytes
 
 bench:
 	$(PY) -m benchmarks.run

@@ -88,7 +88,7 @@ def main() -> None:
         ap.error("--guard needs --json (the committed trajectory file "
                  "to diff against)")
 
-    from benchmarks import (comm_cost, crypto_breakdown, kernels,
+    from benchmarks import (comm_cost, crypto_breakdown, funcs, kernels,
                             lower_bound, obs_overhead, secure_allreduce,
                             service, tune)
     table = {
@@ -101,6 +101,7 @@ def main() -> None:
             service.run, transport=args.transport),
         "obs_overhead": obs_overhead.run,          # metrics/trace cost gate
         "tune": tune.run,                          # tuner decisions + gate
+        "funcs": funcs.run,                        # secure-function layer
     }
     names = [args.only] if args.only else list(table)
     tee = _Tee(sys.stdout)

@@ -1,14 +1,25 @@
 """The paper's own application — distributed polling — driven through
-the ``repro.api.SecureAggregator`` facade over the multi-session
-aggregation service: many concurrent polls run as sessions
-(open -> contribute -> seal -> aggregate -> reveal), batched into single
-kernel dispatches by the admission scheduler, surviving overlay churn
-mid-flight via epoch pinning.  A one-shot run of the node-scale DA
-protocol (real threshold Paillier, with Step 4 routed through the
-batched modmul kernel) is kept as the protocol-level cross-check.
+the secure-FUNCTION layer (``repro.funcs``) on top of the
+``repro.api.SecureAggregator`` facade: the server learns a histogram of
+ratings and the median rating, and nothing else.
+
+Two layers are exercised:
+
+  * the one-shot ``histogram`` verb — a single one-hot count allreduce
+    revealing only the bucket totals, pinned against ``np.histogram``;
+  * service-hosted ``median`` polls — each a chain of
+    ``ceil(log2(steps))`` threshold-count bisection rounds riding
+    ordinary aggregation sessions, advanced by ``pump``/``drain`` and
+    batched ACROSS polls by the admission scheduler, with overlay churn
+    striking mid-bisection (sessions stay pinned to their epoch's
+    committees; departures are vote-absorbed crashes).
+
+A one-shot run of the node-scale DA protocol (real threshold Paillier,
+with Step 4 routed through the batched modmul kernel) is kept as the
+protocol-level cross-check.
 
     PYTHONPATH=src python examples/secure_polling.py \
-        [--n 256] [--tau 0.2] [--polls 12] [--questions 8]
+        [--n 256] [--tau 0.2] [--polls 6] [--bins 8] [--steps 256]
 """
 import argparse
 import sys
@@ -20,7 +31,8 @@ import numpy as np
 from repro.api import SecureAggregator, Security, Topology
 from repro.core.overlay import build_overlay
 from repro.core.protocol import Adversary, DAProtocol
-from repro.runtime.fault import SessionFaultPlan
+from repro.funcs import ValueDomain
+from repro.funcs.run import quantile_rank
 from repro.service import BatchingConfig, EpochManager
 
 
@@ -28,9 +40,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=256)
     ap.add_argument("--tau", type=float, default=0.2)
-    ap.add_argument("--polls", type=int, default=12)
-    ap.add_argument("--questions", type=int, default=8)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--polls", type=int, default=6)
+    ap.add_argument("--bins", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--key-bits", type=int, default=32)
     ap.add_argument("--skip-paillier", action="store_true")
     args = ap.parse_args()
@@ -41,54 +54,59 @@ def main():
     print(f"clusters: g={inv['g']}, sizes [{inv['min_size']}..{inv['max_size']}], "
           f"honest-majority clusters: {inv['honest_majority_frac']*100:.0f}%")
 
-    print(f"== aggregation service: {args.polls} concurrent polls, "
-          f"{args.questions} yes/no questions each ==")
     em = EpochManager(ov, cluster_size=4)
     snap = em.current()
-    # one facade, one config: every poll derives its SessionParams from it
     agg = SecureAggregator(
         topology=Topology(n_nodes=snap.n_nodes, cluster_size=4),
         security=Security(redundancy=3), epochs=em,
         batching=BatchingConfig(max_batch=args.batch, max_age=1e9))
     n_slots = snap.n_nodes
-    print(f"committees: {snap.n_clusters} clusters x 4 -> "
-          f"{n_slots} protocol slots/poll")
-
     rng = np.random.default_rng(7)
-    expected = {}
+
+    # -- one-shot verb: rating histogram ---------------------------------
+    print(f"== rating histogram: {n_slots} voters -> {args.bins} buckets "
+          f"(one one-hot count allreduce) ==")
+    c = agg.cost(fn="histogram", bins=args.bins)
+    ratings = rng.random(n_slots)
+    hist = agg.histogram(ratings, bins=args.bins, range=(0.0, 1.0))
+    want = np.histogram(ratings, bins=args.bins, range=(0.0, 1.0))[0]
+    print(f"buckets: {hist.tolist()} ({c['bytes_total']} wire bytes; "
+          f"server never sees a single rating)")
+    assert np.array_equal(hist, want)
+
+    # -- service: concurrent median polls under mid-flight churn ---------
+    dom = ValueDomain(0.0, 1.0, args.steps)
+    c = agg.cost(fn="median", domain=dom)
+    print(f"== {args.polls} concurrent median polls: steps={args.steps} "
+          f"-> {c['allreduces']} bisection rounds each, "
+          f"{c['bytes_total']} wire bytes/poll ==")
+    polls = []
     for i in range(args.polls):
-        s = agg.open_session(args.questions, now=float(i))
-        votes = rng.integers(0, 2,
-                             size=(n_slots, args.questions)
-                             ).astype(np.float32)
+        fs = agg.open_session(fn="median", domain=dom, now=float(i))
+        vals = rng.random(n_slots)
         for slot in range(n_slots):
-            s.contribute(slot, votes[slot])
-        expected[s.sid] = votes.sum(0)
-        # one poll suffers a mid-session Byzantine member: its forwarded
-        # ring copies are flipped and out-voted by the r=3 majority
-        if i == 1:
-            s.inject_fault(SessionFaultPlan(byzantine_slots=(2,)))
-        agg.seal(s.sid, now=float(i))
-        if i == args.polls // 2:
-            # churn strikes mid-flight: sealed polls stay pinned to their
-            # epoch's committees; departures become vote-absorbed crashes
-            em.churn(joins=8, leaves=8, honest_join_frac=1.0)
-            print(f"  churn after poll {i}: epoch -> "
-                  f"{em.current().epoch}, overlay n={len(ov.nodes)}")
-        agg.pump(now=float(i))
+            fs.contribute(slot, float(vals[slot]))
+        fs.seal(now=float(i))
+        polls.append((fs, vals))
+    # two bisection rounds flush, then churn strikes: in-flight rounds
+    # stay pinned to their epoch; later rounds pin to the new committees
+    agg.pump(force=True)
+    agg.pump(force=True)
+    em.churn(joins=8, leaves=8, honest_join_frac=1.0)
+    print(f"  churn mid-bisection: epoch -> {em.current().epoch}, "
+          f"overlay n={len(ov.nodes)}")
     agg.drain()
 
     exact = 0
-    for sid, want in expected.items():
-        got = agg.result(sid)
-        exact += bool(np.allclose(got, want, atol=1e-3))
+    for fs, vals in polls:
+        assert fs.done, fs
+        quant = np.sort([dom.value(int(i)) for i in dom.indices(vals)])
+        want = quant[quantile_rank(0.5, n_slots) - 1]
+        exact += bool(fs.result == want)
     st = agg.stats()["service"]
-    print(f"polls revealed: {st['sessions']['run']}, exact tallies: "
-          f"{exact}/{args.polls}")
-    print(f"batches: {st['batches']['run']} "
-          f"(sizes {st['batches']['sizes']}), final epoch: {st['epoch']}")
-    sample = agg.result(0).astype(int)
-    print(f"poll 0 tally: {sample.tolist()} yes of {n_slots} voters")
+    print(f"median polls exact: {exact}/{args.polls} "
+          f"(batches: {st['batches']['run']}, sizes "
+          f"{st['batches']['sizes']}, final epoch: {st['epoch']})")
     assert exact == args.polls
 
     if not args.skip_paillier:
@@ -105,6 +123,8 @@ def main():
         print(f"communication: {r.stats.messages} msgs, "
               f"{r.stats.bytes/1e6:.2f} MB total")
         assert r.exact
+
+    print("OK")
 
 
 if __name__ == "__main__":

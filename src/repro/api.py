@@ -22,6 +22,14 @@ that with one facade over one composable config
     account (``schedules.schedule_cost``) for this config at a given
     payload length, exact to the engine's wire-byte account.
 
+plus the secure-function verbs (``repro.funcs``): ``histogram`` /
+``quantile`` / ``median`` / ``minimum`` / ``maximum`` / ``topk``
+compile non-additive aggregations into static sequences of engine
+allreduces over {0, 1} payloads (one-hot rows, threshold counts), and
+``open_session(fn=...)`` runs the same plans as multi-round service
+sessions; ``cost(fn=...)`` stays exact by summing the identical
+per-round account the verbs execute.
+
 Plans compile once per config (the shared ``compile_plan`` memo) and
 the facade keeps a keyed cache of jitted executables per payload shape,
 so repeated shapes never recompile — :meth:`SecureAggregator.stats`
@@ -131,15 +139,18 @@ class SecureAggregator:
                     "finalists), or pass a repro.tune.Tuner")
             from repro.tune import Tuner
             self._tuner = Tuner(probe=tune == "probe",
-                                metrics=self.metrics)
+                                metrics=self.metrics,
+                                epochs=self._epochs)
         elif hasattr(tune, "decide"):
             self._tuner = tune
         else:
             raise ConfigError(
                 f"tune= wants 'auto', 'probe', or a repro.tune.Tuner, "
                 f"got {type(tune).__name__}")
-        self._tune_decisions: dict = {}   # (T, S) -> TuneDecision
+        self._tune_decisions: dict = {}   # WorkloadSignature -> decision
         self._tuned_rows: Optional[dict] = None  # service pad overrides
+        self._func_sessions: dict = {}    # fid -> FuncSession (active)
+        self._next_fid = 0
 
     # -- config / plan ------------------------------------------------------
     @property
@@ -167,12 +178,19 @@ class SecureAggregator:
     def _tune_decision(self, T: int, S: int = 1):
         """Tuned decision for this workload shape, memoized per facade
         so a repeated dispatch pays one dict lookup (the tuner's own
-        module-wide memo backs the first resolution per process)."""
-        key = (T, S)
-        d = self._tune_decisions.get(key)
+        module-wide memo backs the first resolution per process).
+
+        Keyed by the full resolved :class:`~repro.tune.WorkloadSignature`
+        — not just ``(T, S)`` — so signature drift re-resolves: a tuner
+        watching an :class:`~repro.service.EpochManager` folds the
+        OBSERVED churn rate into the signature, and when the measured
+        rate moves a quantum the same ``(T, S)`` maps to a new
+        signature and a fresh decision."""
+        sig = self._tuner.signature(self.cfg, T, S)
+        d = self._tune_decisions.get(sig)
         if d is None:
-            d = self._tuner.resolve(self.cfg, T, S)
-            self._tune_decisions[key] = d
+            d = self._tuner.decide(self.cfg, sig)
+            self._tune_decisions[sig] = d
         return d
 
     def _plan_for(self, T: int, S: int = 1):
@@ -331,6 +349,134 @@ class SecureAggregator:
                                backend=backend, sids=(), fresh=fresh)
         return jnp.reshape(out, (S,) + tail).astype(dtype)
 
+    # -- secure functions (repro.funcs) -------------------------------------
+    def _func_plan(self, fn, *, bins=None, range=(0.0, 1.0), domain=None,
+                   q=0.5, k=None):
+        """Compile one secure function onto this config (the verbs' and
+        ``open_session(fn=...)``'s shared front half).  ``domain`` is a
+        ``ValueDomain`` or a ``(lo, hi, steps)`` tuple."""
+        from repro.core.plan import compile_func_plan
+        from repro.funcs import ValueDomain
+        if fn == "histogram":
+            if bins is None:
+                raise ConfigError("fn='histogram' needs bins=")
+            lo, hi = range
+            return compile_func_plan(self.cfg, "histogram",
+                                     bins=int(bins), lo=float(lo),
+                                     hi=float(hi))
+        aliases = {"min": 0.0, "minimum": 0.0, "max": 1.0,
+                   "maximum": 1.0, "median": 0.5}
+        if fn in aliases:
+            q = aliases[fn]
+            fn = "quantile"
+        if fn not in ("quantile", "topk"):
+            raise ConfigError(
+                f"unknown secure function {fn!r}; pick histogram, "
+                "quantile, median, min, max, or topk")
+        if domain is None:
+            raise ConfigError(
+                f"fn={fn!r} needs domain=ValueDomain(lo, hi, steps) "
+                "(or a (lo, hi, steps) tuple) — the public value grid "
+                "the bisection searches")
+        dom = (domain if isinstance(domain, ValueDomain)
+               else ValueDomain(*domain))
+        if fn == "quantile":
+            return compile_func_plan(self.cfg, "quantile", lo=dom.lo,
+                                     hi=dom.hi, steps=dom.steps,
+                                     q=float(q))
+        if k is None:
+            raise ConfigError("fn='topk' needs k=")
+        return compile_func_plan(self.cfg, "topk", lo=dom.lo, hi=dom.hi,
+                                 steps=dom.steps, k=int(k))
+
+    def _run_func(self, fplan, values):
+        """Execute a function plan to completion with one-shot
+        allreduces — one :meth:`allreduce` per protocol round, each
+        booked through the same executable cache, byte account, and
+        trace recorder as any other one-shot (plus one ``func_round``
+        span per round)."""
+        from repro.funcs import FuncRun
+        if self.backend == "manual":
+            raise ConfigError(
+                "secure functions run one allreduce per protocol round "
+                "and reveal counts between rounds, which has no "
+                "'manual' (inside-shard_map) backend — use "
+                "Runtime(backend='sim') or 'mesh'")
+        run = FuncRun(fplan, values)
+        while not run.done:
+            T = run.payload_elems
+            rnd = run.round
+            out = self.allreduce(run.next_payload())
+            run.feed(np.asarray(out)[0])
+            if self.recorder is not None:
+                from repro.obs.trace import record_func_round
+                plan, _ = self._plan_for(T)
+                record_func_round(self.recorder, fn=fplan.fn, rnd=rnd,
+                                  rounds=run.n_rounds, elems=T,
+                                  bytes=plan.wire_bytes(T),
+                                  backend=self.backend)
+        return run.result
+
+    def histogram(self, values, bins: int, *, range=(0.0, 1.0)):
+        """Secure frequency count: how many nodes hold a value in each
+        of ``bins`` equal bins over ``range`` — ``np.histogram``
+        semantics (out-of-range values clip into the range instead of
+        dropping).  One engine allreduce of one-hot rows; returns the
+        (bins,) int64 counts, exact (no value leaves any node)."""
+        return self._run_func(
+            self._func_plan("histogram", bins=bins, range=range), values)
+
+    def quantile(self, values, q: float, *, domain):
+        """Secure order statistic: the ``max(1, ceil(q * n))``-th
+        smallest of the nodes' values, resolved on ``domain``'s grid by
+        threshold-count bisection — ``ceil(log2(steps))`` engine
+        allreduces of a 1-element count payload, a round count fixed by
+        the DOMAIN (never the data), so nothing retraces."""
+        return self._run_func(
+            self._func_plan("quantile", domain=domain, q=q), values)
+
+    def median(self, values, *, domain):
+        """Secure (lower) median — :meth:`quantile` at q=0.5."""
+        return self._run_func(
+            self._func_plan("median", domain=domain), values)
+
+    def minimum(self, values, *, domain):
+        """Secure minimum — :meth:`quantile` at q=0."""
+        return self._run_func(
+            self._func_plan("minimum", domain=domain), values)
+
+    def maximum(self, values, *, domain):
+        """Secure maximum — :meth:`quantile` at q=1."""
+        return self._run_func(
+            self._func_plan("maximum", domain=domain), values)
+
+    def topk(self, values, k: int, *, domain):
+        """Secure top-k: the k largest node values (descending, with
+        multiplicity), on ``domain``'s grid — the quantile bisection
+        finds the k-th-largest threshold, then ONE final full-domain
+        histogram of the values above it reads the winners off."""
+        return self._run_func(
+            self._func_plan("topk", domain=domain, k=k), values)
+
+    def _open_func_session(self, fplan, *, now=None, ttl=None):
+        """Back half of ``open_session(fn=...)``: ensure the service
+        exists, install the function pad rule, register the session."""
+        from repro.funcs import FuncSession
+        from repro.service import SessionParams
+        if self._svc is None:
+            widest = max(fplan.round_elems, default=1)
+            self._service(SessionParams.from_config(self.cfg, widest))
+        if self._tuner is None:
+            # keep function rounds batch-tight (1-elem bisection counts
+            # stay 1 elem); with tuning on the tuner's own per-elems
+            # decisions own the pad map instead
+            self._svc.queue.batching.register_func_elems(
+                fplan.round_elems)
+        fs = FuncSession(self, fplan, self._next_fid, ttl=ttl)
+        self._next_fid += 1
+        self._func_sessions[fs.fid] = fs
+        return fs
+
     # -- session service ----------------------------------------------------
     @property
     def service(self):
@@ -338,8 +484,11 @@ class SecureAggregator:
         behind :meth:`open_session` (None until the first session)."""
         return self._svc
 
-    def open_session(self, elems: int, *, params=None, now=None, ttl=None):
-        """Open one aggregation query of ``elems`` elements per node.
+    def open_session(self, elems: Optional[int] = None, *, fn=None,
+                     params=None, now=None, ttl=None, bins=None,
+                     range=(0.0, 1.0), domain=None, q=0.5, k=None):
+        """Open one aggregation query of ``elems`` elements per node —
+        or, with ``fn=``, one multi-round secure FUNCTION session.
 
         ``params`` (a ``SessionParams``) overrides the defaults derived
         from the shared config via ``SessionParams.from_config`` —
@@ -351,8 +500,29 @@ class SecureAggregator:
         the open/seal/pump clock.  Returns the
         :class:`~repro.service.Session`; drive it with
         ``contribute(...)`` then :meth:`seal` / :meth:`pump` /
-        :meth:`result` (or the service object directly)."""
+        :meth:`result` (or the service object directly).
+
+        ``fn`` opens a :class:`~repro.funcs.FuncSession` instead:
+        ``"histogram"`` (with ``bins`` / ``range``), ``"quantile"``
+        (``domain`` + ``q``), ``"median"`` / ``"min"`` / ``"max"``
+        (``domain``), or ``"topk"`` (``domain`` + ``k``) — nodes
+        ``contribute(slot, scalar)``, and after ``seal()`` every
+        protocol round rides the ordinary service as an inner session
+        (concurrent functions batch their rounds together), advanced by
+        this facade's :meth:`pump` / :meth:`drain`."""
         from repro.service import SessionParams
+        if fn is not None:
+            if elems is not None or params is not None:
+                raise ConfigError(
+                    "open_session(fn=...) derives its payload lengths "
+                    "from the function plan — don't pass elems/params")
+            fplan = self._func_plan(fn, bins=bins, range=range,
+                                    domain=domain, q=q, k=k)
+            return self._open_func_session(fplan, now=now, ttl=ttl)
+        if elems is None:
+            raise ConfigError(
+                "open_session needs elems (additive aggregation) or "
+                "fn= (a secure function)")
         decision = None
         if params is None:
             if self._tuner is not None:
@@ -398,11 +568,14 @@ class SecureAggregator:
                     "Runtime(backend='mesh', mesh=...) for open_session "
                     "(manual is the inside-shard_map allreduce path)")
             batching = self._batching or BatchingConfig()
-            if self._tuner is not None:
-                # give the service a live tuned-pad map this facade
-                # fills as sessions open (plain dict by design)
+            # every service gets a live per-elems pad map (plain dict
+            # by design): the tuner writes its padded rows here as
+            # sessions open, and function sessions register the
+            # func-payload pad rule — a caller-provided mutable map is
+            # used as-is so its entries (and its reference) stay live
+            if batching.tuned is None:
                 batching = dataclasses.replace(batching, tuned={})
-                self._tuned_rows = batching.tuned
+            self._tuned_rows = batching.tuned
             self._svc = AggregationService(
                 default_params,
                 epochs=self._epochs,
@@ -420,13 +593,45 @@ class SecureAggregator:
         self._require_service().seal(sid, now=now)
 
     def pump(self, now=None, force: bool = False) -> int:
-        return self._require_service().pump(now=now, force=force)
+        """Flush ready service batches, then advance every in-flight
+        function session whose round just revealed (each advancement
+        opens + seals the NEXT round's inner session, which the
+        following pump cycle executes — one pump per bisection round).
+        Returns sessions revealed by the service pump."""
+        revealed = self._require_service().pump(now=now, force=force)
+        self._advance_funcs(now)
+        return revealed
 
     def drain(self) -> int:
-        return self._require_service().drain()
+        """Force-flush everything pending; function sessions are driven
+        ALL the way to a terminal state (one service drain per
+        remaining bisection round — bounded by the static round
+        count)."""
+        svc = self._require_service()
+        total = svc.drain()
+        self._advance_funcs(None)
+        while any(fs.state == "running"
+                  for fs in self._func_sessions.values()):
+            total += svc.drain()
+            if not self._advance_funcs(None):
+                break          # no inner session progressed: stuck/failed
+        return total
 
     def result(self, sid: int, evict: bool = False):
         return self._require_service().result(sid, evict=evict)
+
+    def _advance_funcs(self, now) -> int:
+        """Advance in-flight function sessions; returns how many
+        progressed.  Terminal sessions are dropped from the active set
+        (the caller keeps the FuncSession handle — results live on
+        it)."""
+        progressed = 0
+        for fid, fs in list(self._func_sessions.items()):
+            if fs.advance(now):
+                progressed += 1
+            if fs.state in ("done", "failed"):
+                del self._func_sessions[fid]
+        return progressed
 
     def _require_service(self):
         if self._svc is None:
@@ -435,13 +640,48 @@ class SecureAggregator:
         return self._svc
 
     # -- accounting ---------------------------------------------------------
-    def cost(self, elems: int) -> dict:
+    def cost(self, elems: Optional[int] = None, *, fn=None, bins=None,
+             range=(0.0, 1.0), domain=None, q=0.5, k=None) -> dict:
         """Analytic per-run communication account of this config at
         ``elems`` float32 payload elements (rounds, total bytes, bytes
         per node) — ``schedules.schedule_cost`` with the exact digest
         parameters, equal to the engine's executed wire bytes.  With
         tuning on, the account describes the TUNED config this facade
-        would execute for ``elems`` (at S=1)."""
+        would execute for ``elems`` (at S=1).
+
+        ``fn=`` (same function keywords as :meth:`open_session`)
+        accounts a multi-round secure function instead: per-allreduce
+        wire bytes are summed over the plan's static round schedule
+        with the SAME per-payload-length plan resolution the executing
+        verbs use, so the total equals the executed
+        ``Transport.bytes_sent`` summed across every bisection round —
+        exact for multi-round functions, not a bound."""
+        if fn is not None:
+            if elems is not None:
+                raise ConfigError(
+                    "cost(fn=...) derives its payload lengths from the "
+                    "function plan — don't pass elems")
+            fplan = self._func_plan(fn, bins=bins, range=range,
+                                    domain=domain, q=q, k=k)
+            total = rounds = 0
+            per_round = []
+            for T in fplan.round_elems:
+                plan, _ = self._plan_for(T)
+                b = plan.wire_bytes(T)
+                per_round.append(b)
+                total += b
+                rounds += len(plan.rounds)
+            return {"fn": fplan.fn,
+                    "allreduces": fplan.n_allreduces,
+                    "round_elems": fplan.round_elems,
+                    "rounds": rounds,
+                    "bytes_per_allreduce": tuple(per_round),
+                    "bytes_total": total,
+                    "bytes_per_node": total // self.cfg.n_nodes}
+        if elems is None:
+            raise ConfigError(
+                "cost needs elems (additive aggregation) or fn= (a "
+                "secure function)")
         cfg = self.cfg
         if self._tuner is not None:
             cfg = self._tune_decision(elems).config

@@ -1,0 +1,47 @@
+"""Secure function layer: non-additive aggregations over the additive
+engine.
+
+The engine (``core/plan.py`` + ``core/engine.py``) computes one thing —
+an exact secure SUM — but the paper's protocol aggregates *functions*.
+This package closes the gap the way large-network MPC protocols do
+(Dani et al., VIFF's comparison/active layers): every richer function
+compiles into a static sequence of engine allreduces over derived
+{0, 1} payloads, so the voted-hop + digest + conformance machinery is
+reused verbatim and no transport changes:
+
+  * **histogram** — each node ships a one-hot row over ``bins``; the
+    additive engine's exact sum IS the frequency table (one allreduce);
+  * **quantile / min / max / median** — bisection over a
+    :class:`ValueDomain` grid: each round is one engine allreduce over
+    a 1-element threshold-count payload (``x <= mid``), and the static
+    round count ``ceil(log2(steps))`` is pinned by
+    :class:`~repro.core.plan.FuncPlan` so nothing retraces;
+  * **top-k** — the quantile bisection finds the k-th-largest
+    threshold, then one final full-domain thresholded histogram reads
+    off the top-k values (static payload shape: the threshold gates the
+    one-hot rows, never the width).
+
+Because every payload is a {0, 1} indicator whose aggregate is a node
+count, the fixed-point headroom rule makes all revealed counts exact —
+so the engine's bit-identical faulty == honest guarantee carries over
+to every function unchanged, and the per-round wire bytes flow through
+the same ``hop_wire_words`` account (``FuncPlan.wire_bytes`` ==
+summed executed ``Transport.bytes_sent``).
+
+Entry points: the facade verbs (``SecureAggregator.histogram /
+quantile / minimum / maximum / median / topk``), multi-round service
+sessions (``SecureAggregator.open_session(fn=...)`` ->
+:class:`FuncSession`), or — for engine-level harnesses — a raw
+:class:`FuncRun` fed by any transport.
+"""
+from repro.core.plan import FuncPlan, compile_func_plan
+from repro.funcs.domain import ValueDomain, bin_edges, bin_index
+from repro.funcs.run import (FuncRun, one_hot_payload, threshold_payload,
+                             thresholded_one_hot)
+from repro.funcs.session import FuncSession
+
+__all__ = [
+    "FuncPlan", "FuncRun", "FuncSession", "ValueDomain", "bin_edges",
+    "bin_index", "compile_func_plan", "one_hot_payload",
+    "threshold_payload", "thresholded_one_hot",
+]

@@ -15,6 +15,14 @@ churn epoch) every that-many sessions, so part of the load drains on
 old-epoch committees with vote-absorbed departures.  Prints sessions/sec
 and the realized batch-size histogram.
 
+``--fn histogram|median|min|max|topk`` (with ``--bins``/``--steps``/
+``--topk``) switches the load from additive sums to secure FUNCTIONS
+(``repro.funcs``): each session compiles to a chain of count-payload
+allreduces — one one-hot round for histograms, ``ceil(log2(steps))``
+threshold-count bisection rounds for order statistics — driven across
+pump cycles by the same admission scheduler, with exactness checked
+against the plain-numpy oracle on the quantized domain.
+
 Resilience knobs: ``--ttl`` puts a deadline on every session,
 ``--max-pending-rows`` arms the admission queue's load-shedding
 watermark, ``--retry-attempts``/``--retry-backoff``/``--deadline``
@@ -52,6 +60,71 @@ from repro.runtime.chaos import CHAOS_MODES, ChaosConfig
 from repro.service import (BatchingConfig, EpochManager, RetryPolicy,
                            StreamConfig)
 from repro.service.session import SessionState
+
+
+def run_func_load(agg: SecureAggregator, em: EpochManager, *,
+                  sessions: int, fn: str, bins: int, steps: int, k: int,
+                  churn_every: int, seed: int = 0) -> dict:
+    """Drive ``--sessions`` secure-FUNCTION sessions (histogram /
+    quantile bisection / top-k) through the service: each one rides a
+    chain of ordinary additive sessions, advanced by the same ``pump``
+    that flushes the admission queue.  Exactness is checked against the
+    plain-numpy oracle on the quantized domain; mid-flight churn can
+    legitimately cost exactness for multi-round functions (each
+    bisection round pins to the epoch current at ITS open, so a
+    departure changes the visible electorate between rounds)."""
+    from repro.funcs import ValueDomain
+    from repro.funcs.run import quantile_rank
+
+    rng = np.random.default_rng(seed)
+    n = agg.cfg.n_nodes
+    dom = ValueDomain(0.0, 1.0, steps)
+    t0 = time.monotonic()
+    handles: list[tuple] = []
+    for i in range(sessions):
+        if churn_every and i and i % churn_every == 0:
+            em.churn(joins=4, leaves=4, honest_join_frac=1.0)
+        if fn == "histogram":
+            fs = agg.open_session(fn=fn, bins=bins, now=time.monotonic())
+        elif fn == "topk":
+            fs = agg.open_session(fn=fn, k=k, domain=dom,
+                                  now=time.monotonic())
+        else:
+            fs = agg.open_session(fn=fn, domain=dom, now=time.monotonic())
+        vals = rng.random(n)
+        for slot in range(n):
+            fs.contribute(slot, float(vals[slot]))
+        fs.seal(now=time.monotonic())
+        handles.append((fs, vals))
+        agg.pump()
+    agg.drain()
+    wall = time.monotonic() - t0
+
+    exact = done = 0
+    for fs, vals in handles:
+        if not fs.done:
+            continue
+        done += 1
+        if fn == "histogram":
+            want = np.histogram(np.clip(vals, 0.0, 1.0), bins=bins,
+                                range=(0.0, 1.0))[0]
+            exact += bool(np.array_equal(fs.result, want))
+        elif fn == "topk":
+            quant = np.array([dom.value(int(i))
+                              for i in dom.indices(vals)])
+            want = np.sort(quant)[::-1][:k]
+            exact += bool(np.array_equal(np.asarray(fs.result), want))
+        else:
+            qq = {"median": 0.5, "min": 0.0, "max": 1.0}[fn]
+            quant = np.sort([dom.value(int(i))
+                             for i in dom.indices(vals)])
+            want = quant[quantile_rank(qq, n) - 1]
+            exact += bool(fs.result == want)
+    return {"wall_s": wall, "sessions": sessions,
+            "sessions_per_s": sessions / max(wall, 1e-9),
+            "revealed": done, "exact": exact,
+            "degraded": agg.stats().get("degraded", False),
+            "stats": agg.stats()["service"]}
 
 
 def run_load(agg: SecureAggregator, em: EpochManager, *, sessions: int,
@@ -107,6 +180,21 @@ def main() -> None:
                          "oracle ('probe' adds one measured dispatch "
                          "per finalist); --schedule becomes a hint")
     ap.add_argument("--churn-every", type=int, default=0)
+    ap.add_argument("--fn", default=None,
+                    choices=("histogram", "median", "min", "max", "topk"),
+                    help="drive secure-FUNCTION sessions (repro.funcs) "
+                         "instead of additive sums: each session is a "
+                         "histogram / bisection-quantile / top-k over "
+                         "one scalar per slot, multi-round fns riding "
+                         "chains of service sessions across pump cycles")
+    ap.add_argument("--bins", type=int, default=16,
+                    help="--fn histogram: bucket count over [0, 1)")
+    ap.add_argument("--steps", type=int, default=256,
+                    help="--fn median/min/max/topk: value-domain grid "
+                         "resolution (bisection runs ceil(log2(steps)) "
+                         "rounds)")
+    ap.add_argument("--topk", type=int, default=4, metavar="K",
+                    help="--fn topk: how many largest values to reveal")
     ap.add_argument("--impl", default=None,
                     help="kernel engine override (pallas/pallas_interpret/jnp)")
     ap.add_argument("--transport", choices=("sim", "mesh"), default="sim",
@@ -185,9 +273,21 @@ def main() -> None:
           f"-> {snap.n_nodes} slots, T={args.elems}, r={args.redundancy}, "
           f"transport={args.transport}")
 
-    out = run_load(agg, em, sessions=args.sessions, elems=args.elems,
-                   churn_every=args.churn_every,
-                   stats_interval=args.stats_interval)
+    if args.fn is not None:
+        cost_kw = (dict(bins=args.bins) if args.fn == "histogram" else
+                   dict(domain=(0.0, 1.0, args.steps),
+                        **({"k": args.topk} if args.fn == "topk" else {})))
+        c = agg.cost(fn=args.fn, **cost_kw)
+        print(f"func: {args.fn} -> {c['allreduces']} allreduce(s)/session "
+              f"(round elems {c['round_elems']}), "
+              f"{c['bytes_total']} wire bytes/session")
+        out = run_func_load(agg, em, sessions=args.sessions, fn=args.fn,
+                            bins=args.bins, steps=args.steps, k=args.topk,
+                            churn_every=args.churn_every)
+    else:
+        out = run_load(agg, em, sessions=args.sessions, elems=args.elems,
+                       churn_every=args.churn_every,
+                       stats_interval=args.stats_interval)
     hist = collections.Counter(out["stats"]["batches"]["sizes"])
     print(f"{out['sessions']} sessions in {out['wall_s']:.2f}s "
           f"({out['sessions_per_s']:.1f} sessions/s), "

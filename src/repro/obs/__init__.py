@@ -19,11 +19,13 @@ injected clock, so traced runs replay byte-identically.
 from repro.obs.metrics import (DEFAULT_REGISTRY, MetricsRegistry,
                                SVC_STATS_DEPRECATED, SVC_STATS_KEYS,
                                SVC_STATS_VERSION)
-from repro.obs.trace import TickClock, TraceRecorder, record_batch_trace
+from repro.obs.trace import (TickClock, TraceRecorder, record_batch_trace,
+                             record_func_round)
 from repro.obs.export import prometheus_text, stats_table
 
 __all__ = [
     "DEFAULT_REGISTRY", "MetricsRegistry", "SVC_STATS_DEPRECATED",
     "SVC_STATS_KEYS", "SVC_STATS_VERSION", "TickClock", "TraceRecorder",
-    "prometheus_text", "record_batch_trace", "stats_table",
+    "prometheus_text", "record_batch_trace", "record_func_round",
+    "stats_table",
 ]

@@ -24,6 +24,7 @@ on the old ones.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import random
 from typing import Optional
@@ -63,6 +64,10 @@ class EpochManager:
         self.n_clusters = n_clusters or overlay.g
         self._epoch = 0
         self._snap: Optional[EpochSnapshot] = None
+        # measured churn: departed-slot fraction of each retiring
+        # snapshot, sampled at advance() — what the tuner's workload
+        # signature reads instead of a static churn_rate hint
+        self._observed: collections.deque = collections.deque(maxlen=8)
 
     # -- snapshots ----------------------------------------------------------
     def _committee(self) -> tuple[list[int], list[bool]]:
@@ -93,7 +98,13 @@ class EpochManager:
         return self._snap
 
     def advance(self) -> EpochSnapshot:
-        """Start a new epoch with a fresh committee snapshot."""
+        """Start a new epoch with a fresh committee snapshot.  The
+        retiring snapshot's departed-slot fraction is sampled into the
+        observed-churn window first (see :meth:`observed_churn_rate`)."""
+        prev = self._snap
+        if prev is not None:
+            self._observed.append(
+                len(self.departed_slots(prev)) / prev.n_nodes)
         self._epoch += 1
         self._snap = None
         return self.current()
@@ -106,12 +117,27 @@ class EpochManager:
         epoch.  Sessions opened before this call stay pinned to the old
         snapshot; their departed members surface via ``departed_plan``."""
         rng = rng or random.Random(self._epoch * 7919 + 13)
-        uids = list(self.overlay.nodes)
+        self.current()     # snapshot BEFORE the burst so advance()
+        uids = list(self.overlay.nodes)   # measures these leaves
         for uid in rng.sample(uids, min(leaves, len(uids))):
             self.overlay.leave(uid)
         for _ in range(joins):
             self.overlay.join(honest=rng.random() < honest_join_frac)
         return self.advance()
+
+    # -- observed churn ------------------------------------------------------
+    def observed_churn_rate(self) -> float:
+        """The MEASURED departure pressure: mean departed-slot fraction
+        over the last few epoch advances (window of 8), quantized to
+        1/1024 so the value is a stable workload-signature component
+        (``WorkloadSignature.of(..., epochs=...)``) — the tuner
+        re-resolves its memoized decision exactly when the observed
+        rate moves a whole quantum, not on every float wiggle.  0.0
+        until the first advance."""
+        if not self._observed:
+            return 0.0
+        mean = sum(self._observed) / len(self._observed)
+        return min(1.0, round(mean * 1024) / 1024)
 
     # -- fault integration --------------------------------------------------
     def departed_slots(self, snap: EpochSnapshot) -> tuple[int, ...]:

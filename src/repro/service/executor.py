@@ -108,6 +108,10 @@ BatchKey = tuple
 
 _MASK32 = 0xFFFFFFFF
 
+# one-hot / count payloads pad to the kernel's 128-lane quantum rather
+# than the coarse buckets (a 1025-bin histogram pads to 1152, not 4096)
+FUNC_PAD_QUANTUM = 128
+
 
 @dataclasses.dataclass(frozen=True)
 class BatchingConfig:
@@ -146,12 +150,45 @@ class BatchingConfig:
         top = self.pad_buckets[-1]
         return ((elems + top - 1) // top) * top
 
+    def register_func_elems(self, round_elems) -> None:
+        """Install the secure-function pad rule (:func:`func_padded`)
+        for every payload length a ``FuncPlan`` will ship, so function
+        rounds batch cleanly: 1-element bisection counts stay 1 element
+        (instead of ballooning to the first bucket — they all share one
+        batch key anyway), and one-hot histogram rows pad to the
+        128-lane quantum instead of the next coarse bucket.  Requires a
+        mutable ``tuned`` map; never overwrites a tuner's decision."""
+        _require(self.tuned is not None,
+                 "register_func_elems needs BatchingConfig(tuned={...}) "
+                 "— a mutable per-elems pad map")
+        for T in round_elems:
+            self.tuned.setdefault(T, func_padded(T, self.pad_buckets))
+
     def row_layout(self, elems: int) -> tuple[int, int]:
         """(row_elems, n_rows) a payload of ``elems`` occupies."""
         if self.max_row_elems is not None and elems > self.max_row_elems:
             row = self.padded_elems(self.max_row_elems)
             return row, -(-elems // row)
         return self.padded_elems(elems), 1
+
+
+def func_padded(elems: int, pad_buckets: tuple =
+                BatchingConfig.pad_buckets) -> int:
+    """The secure-function (``repro.funcs``) pad rule for one payload
+    length: tiny count payloads (bisection rounds, <= 8 elems) stay
+    unpadded — every concurrent bisection round shares the same T so
+    there is nothing to coalesce by padding — and wider one-hot rows
+    round up to the 128-lane quantum, capped at whatever the default
+    buckets would have picked (so the rule can only ever shrink a
+    batch row, never inflate one)."""
+    if elems <= 8:
+        return elems
+    lane = -(-elems // FUNC_PAD_QUANTUM) * FUNC_PAD_QUANTUM
+    for b in pad_buckets:
+        if elems <= b:
+            return min(lane, b)
+    top = pad_buckets[-1]
+    return min(lane, -(-elems // top) * top)
 
 
 @dataclasses.dataclass(frozen=True)

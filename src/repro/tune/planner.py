@@ -184,18 +184,23 @@ class Tuner:
     ``reports/perf/`` directory (reusing ``launch.hillclimb.PERF_DIR``
     — safe to import since PR 9 moved its XLA_FLAGS mutation under
     ``main()``).  ``churn_rate`` seeds the signatures the facade builds
-    (the facade cannot observe churn ahead of time).  ``metrics``
-    shares a :class:`~repro.obs.MetricsRegistry` for the decision /
-    cache-hit / probe counters."""
+    as a static hint; ``epochs`` (an
+    :class:`~repro.service.EpochManager`) upgrades it to the MEASURED
+    departure rate — signatures read ``epochs.observed_churn_rate()``
+    at build time, so a drift in real churn produces a new signature
+    and a fresh decision while the stale one stays memoized.
+    ``metrics`` shares a :class:`~repro.obs.MetricsRegistry` for the
+    decision / cache-hit / probe counters."""
 
     def __init__(self, *, probe: bool = False, probe_finalists: int = 3,
                  probe_rows: int = 4, probe_report: bool = False,
-                 churn_rate: float = 0.0, metrics=None):
+                 churn_rate: float = 0.0, epochs=None, metrics=None):
         self.probe = probe
         self.probe_finalists = max(1, probe_finalists)
         self.probe_rows = max(1, probe_rows)
         self.probe_report = probe_report
         self.churn_rate = churn_rate
+        self.epochs = epochs
         self.metrics = _obs.registry_or_default(metrics)
         self._c_decisions = self.metrics.counter(_obs.M_TUNER_DECISIONS)
         self._c_hits = self.metrics.counter(_obs.M_TUNER_CACHE_HITS)
@@ -204,7 +209,8 @@ class Tuner:
     # -- public API ---------------------------------------------------------
     def signature(self, cfg: AggConfig, T: int,
                   S: int = 1) -> WorkloadSignature:
-        return WorkloadSignature.of(cfg, T, S, churn_rate=self.churn_rate)
+        return WorkloadSignature.of(cfg, T, S, churn_rate=self.churn_rate,
+                                    epochs=self.epochs)
 
     def decide(self, cfg: AggConfig,
                sig: WorkloadSignature) -> TuneDecision:

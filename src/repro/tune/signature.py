@@ -53,11 +53,21 @@ class WorkloadSignature:
                  f"{self.n_nodes}], got {self.byzantine_budget}")
 
     @classmethod
-    def of(cls, cfg, T: int, S: int = 1,
-           churn_rate: float = 0.0) -> "WorkloadSignature":
+    def of(cls, cfg, T: int, S: int = 1, churn_rate: float = 0.0,
+           epochs=None) -> "WorkloadSignature":
         """Signature of running ``cfg``'s committee at payload length
         ``T`` and batch width ``S`` — the byzantine budget is read off
-        the config's static fault model."""
+        the config's static fault model.
+
+        ``epochs`` (an :class:`~repro.service.EpochManager`) switches
+        the churn component from the static ``churn_rate`` hint to the
+        manager's MEASURED departure rate
+        (``EpochManager.observed_churn_rate``, already quantized for
+        signature stability): as the observed rate moves, the signature
+        changes and the memoized tuner decision re-resolves for the
+        pressure the network is actually under."""
+        if epochs is not None:
+            churn_rate = epochs.observed_churn_rate()
         return cls(n_nodes=cfg.n_nodes, T=int(T), S=int(S),
                    churn_rate=churn_rate,
                    byzantine_budget=len(cfg.byzantine.corrupt_ranks))

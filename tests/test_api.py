@@ -67,16 +67,27 @@ def test_facade_signatures_are_pinned():
                     "tune=None)",
         "allreduce": "(self, tree)",
         "allreduce_batched": "(self, xs)",
-        "open_session": "(self, elems: 'int', *, params=None, now=None, "
-                        "ttl=None)",
+        "open_session": "(self, elems: 'Optional[int]' = None, *, "
+                        "fn=None, params=None, now=None, ttl=None, "
+                        "bins=None, range=(0.0, 1.0), domain=None, "
+                        "q=0.5, k=None)",
         "seal": "(self, sid: 'int', now=None) -> 'None'",
         "pump": "(self, now=None, force: 'bool' = False) -> 'int'",
         "drain": "(self) -> 'int'",
         "result": "(self, sid: 'int', evict: 'bool' = False)",
-        "cost": "(self, elems: 'int') -> 'dict'",
+        "cost": "(self, elems: 'Optional[int]' = None, *, fn=None, "
+                "bins=None, range=(0.0, 1.0), domain=None, q=0.5, "
+                "k=None) -> 'dict'",
         "stats": "(self) -> 'dict'",
         "plan": "(self) -> 'AggPlan'",
         "derive": '(self, **kw) -> "\'SecureAggregator\'"',
+        # the secure-function verbs (repro.funcs)
+        "histogram": "(self, values, bins: 'int', *, range=(0.0, 1.0))",
+        "quantile": "(self, values, q: 'float', *, domain)",
+        "median": "(self, values, *, domain)",
+        "minimum": "(self, values, *, domain)",
+        "maximum": "(self, values, *, domain)",
+        "topk": "(self, values, k: 'int', *, domain)",
     }
     got = {name: str(inspect.signature(getattr(SecureAggregator, name)))
            for name in want}

@@ -1,0 +1,583 @@
+"""Conformance pins for the secure-function layer (``repro.funcs``).
+
+Four layers, mirroring the layer split of the subsystem itself:
+
+  * PLAN: ``compile_func_plan`` round/shape/byte arithmetic and its
+    validation errors; the function pad rule (``func_padded`` /
+    ``BatchingConfig.register_func_elems``) that keeps 1-element
+    bisection rounds batch-tight.
+  * PROTOCOL: every function pinned against the plain-numpy oracle on
+    the quantized domain — via raw ``FuncRun`` + the engine sim oracle,
+    the one-shot facade verbs, and service-hosted multi-round sessions;
+    faulty == honest BIT-IDENTICAL over the adversary-strategy grid
+    x wire transport, because every payload is a {0,1} count row and
+    counts inherit the engine's exactness.
+  * KERNELS: non-tile-aligned one-hot payloads (bins 1 / 127 / 1025)
+    bit-identical between the jnp and pallas_interpret engines and
+    between chunked and monolithic execution.
+  * COST/OBS: ``cost(fn=...)`` equals the engine's executed
+    ``Transport.bytes_sent`` summed over every protocol round AND the
+    facade's byte counter delta; each round emits one ``func_round``
+    trace span whose bytes sum to the same number.
+
+Plus the observed-churn tuner pins (the satellite riding this PR):
+``EpochManager.observed_churn_rate`` feeds
+``WorkloadSignature.of(..., epochs=...)`` and the facade re-resolves
+its memoized tuning decision when the measured rate moves.
+"""
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import AggConfig, ConfigError, SecureAggregator, Security, \
+    Topology
+from repro.core.plan import (FuncPlan, SessionMeta, compile_func_plan,
+                             compile_plan)
+from repro.funcs import (FuncRun, FuncSession, ValueDomain,
+                         one_hot_payload, threshold_payload,
+                         thresholded_one_hot)
+from repro.funcs.run import quantile_rank
+from repro.obs import TraceRecorder
+from repro.service import BatchingConfig, EpochManager
+from repro.service.executor import FUNC_PAD_QUANTUM, func_padded
+from repro.tune.signature import WorkloadSignature
+from adversary import ADVERSARIES, run_sim_batch, session_faults
+
+pytestmark = pytest.mark.funcs
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+# the conformance grid's committee: 4 clusters x 4 members, r=3 votes;
+# clip=2.0 leaves fixed-point headroom for counts up to n=16
+N, C, R = 16, 4, 3
+CFG = AggConfig(n_nodes=N, cluster_size=C, redundancy=R, clip=2.0)
+RNG = np.random.default_rng(0xF17)
+
+
+def quantized(dom: ValueDomain, vals) -> np.ndarray:
+    return np.array([dom.value(int(i)) for i in dom.indices(vals)])
+
+
+def oracle_quantile(dom: ValueDomain, vals, q: float) -> float:
+    qs = np.sort(quantized(dom, vals))
+    return float(qs[quantile_rank(q, len(vals)) - 1])
+
+
+# ---------------------------------------------------------------------------
+# PLAN: compile_func_plan arithmetic + validation
+# ---------------------------------------------------------------------------
+
+
+def test_func_plan_rounds_and_bytes_are_pinned():
+    hp = compile_func_plan(CFG, "histogram", bins=13)
+    assert hp.round_elems == (13,) and hp.n_allreduces == 1
+    assert hp.wire_bytes() == compile_plan(CFG).wire_bytes(13)
+
+    qp = compile_func_plan(CFG, "quantile", steps=1024, q=0.5)
+    assert qp.bisect_rounds == 10           # ceil(log2(1024))
+    assert qp.round_elems == (1,) * 10
+    assert qp.wire_bytes() == 10 * compile_plan(CFG).wire_bytes(1)
+
+    tp = compile_func_plan(CFG, "topk", steps=100, k=3)
+    assert tp.bisect_rounds == 7            # ceil(log2(100))
+    assert tp.round_elems == (1,) * 7 + (100,)
+    assert tp.wire_bytes() == (7 * compile_plan(CFG).wire_bytes(1)
+                               + compile_plan(CFG).wire_bytes(100))
+
+    # memoized: the exact same object comes back
+    assert compile_func_plan(CFG, "histogram", bins=13) is hp
+    assert isinstance(hp, FuncPlan)
+
+
+@pytest.mark.parametrize("kw,frag", [
+    (dict(fn="sum"), "unknown"),
+    (dict(fn="histogram", bins=0), "bins"),
+    (dict(fn="histogram", bins=4, lo=1.0, hi=1.0), "hi"),
+    (dict(fn="quantile", steps=0), "steps"),
+    (dict(fn="quantile", steps=8, q=1.5), "q"),
+    (dict(fn="topk", steps=8, k=0), "k"),
+    (dict(fn="topk", steps=8, k=N + 1), "k"),
+])
+def test_func_plan_validation_errors(kw, frag):
+    with pytest.raises(ConfigError, match=frag):
+        compile_func_plan(CFG, **kw)
+
+
+def test_func_plan_requires_count_headroom():
+    # clip < 1.0 cannot represent a count of n exactly — refused up front
+    with pytest.raises(ConfigError, match="clip"):
+        compile_func_plan(CFG.replace(clip=0.5), "histogram", bins=4)
+
+
+def test_func_pad_rule_is_pinned():
+    # <= 8 elements stay unpadded (bisection counts stay 1 elem); wider
+    # payloads round up to the 128 lane quantum unless a default bucket
+    # is tighter
+    for elems, want in [(1, 1), (7, 7), (8, 8), (9, 64), (64, 64),
+                        (127, 128), (1025, 1152), (20000, 20096)]:
+        assert func_padded(elems) == want, elems
+    assert FUNC_PAD_QUANTUM == 128
+
+
+def test_register_func_elems_never_overwrites_tuned_rows():
+    bc = BatchingConfig(max_batch=4, max_age=1e9, tuned={5: 999})
+    bc.register_func_elems((5, 1, 127))
+    assert bc.tuned == {5: 999, 1: 1, 127: 128}
+    with pytest.raises(ConfigError, match="tuned"):
+        BatchingConfig(max_batch=4, max_age=1e9).register_func_elems((1,))
+
+
+# ---------------------------------------------------------------------------
+# PROTOCOL: payload builders + FuncRun against the numpy oracle
+# ---------------------------------------------------------------------------
+
+
+def test_payload_builders_are_pinned():
+    vals = np.array([0.0, 0.1, 0.5, 0.99, 1.0, -3.0, 7.0, 0.25])
+    oh = one_hot_payload(vals, 4, 0.0, 1.0)
+    assert oh.shape == (8, 4) and oh.dtype == np.float32
+    assert oh.sum() == 8 and set(np.unique(oh)) <= {0.0, 1.0}
+    # np.histogram semantics: hi lands in the LAST bin; out-of-range
+    # values clip into the edge bins
+    assert np.array_equal(oh.sum(0), [3, 1, 1, 3])
+    assert np.array_equal(
+        oh.sum(0), np.histogram(np.clip(vals, 0.0, 1.0), bins=4,
+                                range=(0.0, 1.0))[0])
+    present = np.array([True] * 4 + [False] * 4)
+    assert one_hot_payload(vals, 4, 0.0, 1.0, present=present).sum() == 4
+
+    idx = np.array([0, 3, 5, 7])
+    assert np.array_equal(threshold_payload(idx, 3).ravel(), [1, 1, 0, 0])
+    th = thresholded_one_hot(idx, 5, 8)
+    assert th.shape == (4, 8) and np.array_equal(th.sum(1), [0, 0, 1, 1])
+
+    assert [quantile_rank(q, 10) for q in (0.0, 0.25, 0.5, 1.0)] \
+        == [1, 3, 5, 10]
+    assert quantile_rank(0.5, 0) == 1      # degenerate floor
+
+
+def test_func_run_matches_numpy_oracle_via_engine():
+    """Raw FuncRun + the engine sim oracle: histogram, every quantile
+    flavor, and top-k (heavy ties included) against plain numpy."""
+    vals = RNG.random(N)
+    vals[3] = vals[7] = vals[11]            # ties across clusters
+    dom = ValueDomain(0.0, 1.0, 256)
+
+    def run(fplan, values, present=None):
+        r = FuncRun(fplan, values, present=present)
+        while not r.done:
+            xs = r.next_payload()[None]
+            out, _ = run_sim_batch(CFG, xs)
+            r.feed(out[0, 0])
+        return r.result
+
+    hist = run(compile_func_plan(CFG, "histogram", bins=13), vals)
+    assert np.array_equal(hist, np.histogram(vals, bins=13,
+                                             range=(0.0, 1.0))[0])
+
+    qp = dict(lo=dom.lo, hi=dom.hi, steps=dom.steps)
+    for q in (0.0, 0.25, 0.5, 0.75, 1.0):
+        got = run(compile_func_plan(CFG, "quantile", q=q, **qp), vals)
+        assert got == oracle_quantile(dom, vals, q), q
+    # q=0 / q=1 are the min / max on the quantized grid
+    assert run(compile_func_plan(CFG, "quantile", q=0.0, **qp), vals) \
+        == quantized(dom, vals).min()
+
+    for k in (1, 3, 5):
+        got = run(compile_func_plan(CFG, "topk", k=k, **qp), vals)
+        want = np.sort(quantized(dom, vals))[::-1][:k]
+        assert np.array_equal(got, want), k
+
+    # absent nodes are rank-invisible: the oracle runs on present only
+    present = np.ones(N, bool)
+    present[[2, 9, 13]] = False
+    got = run(compile_func_plan(CFG, "quantile", q=0.5, **qp), vals,
+              present=present)
+    qs = np.sort(quantized(dom, vals[present]))
+    assert got == qs[quantile_rank(0.5, int(present.sum())) - 1]
+
+
+def test_func_run_degenerate_corners():
+    # one-value domain: zero bisection rounds, quantile answers at once
+    p1 = compile_func_plan(CFG, "quantile", lo=0.3, hi=0.3, steps=1)
+    r = FuncRun(p1, np.full(N, 0.3))
+    assert r.done and r.result == 0.3 and p1.bisect_rounds == 0
+
+    # zero present nodes: counts are all zero, the bisection walks to
+    # the top of the domain — quantile reveals hi, top-k an empty list
+    qp = compile_func_plan(CFG, "quantile", q=0.5, steps=16)
+    r = FuncRun(qp, np.zeros(N), present=np.zeros(N, bool))
+    while not r.done:
+        r.feed(np.zeros(r.next_payload().shape[1]))
+    assert r.result == 1.0
+    tp = compile_func_plan(CFG, "topk", k=2, steps=16)
+    r = FuncRun(tp, np.zeros(N), present=np.zeros(N, bool))
+    while not r.done:
+        r.feed(np.zeros(r.next_payload().shape[1]))
+    assert r.result.size == 0
+
+    # protocol misuse is loud
+    r = FuncRun(compile_func_plan(CFG, "histogram", bins=4), np.zeros(N))
+    with pytest.raises(ConfigError, match="feed"):
+        r.feed(np.zeros(4))
+    r.next_payload()
+    with pytest.raises(ConfigError, match="previous round"):
+        r.next_payload()
+
+
+# ---------------------------------------------------------------------------
+# PROTOCOL: faulty == honest, bit-identical, adversary grid x transport
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("transport", ["full", "digest"])
+def test_functions_survive_adversary_grid_bit_identical(transport):
+    """Every protocol round of every function runs once per adversary
+    strategy (one batched engine dispatch, per-session faults); each
+    faulty session's revealed counts must be BIT-IDENTICAL to the
+    honest session's, so the function result is fault-invariant."""
+    cfg = CFG.replace(transport=transport)
+    S = len(ADVERSARIES)
+    faults = session_faults(N, C, R)
+    assert all(a.survives_full and a.survives_digest for a in ADVERSARIES)
+    vals = RNG.random(N)
+    dom = ValueDomain(0.0, 1.0, 32)
+    plans = [compile_func_plan(cfg, "histogram", bins=13),
+             compile_func_plan(cfg, "quantile", q=0.5, steps=dom.steps),
+             compile_func_plan(cfg, "topk", k=3, steps=dom.steps)]
+    for fplan in plans:
+        r = FuncRun(fplan, vals)
+        while not r.done:
+            payload = r.next_payload()
+            xs = np.broadcast_to(payload, (S,) + payload.shape).copy()
+            out, _ = run_sim_batch(cfg, xs, faults=faults)
+            honest = out[0, 0]
+            for s, adv in enumerate(ADVERSARIES[1:], start=1):
+                assert np.array_equal(out[s, 0], honest), \
+                    (fplan.fn, r.round, adv.name)
+            r.feed(honest)
+        if fplan.fn == "histogram":
+            assert np.array_equal(
+                r.result, np.histogram(vals, bins=13, range=(0.0, 1.0))[0])
+        elif fplan.fn == "quantile":
+            assert r.result == oracle_quantile(dom, vals, 0.5)
+        else:
+            assert np.array_equal(
+                r.result, np.sort(quantized(dom, vals))[::-1][:3])
+
+
+# ---------------------------------------------------------------------------
+# KERNELS: non-tile-aligned one-hot payloads, engines + chunking
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bins", [1, 127, 1025])
+def test_one_hot_payloads_jnp_vs_pallas_interpret_bit_identical(bins):
+    from repro.core.engine import sim_batch
+    vals = RNG.random(N)
+    xs = one_hot_payload(vals, bins, 0.0, 1.0)[None]
+    plan = compile_plan(CFG)
+    meta = SessionMeta.build(1, N, seed=CFG.seed)
+    ref, _ = sim_batch(plan, jnp.asarray(xs), meta, impl="jnp")
+    alt, _ = sim_batch(plan, jnp.asarray(xs), meta, impl="pallas_interpret")
+    assert np.array_equal(np.asarray(ref), np.asarray(alt))
+    assert np.array_equal(np.rint(np.asarray(ref))[0, 0],
+                          np.histogram(vals, bins=bins,
+                                       range=(0.0, 1.0))[0])
+
+
+@pytest.mark.parametrize("bins,tc", [(1, 1), (127, 32), (1025, 256)])
+def test_one_hot_chunked_equals_monolithic(bins, tc):
+    """Column-chunked execution (the gradient path's pipeline) of a
+    one-hot payload is bit-identical to the monolithic dispatch — the
+    per-chunk pad-stream offset rule covers the ragged tail chunk."""
+    from repro.core.engine import SimTransport, execute_chunks, sim_batch
+    vals = RNG.random(N)
+    flat = jnp.asarray(one_hot_payload(vals, bins, 0.0, 1.0))
+    plan = compile_plan(CFG)
+    meta = SessionMeta.build(1, N, seed=CFG.seed)
+    mono, _ = sim_batch(plan, flat[None], meta)
+
+    pad = (-bins) % tc
+    padded = jnp.pad(flat, ((0, 0), (0, pad)))
+    chunks = [padded[:, k * tc:(k + 1) * tc]
+              for k in range(padded.shape[1] // tc)]
+    tp = SimTransport(plan, S=1)
+    outs = execute_chunks(plan, tp, chunks, meta)
+    got = jnp.concatenate(outs, axis=1)[:, :bins]
+    assert np.array_equal(np.asarray(got), np.asarray(mono)[0])
+
+
+# ---------------------------------------------------------------------------
+# FACADE: one-shot verbs, cost == executed bytes, func_round spans
+# ---------------------------------------------------------------------------
+
+
+def test_facade_verbs_match_numpy_oracle():
+    agg = SecureAggregator(CFG)
+    vals = RNG.random(N)
+    dom = ValueDomain(0.0, 1.0, 128)
+    assert np.array_equal(agg.histogram(vals, bins=11),
+                          np.histogram(vals, bins=11, range=(0.0, 1.0))[0])
+    assert agg.quantile(vals, 0.25, domain=dom) \
+        == oracle_quantile(dom, vals, 0.25)
+    assert agg.median(vals, domain=(0.0, 1.0, 128)) \
+        == oracle_quantile(dom, vals, 0.5)
+    assert agg.minimum(vals, domain=dom) == quantized(dom, vals).min()
+    assert agg.maximum(vals, domain=dom) == quantized(dom, vals).max()
+    assert np.array_equal(agg.topk(vals, 4, domain=dom),
+                          np.sort(quantized(dom, vals))[::-1][:4])
+
+
+def test_facade_verb_errors_are_actionable():
+    agg = SecureAggregator(CFG)
+    with pytest.raises(ConfigError, match="bins"):
+        agg.cost(fn="histogram")
+    with pytest.raises(ConfigError, match="domain"):
+        agg.cost(fn="median")
+    with pytest.raises(ConfigError, match="k="):
+        agg.cost(fn="topk", domain=(0.0, 1.0, 8))
+    with pytest.raises(ConfigError, match="histogram, quantile"):
+        agg.cost(fn="mode", domain=(0.0, 1.0, 8))
+    with pytest.raises(ConfigError, match="elems"):
+        agg.open_session()
+    from repro.api import Runtime
+    manual = SecureAggregator(CFG, runtime=Runtime(backend="manual"))
+    with pytest.raises(ConfigError, match="manual"):
+        manual.median(np.zeros(N), domain=(0.0, 1.0, 8))
+
+
+def test_cost_fn_equals_executed_wire_bytes():
+    """The acceptance pin: ``cost(fn=...)`` == the engine's executed
+    ``Transport.bytes_sent`` summed across ALL bisection rounds == the
+    facade's byte-counter delta for the same verb."""
+    dom = ValueDomain(0.0, 1.0, 256)
+    agg = SecureAggregator(CFG)
+    c = agg.cost(fn="median", domain=dom)
+    assert c["fn"] == "quantile" and c["allreduces"] == 8
+    assert c["round_elems"] == (1,) * 8
+    assert c["bytes_total"] == sum(c["bytes_per_allreduce"])
+    assert c["bytes_per_node"] == c["bytes_total"] // N
+
+    # engine truth: run the same plan round by round, sum real bytes
+    vals = RNG.random(N)
+    fplan = compile_func_plan(CFG, "quantile", q=0.5, steps=dom.steps)
+    r, executed = FuncRun(fplan, vals), 0
+    while not r.done:
+        out, sent = run_sim_batch(CFG, r.next_payload()[None])
+        executed += sent
+        r.feed(out[0, 0])
+    assert executed == c["bytes_total"] == fplan.wire_bytes()
+
+    # facade booking: the verb moves exactly the analytic bytes
+    b0 = agg.stats()["bytes_sent"]
+    assert agg.median(vals, domain=dom) == r.result
+    assert agg.stats()["bytes_sent"] - b0 == c["bytes_total"]
+
+    # topk's cost counts the wide readout round too
+    ct = agg.cost(fn="topk", k=2, domain=(0.0, 1.0, 64))
+    assert ct["allreduces"] == 7 and ct["round_elems"][-1] == 64
+    b0 = agg.stats()["bytes_sent"]
+    agg.topk(vals, 2, domain=(0.0, 1.0, 64))
+    assert agg.stats()["bytes_sent"] - b0 == ct["bytes_total"]
+
+
+def test_func_round_trace_spans_sum_to_cost():
+    rec = TraceRecorder(clock=lambda: 0.0)
+    agg = SecureAggregator(CFG, recorder=rec)
+    dom = (0.0, 1.0, 16)
+    agg.median(RNG.random(N), domain=dom)
+    spans = rec.events("func_round")
+    assert len(spans) == 4                 # ceil(log2(16))
+    assert [e["round"] for e in spans] == [0, 1, 2, 3]
+    assert all(e["fn"] == "quantile" and e["rounds"] == 4
+               and e["elems"] == 1 and e["backend"] == "sim"
+               for e in spans)
+    assert sum(e["bytes"] for e in spans) \
+        == agg.cost(fn="median", domain=dom)["bytes_total"]
+
+
+# ---------------------------------------------------------------------------
+# SERVICE: multi-round function sessions across pump cycles
+# ---------------------------------------------------------------------------
+
+
+def test_service_concurrent_medians_batch_each_round_together():
+    """S concurrent medians cost ONE batched dispatch per bisection
+    round (not S) — their 1-element rounds share the admission batch —
+    and the function pad rule keeps those rounds unpadded."""
+    agg = SecureAggregator(
+        CFG, batching=BatchingConfig(max_batch=8, max_age=1e9))
+    dom = ValueDomain(0.0, 1.0, 64)        # 6 bisection rounds
+    polls = []
+    for i in range(5):
+        fs = agg.open_session(fn="median", domain=dom, now=0.0)
+        vals = RNG.random(N)
+        for slot in range(N):
+            fs.contribute(slot, float(vals[slot]))
+        fs.seal(now=0.0)
+        polls.append((fs, vals))
+    assert agg.drain() > 0
+    for fs, vals in polls:
+        assert fs.done and fs.rounds_run == 6
+        assert fs.result == oracle_quantile(dom, vals, 0.5)
+    st = agg.stats()["service"]
+    assert st["batches"]["sizes"] == (5,) * 6
+    assert agg._tuned_rows[1] == 1         # bisection rounds stay tight
+
+
+def test_service_histogram_and_topk_sessions():
+    agg = SecureAggregator(
+        CFG, batching=BatchingConfig(max_batch=8, max_age=1e9))
+    vals = RNG.random(N)
+    h = agg.open_session(fn="histogram", bins=10, now=0.0)
+    t = agg.open_session(fn="topk", k=3, domain=(0.0, 1.0, 32), now=0.0)
+    for slot in range(N):
+        h.contribute(slot, float(vals[slot]))
+        t.contribute(slot, float(vals[slot]))
+    h.seal(now=0.0)
+    t.seal(now=0.0)
+    agg.drain()
+    assert np.array_equal(h.result, np.histogram(vals, bins=10,
+                                                 range=(0.0, 1.0))[0])
+    dom = ValueDomain(0.0, 1.0, 32)
+    assert np.array_equal(t.result, np.sort(quantized(dom, vals))[::-1][:3])
+    # the one-hot rounds padded by the func rule, never overwriting
+    assert agg._tuned_rows[10] == func_padded(10)
+    assert agg._tuned_rows[32] == func_padded(32)
+    # a partial electorate: absent slots are rank-invisible
+    m = agg.open_session(fn="median", domain=dom, now=0.0)
+    for slot in range(0, N, 2):
+        m.contribute(slot, float(vals[slot]))
+    m.seal(now=0.0)
+    agg.drain()
+    half = vals[::2]
+    qs = np.sort(quantized(dom, half))
+    assert m.result == qs[quantile_rank(0.5, len(half)) - 1]
+
+
+def test_service_func_session_lifecycle_errors_and_expiry():
+    agg = SecureAggregator(
+        CFG, batching=BatchingConfig(max_batch=64, max_age=1e9))
+    fs = agg.open_session(fn="median", domain=(0.0, 1.0, 16), now=0.0,
+                          ttl=5.0)
+    assert isinstance(fs, FuncSession)
+    with pytest.raises(ConfigError, match="out of range"):
+        fs.contribute(N, 0.5)
+    fs.contribute(0, 0.5)
+    with pytest.raises(ConfigError, match="done"):
+        _ = fs.result
+    fs.seal(now=0.0)
+    with pytest.raises(ConfigError, match="not open"):
+        fs.contribute(1, 0.5)
+    # the deadline passes while the first inner round is still queued:
+    # the round EXPIREs at pump time and the function session fails loud
+    agg.pump(now=10.0)
+    assert fs.state == "failed" and "expired" in fs.failed_reason
+    with pytest.raises(ConfigError, match="failed"):
+        _ = fs.result
+    # dead sessions are pruned from the facade's registry
+    assert agg._func_sessions == {}
+
+
+# ---------------------------------------------------------------------------
+# TUNER: measured churn feeds the workload signature (satellite)
+# ---------------------------------------------------------------------------
+
+
+def _leave_committee_members(em: EpochManager, k: int) -> float:
+    """Make k distinct committee uids depart, advance the epoch, and
+    return the departed-slot fraction advance() just sampled."""
+    snap = em.current()
+    for uid in list(dict.fromkeys(snap.slot_uids))[:k]:
+        em.overlay.leave(uid)
+    frac = len(em.departed_slots(snap)) / snap.n_nodes
+    em.advance()
+    return frac
+
+
+def test_observed_churn_rate_measures_departures():
+    from repro.core.overlay import build_overlay
+    em = EpochManager(build_overlay(64, 0.2, seed=5), cluster_size=4)
+    assert em.observed_churn_rate() == 0.0
+    em.current()
+    em.advance()                            # quiet epoch: 0.0 sampled
+    assert em.observed_churn_rate() == 0.0
+    frac = _leave_committee_members(em, 2)
+    assert frac > 0.0
+    want = round((0.0 + frac) / 2 * 1024) / 1024   # window mean, 1/1024 q
+    assert em.observed_churn_rate() == want
+
+    cfg = AggConfig(n_nodes=em.current().n_nodes, cluster_size=4,
+                    redundancy=3)
+    sig = WorkloadSignature.of(cfg, 8, epochs=em)
+    assert sig.churn_rate == em.observed_churn_rate()
+    # the static hint is ignored the moment a manager is wired in
+    assert WorkloadSignature.of(cfg, 8, churn_rate=0.9, epochs=em) == sig
+
+
+def test_facade_retunes_when_observed_churn_moves():
+    from repro.core.overlay import build_overlay
+    em = EpochManager(build_overlay(64, 0.2, seed=5), cluster_size=4)
+    snap = em.current()
+    agg = SecureAggregator(
+        topology=Topology(n_nodes=snap.n_nodes, cluster_size=4),
+        security=Security(redundancy=3), epochs=em, tune="auto")
+    d1 = agg._tune_decision(8)
+    assert len(agg._tune_decisions) == 1
+    assert agg._tune_decision(8) is d1      # memoized while rate holds
+    _leave_committee_members(em, 2)
+    assert em.observed_churn_rate() > 0.0
+    agg._tune_decision(8)
+    sigs = list(agg._tune_decisions)
+    assert len(sigs) == 2                   # signature moved -> re-resolve
+    assert {s.churn_rate for s in sigs} \
+        == {0.0, em.observed_churn_rate()}
+
+
+# ---------------------------------------------------------------------------
+# MESH: facade verbs on the mesh executor == sim, bit for bit
+# ---------------------------------------------------------------------------
+
+
+_MESH_FUNCS = """
+import numpy as np
+from repro.api import AggConfig, Runtime, SecureAggregator
+from repro.runtime import compat
+
+n = 8
+rng = np.random.default_rng(11)
+mesh = compat.make_mesh((n,), ("data",))
+vals = rng.random(n)
+dom = (0.0, 1.0, 64)
+for transport in ("full", "digest"):
+    cfg = AggConfig(n_nodes=n, cluster_size=4, redundancy=3,
+                    transport=transport, clip=2.0)
+    sim = SecureAggregator(cfg)
+    dist = SecureAggregator(cfg, runtime=Runtime(backend="mesh", mesh=mesh))
+    h_s, h_d = (a.histogram(vals, bins=13) for a in (sim, dist))
+    assert np.array_equal(h_s, h_d), transport
+    assert np.array_equal(
+        h_s, np.histogram(vals, bins=13, range=(0.0, 1.0))[0])
+    m_s, m_d = (a.median(vals, domain=dom) for a in (sim, dist))
+    assert m_s == m_d, transport
+    t_s, t_d = (a.topk(vals, 3, domain=dom) for a in (sim, dist))
+    assert np.array_equal(t_s, t_d), transport
+print("FUNCS MESH==SIM")
+"""
+
+
+@pytest.mark.mesh
+@pytest.mark.slow
+def test_funcs_mesh_backend_bit_identical_to_sim_8dev():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    r = subprocess.run([sys.executable, "-c", _MESH_FUNCS], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stdout[-4000:] + r.stderr[-4000:]
+    assert "FUNCS MESH==SIM" in r.stdout
